@@ -1,0 +1,73 @@
+"""Paper Table 1 executed: the ADD x quality-characteristic matrix.
+
+For a grid of deployments (SI x TD assignments) produce GreenReports and
+print one CSV row per (deployment, characteristic) — the survey's table with
+actual numbers in the measured cells.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.core.add import (
+    Containerization,
+    Deployment,
+    ModelFormat,
+    Protocol,
+    RequestProcessing,
+    ServingInfrastructure,
+)
+from repro.core.engines import CompiledEngine, EagerEngine
+from repro.energy.report import build_green_report
+from repro.models import init_params
+from repro.serving.request import synth_workload
+from repro.serving.scheduler import make_scheduler
+
+ARCH = "yi-9b-smoke"
+
+GRID = [
+    Deployment(ARCH, ServingInfrastructure.SI1_NO_RUNTIME,
+               Containerization.NONE, ModelFormat.NATIVE,
+               RequestProcessing.REALTIME, Protocol.REST_JSON, max_batch=1),
+    Deployment(ARCH, ServingInfrastructure.SI2_RUNTIME_ENGINE,
+               Containerization.DOCKER, ModelFormat.RSM,
+               RequestProcessing.REALTIME, Protocol.REST_JSON, max_batch=1),
+    Deployment(ARCH, ServingInfrastructure.SI3_DL_SERVER,
+               Containerization.DOCKER, ModelFormat.RSM,
+               RequestProcessing.DYNAMIC_BATCH, Protocol.GRPC_BINARY,
+               max_batch=4),
+    Deployment(ARCH, ServingInfrastructure.SI3_DL_SERVER,
+               Containerization.WASM, ModelFormat.RSM_INT8,
+               RequestProcessing.CONTINUOUS_BATCH, Protocol.GRPC_BINARY,
+               max_batch=4),
+]
+
+
+def run():
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    reports = []
+    for dep in GRID:
+        dep.require_valid()
+        if dep.si == ServingInfrastructure.SI1_NO_RUNTIME:
+            engine = EagerEngine(cfg, params, max_seq=64)
+        else:
+            engine = CompiledEngine(cfg, params, max_seq=64)
+            engine.warmup(dep.max_batch, 16)
+        sched = make_scheduler(dep.request_processing.value, engine,
+                               max_batch=dep.max_batch, timeout_ms=10,
+                               max_seq=64)
+        wl = synth_workload(6, 16, 4, cfg.vocab_size, rate_per_s=200, seed=31)
+        metrics = sched.run(wl)
+        rep = build_green_report(dep, metrics)
+        reports.append((dep, rep))
+        for q, v in rep.entries.items():
+            emit(
+                f"table1_{dep.si.value}_{dep.request_processing.value}"
+                f"_{q.value}",
+                v.value * 1e6 if v.unit == "s" else v.value,
+                f"unit={v.unit};prov={v.provenance.value}",
+            )
+    return reports

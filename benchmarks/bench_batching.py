@@ -1,0 +1,48 @@
+"""Paper TD3 row (replicating the Yarally'23 / Yao'21 finding the survey
+aggregates): batching vs real-time — energy per request and latency."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.core.engines import CompiledEngine
+from repro.models import init_params
+from repro.serving.request import synth_workload
+from repro.serving.scheduler import (
+    ContinuousBatchScheduler,
+    DynamicBatchScheduler,
+    RealTimeScheduler,
+)
+
+ARCH = "minitron-4b-smoke"
+
+
+def run():
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = CompiledEngine(cfg, params, max_seq=64)
+    engine.warmup(1, 16)
+    engine.warmup(4, 16)
+    engine.warmup(8, 16)
+    results = {}
+    wl = lambda: synth_workload(12, 16, 6, cfg.vocab_size,  # noqa: E731
+                                rate_per_s=500, seed=21)
+    scheds = {
+        "realtime": RealTimeScheduler(engine),
+        "dynamic_b4": DynamicBatchScheduler(engine, 4, 10.0),
+        "dynamic_b8": DynamicBatchScheduler(engine, 8, 10.0),
+        "continuous_b8": ContinuousBatchScheduler(engine, 8, 64),
+    }
+    for name, sched in scheds.items():
+        m = sched.run(wl())
+        results[name] = m
+        s = m.summary()
+        emit(
+            f"batching_{name}",
+            s["mean_latency_s"] * 1e6,
+            f"J_req={s['energy_per_request_j']};J_tok={s['energy_per_token_j']};"
+            f"tok_s={s['throughput_tok_s']}",
+        )
+    return results

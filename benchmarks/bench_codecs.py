@@ -1,0 +1,33 @@
+"""Paper TD4 row: REST/JSON vs gRPC/binary — bytes on wire + codec time.
+
+(The paper found NO studies of this decision's quality characteristics;
+these are the missing numbers at serving-realistic message sizes.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.serving.codecs import BinaryCodec, JsonCodec
+
+
+def run():
+    rng = np.random.RandomState(0)
+    out = {}
+    for plen in (16, 256, 4096):
+        tokens = rng.randint(0, 150000, plen).astype(np.int32)
+        for codec in (JsonCodec(), BinaryCodec()):
+            enc_s, data = time_call(
+                codec.encode_request, 1, tokens, 64, warmup=2, iters=20
+            )
+            dec_s, _ = time_call(codec.decode_request, data, warmup=2,
+                                 iters=20)
+            out[(codec.name, plen)] = dict(bytes=len(data), enc_s=enc_s,
+                                           dec_s=dec_s)
+            emit(
+                f"codec_{codec.name}_p{plen}",
+                (enc_s + dec_s) * 1e6,
+                f"wire_bytes={len(data)}",
+            )
+    return out

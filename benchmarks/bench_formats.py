@@ -1,0 +1,49 @@
+"""Paper TD2 row: model formats — bytes on disk, load time, fidelity."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.models import forward, init_params
+from repro.serving import formats
+
+ARCH = "qwen3-8b-smoke"
+
+
+def run():
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                                          cfg.vocab_size)}
+    base_logits = np.asarray(forward(params, cfg, batch)["logits"])
+    out = {}
+    with tempfile.TemporaryDirectory() as td:
+        for fmt in ("native", "rsm", "rsm_int8"):
+            t0 = time.perf_counter()
+            size = formats.format_size_bytes(params, fmt, td)
+            save_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            if fmt == "native":
+                p = formats.load_native(params, os.path.join(td, "m.npz"))
+            else:
+                p = formats.load_rsm(
+                    params,
+                    os.path.join(td, "rsm8" if fmt == "rsm_int8" else "rsm"),
+                )
+            load_s = time.perf_counter() - t0
+            logits = np.asarray(forward(p, cfg, batch)["logits"])
+            corr = float(np.corrcoef(base_logits.ravel(), logits.ravel())[0, 1])
+            out[fmt] = dict(size=size, save_s=save_s, load_s=load_s, corr=corr)
+            emit(
+                f"format_{fmt}",
+                load_s * 1e6,
+                f"bytes={size};save_s={save_s:.4f};logit_corr={corr:.5f}",
+            )
+    return out

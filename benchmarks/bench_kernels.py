@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
+
+On this CPU container the numbers characterize the *oracle* (XLA) path and
+verify the kernels run; on TPU the same harness times the Mosaic kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops, ref
+from repro.kernels.int8_matmul import quantize_int8
+
+KEY = jax.random.PRNGKey
+
+
+def run():
+    B, H, K, S, dh = 1, 4, 2, 256, 64
+
+    q = jax.random.normal(KEY(0), (B, H, S, dh), jnp.float32)
+    k = jax.random.normal(KEY(1), (B, K, S, dh), jnp.float32)
+    v = jax.random.normal(KEY(2), (B, K, S, dh), jnp.float32)
+
+    flops = 4 * B * H * S * S * dh
+    t_ref, _ = time_call(
+        lambda: jax.block_until_ready(
+            ref.flash_attention_ref(q, k, v, causal=True)), iters=5)
+    emit("kernel_flash_ref", t_ref * 1e6, f"gflops_s={flops/t_ref/1e9:.2f}")
+    t_pl, _ = time_call(
+        lambda: jax.block_until_ready(
+            ops.flash_attention(q, k, v, causal=True, block_q=128,
+                                block_kv=128)), iters=2)
+    emit("kernel_flash_pallas_interp", t_pl * 1e6,
+         f"gflops_s={flops/t_pl/1e9:.2f}")
+
+    qd = jax.random.normal(KEY(3), (4, K, 4, dh), jnp.float32)
+    kc = jax.random.normal(KEY(4), (4, K, 2048, dh), jnp.float32)
+    vc = jax.random.normal(KEY(5), (4, K, 2048, dh), jnp.float32)
+    lengths = jnp.full((4,), 2048, jnp.int32)
+    t_ref, _ = time_call(
+        lambda: jax.block_until_ready(
+            ref.decode_attention_ref(qd, kc, vc, lengths)), iters=5)
+    emit("kernel_decode_ref", t_ref * 1e6, "")
+    t_pl, _ = time_call(
+        lambda: jax.block_until_ready(
+            ops.decode_attention(qd, kc, vc, lengths, block_s=512)), iters=2)
+    emit("kernel_decode_pallas_interp", t_pl * 1e6, "")
+
+    E, C, D, F = 8, 128, 256, 512
+    xe = jax.random.normal(KEY(6), (E, C, D), jnp.float32)
+    we = jax.random.normal(KEY(7), (E, D, F), jnp.float32)
+    t_ref, _ = time_call(
+        lambda: jax.block_until_ready(ref.moe_gmm_ref(xe, we)), iters=5)
+    emit("kernel_gmm_ref", t_ref * 1e6,
+         f"gflops_s={2*E*C*D*F/t_ref/1e9:.2f}")
+    t_pl, _ = time_call(
+        lambda: jax.block_until_ready(ops.moe_gmm(xe, we)), iters=2)
+    emit("kernel_gmm_pallas_interp", t_pl * 1e6, "")
+
+    M, D2, N = 256, 512, 512
+    x8 = jax.random.normal(KEY(8), (M, D2), jnp.float32)
+    w8, s8 = quantize_int8(jax.random.normal(KEY(9), (D2, N), jnp.float32))
+    t_ref, _ = time_call(
+        lambda: jax.block_until_ready(ref.int8_matmul_ref(x8, w8, s8)),
+        iters=5)
+    emit("kernel_int8_ref", t_ref * 1e6,
+         f"weight_bytes={w8.nbytes + s8.nbytes};bf16_bytes={D2*N*2}")
+    t_pl, _ = time_call(
+        lambda: jax.block_until_ready(ops.int8_matmul(x8, w8, s8)), iters=2)
+    emit("kernel_int8_pallas_interp", t_pl * 1e6, "")
+
+    Bh, Hh, T, dhh = 1, 4, 512, 64
+    r_ = jax.random.normal(KEY(10), (Bh, Hh, T, dhh)) * 0.5
+    k_ = jax.random.normal(KEY(11), (Bh, Hh, T, dhh)) * 0.5
+    v_ = jax.random.normal(KEY(12), (Bh, Hh, T, dhh)) * 0.5
+    w_ = jax.nn.sigmoid(jax.random.normal(KEY(13), (Bh, Hh, T, dhh)))
+    u_ = jax.random.normal(KEY(14), (Hh, dhh)) * 0.3
+    s0 = jnp.zeros((Bh, Hh, dhh, dhh))
+    t_ref, _ = time_call(
+        lambda: jax.block_until_ready(ref.rwkv6_scan_ref(r_, k_, v_, w_, u_,
+                                                         s0)[0]), iters=3)
+    emit("kernel_rwkv6_ref", t_ref * 1e6, f"tok_s={T/t_ref:.0f}")
+    t_pl, _ = time_call(
+        lambda: jax.block_until_ready(ops.rwkv6_scan(r_, k_, v_, w_, u_, s0,
+                                                     chunk=128)[0]), iters=1)
+    emit("kernel_rwkv6_pallas_interp", t_pl * 1e6, "")

@@ -1,0 +1,38 @@
+"""Roofline table from cached dry-run/collector artifacts (fast; the heavy
+compiles live in benchmarks/roofline_collect.py, run separately)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+ROOF_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "roofline")
+
+
+def run():
+    if not os.path.isdir(ROOF_DIR):
+        emit("roofline_missing", 0.0,
+             "run benchmarks/roofline_collect.py first")
+        return []
+    rows = []
+    for fname in sorted(os.listdir(ROOF_DIR)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(ROOF_DIR, fname)) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        rows.append(r)
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}",
+            r["t_step_s"] * 1e6,
+            f"bottleneck={r['bottleneck']};"
+            f"tc={r['t_compute_s']:.3e};tm={r['t_memory_s']:.3e};"
+            f"tcoll={r['t_collective_s']:.3e};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"mfu={r['mfu_at_roofline']:.4f}",
+        )
+    return rows

@@ -1,0 +1,77 @@
+"""Paper Table 1, Serving Infrastructure rows: SI1..SI4 head-to-head.
+
+Same smoke model, same workload, four infrastructures; reports latency,
+throughput, J/request (host-proxy measured) and the SI2 'engine build'
+(compile) cost the paper attributes to runtime engines.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.core.add import (
+    Deployment,
+    ModelFormat,
+    RequestProcessing,
+    ServingInfrastructure,
+)
+from repro.core.engines import CompiledEngine, EagerEngine
+from repro.models import init_params
+from repro.serving.cloud import CloudService
+from repro.serving.request import synth_workload
+from repro.serving.scheduler import RealTimeScheduler
+from repro.serving.server import ModelPackage, ServingServer
+
+ARCH = "minitron-4b-smoke"
+
+
+def run(tmpdir: str = "/tmp/repro_bench"):
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    wl = lambda: synth_workload(8, 16, 8, cfg.vocab_size, rate_per_s=200,  # noqa
+                                seed=11)
+    rows = []
+
+    # SI1: eager framework dispatch behind a hand-built API
+    e1 = EagerEngine(cfg, params, max_seq=64)
+    m1 = RealTimeScheduler(e1).run(wl())
+    rows.append(("si1_no_runtime", m1))
+
+    # SI2: AOT-compiled runtime engine (warmup = engine build)
+    e2 = CompiledEngine(cfg, params, max_seq=64)
+    build_s = e2.warmup(1, 16)
+    m2 = RealTimeScheduler(e2).run(wl())
+    rows.append(("si2_runtime", m2))
+    emit("si2_engine_build", build_s * 1e6, "aot_compile_seconds")
+
+    # SI3: DL-serving software (packaged, continuous batching)
+    dep3 = Deployment(arch=ARCH, si=ServingInfrastructure.SI3_DL_SERVER,
+                      request_processing=RequestProcessing.CONTINUOUS_BATCH,
+                      max_batch=4, max_seq=64)
+    srv = ServingServer(dep3)
+    srv.register(ModelPackage(name="m", arch=ARCH, params=params, max_seq=64))
+    srv.warmup("m", 4, 16)
+    m3 = srv.handle("m", wl())
+    rows.append(("si3_dl_server", m3))
+
+    # SI4: cloud service (registry + autoscaled endpoint)
+    cloud = CloudService(tmpdir + "/registry")
+    cloud.upload_model("m", 1, params, ModelFormat.RSM)
+    dep4 = Deployment(arch=ARCH, si=ServingInfrastructure.SI4_CLOUD_SERVICE,
+                      request_processing=RequestProcessing.DYNAMIC_BATCH,
+                      max_batch=4, max_seq=64, max_replicas=3)
+    cloud.deploy("m", 1, dep4, template_params=params)
+    m4 = cloud.predict("m", wl(), service_time_hint_s=0.05)
+    rows.append(("si4_cloud", m4))
+
+    for name, m in rows:
+        s = m.summary()
+        emit(
+            f"serving_infra_{name}",
+            s["mean_latency_s"] * 1e6,
+            f"tok_s={s['throughput_tok_s']};J_req={s['energy_per_request_j']};"
+            f"p95_s={s['p95_latency_s']}",
+        )
+    return rows

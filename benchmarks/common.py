@@ -1,0 +1,21 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Returns (mean_seconds, result)."""
+    result = None
+    for _ in range(warmup):
+        result = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args, **kw)
+    return (time.perf_counter() - t0) / iters, result
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

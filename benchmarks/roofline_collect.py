@@ -1,0 +1,187 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline term collection (single-pod mesh).
+
+cost_analysis counts while-loop (scan) bodies ONCE, so per-(arch x shape) we
+compile UNROLLED reduced-depth variants at two depths and extrapolate the
+strictly-linear-in-depth FLOPs/bytes/collective terms to the full depth:
+
+    metric(L) = outside + L * per_layer      (exact for homogeneous stacks)
+
+Memory/fit numbers still come from the full-depth scan-based dry-run JSONs.
+Writes experiments/roofline/<arch>_<shape>.json.
+"""
+
+import argparse    # noqa: E402
+import dataclasses  # noqa: E402
+import json        # noqa: E402
+import time        # noqa: E402
+import traceback   # noqa: E402
+
+import jax         # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, applicable, get_arch, get_shape  # noqa: E402
+from repro.distributed import meshes as M  # noqa: E402
+from repro.distributed.ctx import sharding_hints  # noqa: E402
+from repro.distributed.xla_stats import collective_stats, cost_stats  # noqa: E402
+from repro.energy.estimator import RooflineTerms  # noqa: E402
+from repro.launch.dryrun import shardings_for  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import step_and_specs  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "roofline")
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def _depths(cfg):
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every  # 1 and 2 groups
+    return 2, 4
+
+
+def _reduced(cfg, L):
+    changes = dict(num_layers=L, unroll_layers=True)
+    if cfg.family == "audio":
+        changes["encoder_layers"] = L
+    return dataclasses.replace(cfg, **changes)
+
+
+def _full_depth_units(cfg):
+    """How many 'depth units' the full model has (matching _depths units)."""
+    return cfg.num_layers
+
+
+def _compile_cost(cfg, shape, mesh):
+    dp = M.axis_size(mesh, M.dp_axes(mesh))
+    # microbatches=1: grad-accum wraps the step in a scan, whose body
+    # cost_analysis would count once — collect costs on the unaccumulated step
+    step, args, kind = step_and_specs(cfg, shape, dp=dp, microbatches=1)
+    in_s, out_s = shardings_for(kind, cfg, args, mesh)
+    roles = ("residual", "moe") if kind == "train" else ()
+    with mesh, sharding_hints(mesh, roles=roles):
+        kw = {}
+        if out_s is not None:
+            kw["out_shardings"] = M.named(out_s, mesh)
+        donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[kind]
+        if donate:
+            kw["donate_argnums"] = donate
+        compiled = (
+            jax.jit(step, in_shardings=M.named(in_s, mesh), **kw)
+            .lower(*args)
+            .compile()
+        )
+    cost = cost_stats(compiled)
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": cost["flops"],
+        "bytes": cost["bytes_accessed"],
+        "coll": coll["total_bytes"],
+        "coll_by_kind": {
+            k: coll[k]
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute")
+        },
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytical MODEL_FLOPS: 6*N*D (train) / 2*N_active*tokens (inference)."""
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def collect_one(arch_name, shape_name, out_dir=OUT_DIR):
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    if not applicable(cfg, shape):
+        return {"arch": arch_name, "shape": shape_name, "status": "skipped"}
+    mesh = make_production_mesh(multi_pod=False)
+    chips = mesh.size
+    L1, L2 = _depths(cfg)
+    t0 = time.perf_counter()
+    c1 = _compile_cost(_reduced(cfg, L1), shape, mesh)
+    c2 = _compile_cost(_reduced(cfg, L2), shape, mesh)
+    Lf = _full_depth_units(cfg)
+
+    def extrap(k):
+        per = (c2[k] - c1[k]) / (L2 - L1)
+        outside = c1[k] - L1 * per
+        return max(outside + Lf * per, 0.0)
+
+    # cost_analysis / HLO text are PER-DEVICE modules -> multiply by chips
+    flops = extrap("flops") * chips
+    hbm = extrap("bytes") * chips
+    coll = extrap("coll") * chips
+    terms = RooflineTerms(flops=flops, hbm_bytes=hbm, collective_bytes=coll,
+                          chips=chips)
+    mf = model_flops(cfg, shape)
+    # memory/fit from the full-depth dry-run
+    dr_path = os.path.join(DRYRUN_DIR, f"{arch_name}_{shape_name}_single.json")
+    mem = {}
+    if os.path.exists(dr_path):
+        with open(dr_path) as f:
+            dr = json.load(f)
+        mem = {
+            "peak_bytes_per_device": dr["memory"]["peak_bytes_per_device"],
+            "fits_16gb": dr["fits_16gb"],
+        }
+    rec = {
+        "arch": arch_name, "shape": shape_name, "status": "ok",
+        "chips": chips,
+        "flops_global": flops, "hbm_bytes_global": hbm,
+        "collective_bytes_global": coll,
+        "coll_by_kind_per_dev_L1": c1["coll_by_kind"],
+        "t_compute_s": terms.t_compute, "t_memory_s": terms.t_memory,
+        "t_collective_s": terms.t_collective, "t_step_s": terms.t_step,
+        "bottleneck": terms.bottleneck,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "mfu_at_roofline": terms.mfu(mf),
+        "collect_s": round(time.perf_counter() - t0, 1),
+        **mem,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{arch_name}_{shape_name}.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ns = ap.parse_args()
+    archs = [ns.arch] if ns.arch else sorted(ARCHS)
+    shapes = [ns.shape] if ns.shape else sorted(SHAPES)
+    fails = 0
+    for a in archs:
+        for s in shapes:
+            try:
+                rec = collect_one(a, s)
+            except Exception as e:  # noqa: BLE001
+                print(f"FAIL {a} x {s}: {e}")
+                traceback.print_exc()
+                fails += 1
+                continue
+            if rec["status"] == "skipped":
+                print(f"SKIP {a} x {s}")
+                continue
+            print(
+                f"OK {a} x {s}: bottleneck={rec['bottleneck']} "
+                f"t_step={rec['t_step_s']:.4g}s "
+                f"useful={rec['useful_flops_ratio']:.2f} "
+                f"mfu={rec['mfu_at_roofline']:.3f} ({rec['collect_s']}s)"
+            )
+    raise SystemExit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_serving_infra  - Table 1, Serving Infrastructure rows (SI1..SI4)
+  bench_batching       - Table 1, TD3 request-processing row (Yarally'23)
+  bench_formats        - Table 1, TD2 model-format row
+  bench_codecs         - Table 1, TD4 communication-protocol row
+  bench_adds           - Table 1 executed as GreenReports (all qualities)
+  bench_kernels        - Pallas kernels vs oracles
+  bench_roofline       - deliverable (g): roofline terms per (arch x shape)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_adds,
+        bench_batching,
+        bench_codecs,
+        bench_formats,
+        bench_kernels,
+        bench_roofline,
+        bench_serving_infra,
+    )
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in (bench_codecs, bench_formats, bench_kernels,
+                bench_serving_infra, bench_batching, bench_adds,
+                bench_roofline):
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failed.append((mod.__name__, e))
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

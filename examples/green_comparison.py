@@ -1,0 +1,78 @@
+"""Green ADD comparison: sweep the paper's transversal decisions and rank
+deployments by energy per token — the green-aware decision aid the paper
+calls for ("may aid ML researchers and practitioners in making green-aware
+architecture design decisions when serving their models").
+
+Run:  PYTHONPATH=src python examples/green_comparison.py
+"""
+
+import argparse
+import itertools
+
+import jax
+
+from repro.configs import get_arch
+from repro.core.add import (
+    Containerization,
+    Deployment,
+    ModelFormat,
+    Protocol,
+    RequestProcessing,
+    ServingInfrastructure,
+)
+from repro.core.engines import CompiledEngine
+from repro.core.quality import Quality
+from repro.energy.report import build_green_report
+from repro.models import init_params
+from repro.serving.container import overhead
+from repro.serving.request import synth_workload
+from repro.serving.scheduler import make_scheduler
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-4b-smoke")
+    ns = ap.parse_args()
+    cfg = get_arch(ns.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = CompiledEngine(cfg, params, max_seq=64)
+    for b in (1, 4):
+        engine.warmup(b, 16)
+
+    rows = []
+    grid = itertools.product(
+        [RequestProcessing.REALTIME, RequestProcessing.DYNAMIC_BATCH,
+         RequestProcessing.CONTINUOUS_BATCH],
+        [Containerization.NONE, Containerization.DOCKER,
+         Containerization.WASM],
+        [ModelFormat.RSM, ModelFormat.RSM_INT8],
+    )
+    for rp, cont, fmt in grid:
+        dep = Deployment(
+            arch=ns.arch, si=ServingInfrastructure.SI3_DL_SERVER,
+            containerization=cont, model_format=fmt, request_processing=rp,
+            protocol=Protocol.GRPC_BINARY,
+            max_batch=1 if rp == RequestProcessing.REALTIME else 4,
+            max_seq=64,
+        )
+        if dep.validate():
+            continue
+        sched = make_scheduler(rp.value, engine, max_batch=dep.max_batch,
+                               timeout_ms=10, max_seq=64)
+        wl = synth_workload(8, 12, 4, cfg.vocab_size, rate_per_s=200, seed=5)
+        m = sched.run(wl)
+        rep = build_green_report(dep, m)
+        e = rep.get(Quality.ENERGY_EFFICIENCY).value
+        p95 = m.latency_percentile(95) * overhead(cont).latency_overhead
+        rows.append((e, p95, dep))
+
+    rows.sort()
+    print(f"{'J/token':>10}  {'p95_s':>8}  deployment")
+    for e, p95, dep in rows:
+        print(f"{e:>10.4f}  {p95:>8.4f}  {dep.describe()}")
+    print("\ngreenest deployment:")
+    print("  " + rows[0][2].describe())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Quickstart: serve a model through every Serving Infrastructure option.
+
+The paper's principal design decision, executed:
+  SI1 no-runtime-engine -> SI2 runtime engine -> SI3 DL server -> SI4 cloud,
+same model, same workload, with the GreenReport for each.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--arch yi-9b-smoke]
+"""
+
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs import get_arch
+from repro.core.add import (
+    Deployment,
+    ModelFormat,
+    RequestProcessing,
+    ServingInfrastructure,
+)
+from repro.core.engines import CompiledEngine, EagerEngine
+from repro.energy.report import build_green_report
+from repro.models import init_params
+from repro.serving.cloud import CloudService
+from repro.serving.request import synth_workload
+from repro.serving.scheduler import RealTimeScheduler
+from repro.serving.server import ModelPackage, ServingServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b-smoke")
+    ap.add_argument("--requests", type=int, default=6)
+    ns = ap.parse_args()
+
+    cfg = get_arch(ns.arch)
+    print(f"== arch {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"({cfg.family}), ~{cfg.param_count()/1e6:.1f}M params")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    wl = lambda: synth_workload(ns.requests, 12, 4, cfg.vocab_size,  # noqa
+                                rate_per_s=100, seed=1)
+
+    # ---- SI1: no runtime engine (eager framework + hand-built API) ----------
+    dep1 = Deployment(arch=ns.arch, si=ServingInfrastructure.SI1_NO_RUNTIME,
+                      model_format=ModelFormat.NATIVE,
+                      request_processing=RequestProcessing.REALTIME,
+                      max_batch=1, max_seq=64)
+    m1 = RealTimeScheduler(EagerEngine(cfg, params, 64)).run(wl())
+    print("\n[SI1 no-runtime]      ", m1.summary())
+    print(build_green_report(dep1, m1).table())
+
+    # ---- SI2: runtime engine (XLA AOT executable) ----------------------------
+    dep2 = Deployment(arch=ns.arch, si=ServingInfrastructure.SI2_RUNTIME_ENGINE,
+                      request_processing=RequestProcessing.REALTIME,
+                      max_batch=1, max_seq=64)
+    eng = CompiledEngine(cfg, params, 64)
+    build = eng.warmup(1, 16)
+    m2 = RealTimeScheduler(eng).run(wl())
+    print(f"\n[SI2 runtime-engine]   engine build {build:.2f}s;", m2.summary())
+    print(build_green_report(dep2, m2).table())
+
+    # ---- SI3: DL-serving software (packaged, batched, no hand API) ----------
+    dep3 = Deployment(arch=ns.arch, si=ServingInfrastructure.SI3_DL_SERVER,
+                      request_processing=RequestProcessing.CONTINUOUS_BATCH,
+                      max_batch=4, max_seq=64)
+    srv = ServingServer(dep3)
+    endpoint = srv.register(ModelPackage(name="m", arch=ns.arch,
+                                         params=params, max_seq=64))
+    srv.warmup("m", 4, 16)
+    m3 = srv.handle("m", wl())
+    print(f"\n[SI3 dl-server]        endpoint {endpoint};", m3.summary())
+    print(build_green_report(dep3, m3).table())
+
+    # ---- SI4: end-to-end cloud service ----------------------------------------
+    with tempfile.TemporaryDirectory() as td:
+        cloud = CloudService(td)
+        cloud.upload_model("m", 1, params, ModelFormat.RSM)
+        dep4 = Deployment(arch=ns.arch,
+                          si=ServingInfrastructure.SI4_CLOUD_SERVICE,
+                          request_processing=RequestProcessing.DYNAMIC_BATCH,
+                          max_batch=4, max_seq=64, max_replicas=3)
+        url = cloud.deploy("m", 1, dep4, template_params=params)
+        m4 = cloud.predict("m", wl(), service_time_hint_s=0.05)
+        print(f"\n[SI4 cloud]            {url} "
+              f"(replicas={cloud.endpoints['m']['replicas']});", m4.summary())
+        print(build_green_report(dep4, m4).table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end training driver: train a ~100M-param qwen3-family model for a
+few hundred steps on the synthetic LM pipeline, with checkpointing, then
+serve the trained checkpoint and show the loss actually dropped.
+
+Run:  PYTHONPATH=src python examples/train_small.py --steps 200
+(defaults are sized so this finishes on a laptop-class CPU)
+"""
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+
+from repro.configs import get_arch, smoke_variant
+from repro.core.engines import CompiledEngine
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.data import DataConfig, SyntheticLM, eval_batches
+from repro.training.optim import AdamWConfig
+from repro.training.trainer import lm_loss, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_small")
+    ns = ap.parse_args()
+
+    # ~100M-param variant of the assigned qwen3 family
+    base = smoke_variant(get_arch(ns.arch))
+    cfg = dataclasses.replace(
+        base, name="qwen3-100m", num_layers=ns.layers, d_model=ns.d_model,
+        num_heads=ns.d_model // 64, num_kv_heads=max(2, ns.d_model // 256),
+        head_dim=64, d_ff=ns.d_model * 4, vocab_size=32768,
+    )
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{ns.steps} steps, seq={ns.seq}, batch={ns.batch}")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=ns.seq,
+                      batch_size=ns.batch)
+    it = SyntheticLM(dcfg).batches()
+    opt_cfg = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=ns.steps)
+
+    t0 = time.time()
+    res = train_loop(
+        cfg, opt_cfg, it, ns.steps, log_every=max(ns.steps // 10, 1),
+        callback=lambda r: print(
+            f"  step {r['step']:>4}  loss {r['loss']:.4f}  "
+            f"lr {r['lr']:.2e}  gnorm {r['grad_norm']:.2f}"
+        ),
+    )
+    dt = time.time() - t0
+    tokens = ns.steps * ns.seq * ns.batch
+    print(f"trained {tokens} tokens in {dt:.1f}s ({tokens/dt:.0f} tok/s)")
+
+    first, last = res["history"][0]["loss"], res["history"][-1]["loss"]
+    print(f"loss: {first:.4f} -> {last:.4f}")
+    assert last < first, "training failed to reduce loss"
+
+    path = os.path.join(ns.ckpt, f"step_{ns.steps}")
+    nbytes = save_checkpoint(path, res["params"], res["opt_state"], ns.steps)
+    print(f"checkpoint: {path} ({nbytes/1e6:.1f} MB)")
+
+    # restore + eval + serve
+    params, _, meta = load_checkpoint(path, res["params"])
+    ev = eval_batches(dcfg, 2)
+    loss, _ = lm_loss(params, cfg, ev[0])
+    print(f"restored step={meta['step']}; eval loss {float(loss):.4f}")
+
+    engine = CompiledEngine(cfg, params, max_seq=ns.seq + 32)
+    out = engine.generate(ev[0]["tokens"][:1, :16], 8)
+    print(f"served 8 tokens from the trained model: {out.tokens[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Dev tool: per-op byte totals of the ENTRY computation (+ while bodies) of a
+compiled (arch x shape) step — the 'profile' for dry-run hillclimbing."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import collections
+import re
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs import get_arch, get_shape  # noqa: E402
+from repro.distributed import meshes as M  # noqa: E402
+from repro.launch.dryrun import shardings_for  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import step_and_specs  # noqa: E402
+
+DTB = {"bf16": 2, "f32": 4, "s32": 4, "pred": 1, "u32": 4, "s8": 1,
+       "f16": 2, "u8": 1, "f64": 8, "s64": 8}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--top", type=int, default=18)
+    ns = ap.parse_args()
+
+    import dataclasses
+
+    cfg = get_arch(ns.arch)
+    changes = dict(num_layers=ns.layers, unroll_layers=True)
+    if cfg.family == "audio":
+        changes["encoder_layers"] = ns.layers
+    cfg = dataclasses.replace(cfg, **changes)
+    shape = get_shape(ns.shape)
+    mesh = make_production_mesh(multi_pod=False)
+    dp = M.axis_size(mesh, M.dp_axes(mesh))
+    step, args, kind = step_and_specs(cfg, shape, dp=dp, microbatches=1)
+    in_s, out_s = shardings_for(kind, cfg, args, mesh)
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[kind]
+    kw = {"donate_argnums": donate} if donate else {}
+    if out_s is not None:
+        kw["out_shardings"] = M.named(out_s, mesh)
+    with mesh:
+        compiled = jax.jit(step, in_shardings=M.named(in_s, mesh), **kw)\
+            .lower(*args).compile()
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    print(f"flops/dev {ca['flops']:.4e}  bytes/dev {ca['bytes accessed']:.4e}")
+    txt = compiled.as_text()
+
+    # walk computations; keep ENTRY + while bodies/conditions (top-level
+    # dataflow), skip fused computations (their ops don't touch HBM)
+    sizes = collections.Counter()
+    counts = collections.Counter()
+    keep = False
+    for line in txt.splitlines():
+        if line.startswith("ENTRY ") or (
+            line.startswith("%") and ("body" in line.split("(")[0]
+                                      or "cond" in line.split("(")[0])
+        ):
+            keep = True
+            continue
+        if line.startswith("}"):
+            keep = False
+            continue
+        if not keep:
+            continue
+        m = re.search(r"= ([a-z0-9]+)\[([0-9,]*)\][^ ]* ([a-z0-9\-\.]+)\(",
+                      line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        if op in ("parameter", "get-tuple-element", "bitcast", "tuple",
+                  "constant"):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes[op] += n * DTB.get(dt, 4)
+        counts[op] += 1
+    total = sum(sizes.values())
+    print(f"top-level result bytes total {total/2**30:.2f} GiB/dev")
+    for op, b in sizes.most_common(ns.top):
+        print(f"  {op:<26}{b/2**30:9.3f} GiB  n={counts[op]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Generate EXPERIMENTS.md tables from experiments/{roofline,roofline_baseline,dryrun} JSONs."""
+import json
+import os
+import sys
+
+ARCHS = ["arctic-480b", "minitron-4b", "mixtral-8x7b", "qwen1.5-110b",
+         "qwen2-vl-2b", "qwen3-8b", "rwkv6-3b", "whisper-small", "yi-9b",
+         "zamba2-2.7b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname):
+    out = {}
+    for f in os.listdir(dirname):
+        if not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(dirname, f)))
+        if r.get("status") == "ok" or "t_step_s" in r:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt(v):
+    if v is None:
+        return "—"
+    if v >= 100:
+        return f"{v:.0f}"
+    if v >= 1:
+        return f"{v:.3g}"
+    return f"{v:.3g}"
+
+
+def table(data, field="t_step_s"):
+    print("| arch | " + " | ".join(SHAPES) + " |")
+    print("|---|" + "---|" * len(SHAPES))
+    for a in ARCHS:
+        cells = []
+        for s in SHAPES:
+            r = data.get((a, s))
+            cells.append(fmt(r.get(field)) if r else "skip")
+        print(f"| {a} | " + " | ".join(cells) + " |")
+
+
+def detail(data):
+    print("| arch | shape | bottleneck | t_comp | t_mem | t_coll | useful | MFU | fits16GiB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            r = data.get((a, s))
+            if not r:
+                continue
+            print(f"| {a} | {s} | {r.get('bottleneck','?')} | "
+                  f"{fmt(r.get('t_compute_s'))} | {fmt(r.get('t_memory_s'))} | "
+                  f"{fmt(r.get('t_collective_s'))} | "
+                  f"{fmt(r.get('useful_flops_ratio'))} | "
+                  f"{fmt(r.get('mfu_at_roofline'))} | "
+                  f"{r.get('fits_16gb', '—')} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    base = load("experiments/roofline_baseline")
+    opt = load("experiments/roofline")
+    if which in ("both", "baseline"):
+        print("### baseline t_step (s)\n")
+        table(base)
+    if which in ("both", "optimized"):
+        print("\n### optimized t_step (s)\n")
+        table(opt)
+        print("\n### optimized detail\n")
+        detail(opt)
+    if which == "delta":
+        print("| arch | shape | baseline | optimized | speedup |")
+        print("|---|---|---|---|---|")
+        for a in ARCHS:
+            for s in SHAPES:
+                b, o = base.get((a, s)), opt.get((a, s))
+                if not (b and o):
+                    continue
+                print(f"| {a} | {s} | {fmt(b['t_step_s'])} | "
+                      f"{fmt(o['t_step_s'])} | "
+                      f"{b['t_step_s']/o['t_step_s']:.2f}x |")

@@ -1,0 +1,43 @@
+"""Quick dev sanity: every smoke arch does forward + prefill + decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, smoke_variant
+from repro.models import decode_step, forward, init_params, prefill
+
+FAILED = []
+for name, full in sorted(ARCHS.items()):
+    cfg = smoke_variant(full)
+    try:
+        key = jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        B, S = 2, 16
+        batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+        if cfg.family == "audio":
+            batch["frames"] = jax.random.normal(
+                key, (B, cfg.encoder_seq, cfg.d_model)
+            )
+        if cfg.family == "vlm":
+            batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+        out = forward(params, cfg, batch)
+        logits = out["logits"]
+        assert logits.shape == (B, S, cfg.vocab_size), logits.shape
+        assert not bool(jnp.isnan(logits).any()), "NaN in forward"
+        lg, cache = prefill(params, cfg, batch, max_seq=32)
+        assert lg.shape == (B, cfg.vocab_size)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        lg2, cache = decode_step(params, cfg, cache, tok)
+        assert lg2.shape == (B, cfg.vocab_size)
+        assert not bool(jnp.isnan(lg2).any()), "NaN in decode"
+        assert int(cache["lengths"][0]) == S + 1
+        print(f"OK   {name}")
+    except Exception as e:  # noqa: BLE001
+        import traceback
+
+        print(f"FAIL {name}: {e}")
+        traceback.print_exc()
+        FAILED.append(name)
+
+sys.exit(1 if FAILED else 0)

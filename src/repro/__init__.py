@@ -1,0 +1,9 @@
+"""repro: a green-aware ML serving (+training) framework in JAX.
+
+Reproduction of "Identifying architectural design decisions for achieving
+green ML serving" (Durán et al., CAIN 2024): the paper's ADD taxonomy as a
+first-class, measurable configuration system over a production-grade JAX
+serving/training stack.  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

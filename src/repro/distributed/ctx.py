@@ -1,0 +1,65 @@
+"""Ambient sharding constraints for model-internal tensors.
+
+Model code (e.g. the MoE dispatch buffers) sometimes needs activation
+sharding hints that GSPMD cannot infer well.  ``constrain(x, role_spec)``
+applies ``with_sharding_constraint`` against the mesh installed by
+``sharding_hints`` — and is a no-op when no mesh is installed (single-device
+smoke paths), so models stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh, roles=("residual", "moe")):
+    """roles: which constraint classes are active.  Measured policy
+    (EXPERIMENTS.md §Perf): training needs both ('residual' pins bwd
+    cotangent sharding, 'moe' tames the dispatch all-reduce); inference
+    paths run best with GSPMD's own propagation — roles=() there."""
+    prev = (getattr(_TLS, "mesh", None), getattr(_TLS, "roles", frozenset()))
+    _TLS.mesh = mesh
+    _TLS.roles = frozenset(roles)
+    try:
+        yield
+    finally:
+        _TLS.mesh, _TLS.roles = prev
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x, spec_template, role="residual"):
+    """spec_template: tuple with entries None | 'dp' | 'model' per dim.
+
+    'dp' resolves to the (pod, data) group of the ambient mesh.  Dims whose
+    size doesn't divide the axis size are left unsharded.  No-op unless the
+    ambient hints enable ``role``.
+    """
+    mesh = getattr(_TLS, "mesh", None)
+    if mesh is None or role not in getattr(_TLS, "roles", frozenset()):
+        return x
+    entries = []
+    for dim, r in zip(x.shape, spec_template):
+        if r is None:
+            entries.append(None)
+            continue
+        axes = _dp_axes(mesh) if r == "dp" else (r,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size > 1 and dim % size == 0:
+            entries.append(axes if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries))
+    )

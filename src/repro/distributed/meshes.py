@@ -1,0 +1,234 @@
+"""Sharding policy: params / batch / cache PartitionSpecs for any mesh.
+
+Policy (MaxText-lineage, generalized so every assigned arch lowers):
+
+  * weights: greedy 2-D sharding — the largest divisible dim goes to the
+    ``model`` (tensor-parallel) axis, the next largest divisible dim to the
+    fsdp group (``data`` [+ ``pod``]).  Dims that don't divide the axis size
+    are left replicated (GSPMD inserts the gathers); stacked-layer leading
+    dims and small vectors are never sharded.
+  * optimizer state mirrors params.
+  * batch: global batch over (pod, data).
+  * decode caches: batch over data when divisible (decode_32k), else the
+    sequence axis (long_500k, B=1), kv-heads/ssm-heads over ``model`` when
+    divisible.
+
+Everything returns PartitionSpec trees; NamedSharding is applied at the jit
+boundary by the launcher.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data/fsdp axis group (includes the pod axis when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# -- generic greedy weight rule -------------------------------------------------
+
+
+def _weight_spec(shape, mesh: Mesh, *, skip_leading: int, min_dim: int = 256):
+    """Greedy: model axis on the largest divisible dim, fsdp on the next."""
+    spec: list = [None] * len(shape)
+    dims = [
+        (d, i)
+        for i, d in enumerate(shape)
+        if i >= skip_leading and d >= min_dim
+    ]
+    dims.sort(reverse=True)
+    remaining = list(dims)
+    for axes in (MODEL_AXIS, dp_axes(mesh)):
+        size = axis_size(mesh, axes)
+        if size <= 1:
+            continue
+        for d, i in remaining:
+            if spec[i] is None and d % size == 0:
+                spec[i] = axes if isinstance(axes, str) else (
+                    axes if len(axes) > 1 else axes[0]
+                )
+                remaining.remove((d, i))
+                break
+    return P(*spec)
+
+
+def _is_stacked(path_str: str) -> bool:
+    return any(
+        t in path_str
+        for t in ("layers", "mamba_layers", "enc_layers", "dec_layers")
+    )
+
+
+def param_shardings(params_shape, mesh: Mesh, mode: str = "train"):
+    """PartitionSpec tree matching a params (or opt-state) shape tree.
+
+    mode="train": greedy 2-D (model TP + fsdp over data) — optimizer state
+    must shard, and per-layer weight gathers amortize over the math.
+    mode="serve": model-axis TP only — weights stay resident, no per-step
+    fsdp all-gathers (the decode hot path).  Leaves whose model-sharded
+    size would still exceed ~1 GiB/device (giant MoE expert stacks) keep
+    the 2-D layout.
+    """
+    model_n = mesh.shape[MODEL_AXIS]
+
+    def rule(path, leaf):
+        pstr = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        shape = leaf.shape
+        skip = 1 if _is_stacked(pstr) else 0
+        if "group_gain" in pstr:
+            skip = 1
+        if len(shape) - skip < 2:
+            # vectors / scalars / norms: replicated
+            return P()
+        if "embed" in pstr or "lm_head" in pstr:
+            # embedding-like tables: shard the VOCAB dim over model only.
+            # Model-sharding d_model here leaks a feature-dim sharding onto
+            # the residual stream (and trips an XLA SPMD verifier edge on
+            # whisper's indivisible vocab) — vocab-dim or replicated.
+            vdim = 0 if "embed" in pstr else 1
+            spec = [None, None]
+            if shape[vdim] % model_n == 0:
+                spec[vdim] = MODEL_AXIS
+            if mode != "serve":
+                fd = dp_axes(mesh)
+                fn = axis_size(mesh, fd)
+                odim = 1 - vdim
+                if shape[odim] % fn == 0:
+                    spec[odim] = fd if len(fd) > 1 else fd[0]
+            return P(*spec)
+        if mode == "serve":
+            import math
+
+            bytes_model_sharded = (
+                math.prod(shape) * 2 / model_n  # bf16
+            )
+            if bytes_model_sharded <= 1 * 1024**3:
+                spec = [None] * len(shape)
+                dims = sorted(
+                    ((d, i) for i, d in enumerate(shape) if i >= skip),
+                    reverse=True,
+                )
+                for d, i in dims:
+                    if d % model_n == 0 and d >= 256:
+                        spec[i] = MODEL_AXIS
+                        break
+                return P(*spec)
+        return _weight_spec(shape, mesh, skip_leading=skip)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_shardings(opt_shape, mesh: Mesh):
+    def rule(path, leaf):
+        pstr = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        if pstr.startswith("step") or "step" in pstr.split("/")[:1]:
+            return P()
+        shape = leaf.shape
+        skip = 1 if _is_stacked(pstr) else 0
+        if len(shape) - skip < 2:
+            return P()
+        return _weight_spec(shape, mesh, skip_leading=skip)
+
+    return jax.tree_util.tree_map_with_path(rule, opt_shape)
+
+
+# -- batch / cache rules ----------------------------------------------------------
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    dp = dp_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+
+    def rule(path, leaf):
+        B = leaf.shape[0]
+        first = dp_spec if B % dp_n == 0 else None
+        return P(first, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, cfg):
+    """Decode-cache specs: see module docstring."""
+    dp = dp_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    m_n = mesh.shape[MODEL_AXIS]
+
+    def rule(path, leaf):
+        pstr = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        shape = leaf.shape
+        if pstr == "lengths":
+            return P()
+        spec: list = [None] * len(shape)
+        # layout: (L_or_G, B, ...) for all array leaves
+        B = shape[1]
+        if pstr in ("k", "v", "xk", "xv"):
+            # (L, B, S, K, hd): batch over data, then K over model when
+            # divisible, else sequence over model (split-KV flash-decode:
+            # partial softmax + psum).  Never shard hd (contraction dim).
+            # [Measured alternatives, both worse — see EXPERIMENTS.md §Perf:
+            #  batch-over-model (weight-sharding conflict, 2.6x bytes) and
+            #  lockstep DUS writes (full-cache selects, 1.13x bytes).]
+            if B % dp_n == 0 and B >= dp_n:
+                spec[1] = dp_spec
+            elif shape[2] % dp_n == 0:
+                spec[2] = dp_spec  # long-context B=1: sequence over data
+            if shape[3] % m_n == 0 and shape[3] >= m_n:
+                spec[3] = MODEL_AXIS
+            elif shape[2] % m_n == 0:
+                spec[2] = (
+                    MODEL_AXIS if spec[2] is None
+                    else (*dp, MODEL_AXIS)
+                )
+            return P(*spec)
+        if B % dp_n == 0 and B >= dp_n:
+            spec[1] = dp_spec
+        if pstr == "wkv":
+            # (L, B, H, hd, hd)
+            if shape[2] % m_n == 0:
+                spec[2] = MODEL_AXIS
+        elif pstr == "ssm":
+            # (L, B, nh, hd, S)
+            if shape[2] % m_n == 0:
+                spec[2] = MODEL_AXIS
+        elif pstr == "conv":
+            # (L, B, W-1, C)
+            if shape[3] % m_n == 0:
+                spec[3] = MODEL_AXIS
+        elif pstr in ("tm_shift", "cm_shift"):
+            if shape[2] % m_n == 0:
+                spec[2] = MODEL_AXIS
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,122 @@
+"""Parse roofline inputs out of compiled XLA artifacts.
+
+``cost_analysis`` gives FLOPs / bytes; collective traffic is NOT in there, so
+we parse the post-SPMD optimized HLO text and sum OPERAND bytes of every
+collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), deriving operand size from the printed result shape and
+the replica-group size where they differ.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-gather.3 = bf16[16,1024,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\][^\s]*\s*,?\s*)+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Per-kind and total OPERAND bytes of collectives in optimized HLO.
+
+    Bytes are per-participating-device module bytes (the HLO is the per-device
+    program); multiply by device count for global traffic.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue  # paired with -start; count once
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        result_bytes = _shape_bytes(shapes_str)
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand = result_bytes / max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = result_bytes * max(g, 1)
+        elif kind == "all-reduce":
+            operand = result_bytes  # in == out; ring moves ~2x, report operand
+        else:
+            operand = result_bytes
+        out[kind] += operand
+        out["count"] += 1
+    out["total_bytes"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def cost_stats(compiled) -> Dict[str, float]:
+    """flops / bytes out of compiled.cost_analysis() (per-device module)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byte_keys = [k for k in ca if "bytes accessed" in k and "operand" not in k]
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes_accessed": bytes_accessed,
+            "raw_keys": sorted(ca)[:0]}  # raw keys omitted from json
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    fields = (
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "alias_size_in_bytes",
+        "temp_size_in_bytes",
+    )
+    out = {}
+    for f in fields:
+        out[f] = float(getattr(ma, f, 0.0))
+    # peak per-device bytes: args + outputs + temps - aliased
+    out["peak_bytes_per_device"] = (
+        out["argument_size_in_bytes"]
+        + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"]
+        - out["alias_size_in_bytes"]
+    )
+    return out

@@ -1,0 +1,92 @@
+"""Roofline-driven time/energy/carbon estimation.
+
+The three roofline terms (seconds) for a compiled step on ``chips`` devices:
+
+    compute    = HLO_FLOPs      / (chips * peak_FLOP/s)
+    memory     = HLO_bytes      / (chips * HBM_bw)
+    collective = collective_B   / (chips * link_bw)
+
+Estimated step time = max of the three (the bottleneck term); energy uses a
+two-bin power model (compute-bound chips burn ~peak, memory/collective-bound
+chips sit lower).  The same terms drive EXPERIMENTS.md §Roofline and the
+GreenReport's energy-efficiency entry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.energy.hw import CARBON_G_PER_KWH, TPU_V5E, ChipSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    flops: float                 # total HLO FLOPs for the step (global)
+    hbm_bytes: float             # total HLO bytes accessed (global)
+    collective_bytes: float      # summed collective operand bytes (global)
+    chips: int
+    chip: ChipSpec = TPU_V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * self.chip.peak_flops_bf16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * self.chip.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        bw = self.chip.ici_bw_per_link * self.chip.ici_links
+        return self.collective_bytes / (self.chips * bw)
+
+    @property
+    def t_step(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective, 1e-12)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+    def mfu(self, model_flops: float) -> float:
+        """Model-FLOPs utilization at the estimated step time."""
+        return model_flops / (
+            self.t_step * self.chips * self.chip.peak_flops_bf16
+        )
+
+
+def step_power_w(terms: RooflineTerms) -> float:
+    """Per-chip power during the step (two-bin linear interpolation)."""
+    c = terms.chip
+    # fraction of the step the MXU is the binding resource
+    frac_compute = terms.t_compute / terms.t_step
+    return c.power_membound_w + frac_compute * (
+        c.power_peak_w - c.power_membound_w
+    )
+
+
+def step_energy_j(terms: RooflineTerms) -> float:
+    """Energy per step across all chips (derived)."""
+    return step_power_w(terms) * terms.chips * terms.t_step
+
+
+def energy_per_token_j(terms: RooflineTerms, tokens_per_step: int) -> float:
+    return step_energy_j(terms) / max(tokens_per_step, 1)
+
+
+def carbon_g(energy_j: float) -> float:
+    return energy_j / 3.6e6 * CARBON_G_PER_KWH
+
+
+def measured_energy_j(wall_s: float, power_w: float) -> float:
+    """Host-side: joules from measured wall time and an assumed package power."""
+    return wall_s * power_w

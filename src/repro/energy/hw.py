@@ -1,0 +1,50 @@
+"""Target-hardware constants and the chip power model.
+
+TPU v5e (the TARGET; this container is CPU-only so all TPU numbers are
+analytical): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI — the constants
+mandated for the roofline analysis.  Power bins are drawn from public v5e
+figures (TDP ~215 W) and are used by the energy estimator; they are clearly
+*derived*, never presented as measurements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float          # FLOP/s
+    hbm_bw: float                   # B/s
+    ici_bw_per_link: float          # B/s per link
+    ici_links: int                  # links per chip in a 2D torus
+    hbm_bytes: int
+    power_peak_w: float             # compute-bound sustained
+    power_membound_w: float         # HBM-bound sustained
+    power_idle_w: float
+
+    @property
+    def vmem_bytes(self) -> int:
+        return 128 * 1024 * 1024  # ~128 MiB VMEM (v5e)
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 1024**3,
+    power_peak_w=215.0,
+    power_membound_w=150.0,
+    power_idle_w=65.0,
+)
+
+# Host CPU used ONLY to convert measured wall-times of the small smoke models
+# into indicative joules for the serving benchmarks; flagged 'measured*' with
+# an assumed package power (no RAPL access in this container).
+HOST_CPU_POWER_W = 65.0
+
+# Global-average grid carbon intensity (IEA 2023), g CO2e per kWh.
+CARBON_G_PER_KWH = 475.0

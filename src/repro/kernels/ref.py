@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, H, Sq, dh); k/v: (B, K, T, dh)."""
+    B, H, Sq, dh = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, K, G, Sq, dh) * dh ** -0.5
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qf, k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((Sq, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, window=None):
+    """q: (B, K, G, dh); caches: (B, K, S, dh); lengths: (B,)."""
+    B, K, G, dh = q.shape
+    S = k_cache.shape[2]
+    qf = q.astype(jnp.float32) * dh ** -0.5
+    s = jnp.einsum("bkgd,bktd->bkgt", qf, k_cache.astype(jnp.float32))
+    k_pos = jnp.arange(S)[None, :]
+    mask = k_pos < lengths[:, None]
+    if window is not None:
+        mask &= k_pos > (lengths[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def moe_gmm_ref(x, w, group_sizes=None):
+    """x: (E, C, D); w: (E, D, F)."""
+    xf = x.astype(jnp.float32)
+    if group_sizes is not None:
+        C = x.shape[1]
+        rows = jnp.arange(C)[None, :, None]
+        xf = jnp.where(rows < group_sizes[:, None, None], xf, 0.0)
+    return jnp.einsum("ecd,edf->ecf", xf, w.astype(jnp.float32)).astype(x.dtype)
+
+
+def int8_matmul_ref(x, w_q, scales):
+    out = x.astype(jnp.float32) @ w_q.astype(jnp.float32)
+    return (out * scales[None, :]).astype(x.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """r/k/v/w: (B, H, T, dh); u: (H, dh); s0: (B, H, dh, dh)."""
+    rt = r.astype(jnp.float32).transpose(2, 0, 1, 3)
+    kt = k.astype(jnp.float32).transpose(2, 0, 1, 3)
+    vt = v.astype(jnp.float32).transpose(2, 0, 1, 3)
+    wt = w.astype(jnp.float32).transpose(2, 0, 1, 3)
+    uf = u.astype(jnp.float32)
+
+    def body(s, inp):
+        r_, k_, v_, w_ = inp
+        kv = k_[..., :, None] * v_[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", r_, uf[None, :, :, None] * kv + s)
+        s = w_[..., :, None] * s + kv
+        return s, out
+
+    s_final, outs = jax.lax.scan(body, s0.astype(jnp.float32), (rt, kt, vt, wt))
+    return outs.transpose(1, 2, 0, 3).astype(r.dtype), s_final

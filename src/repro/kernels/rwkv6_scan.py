@@ -1,0 +1,88 @@
+"""Pallas TPU RWKV6 WKV recurrence, chunked.
+
+State S[h] is a (head_dim x head_dim) matrix per head:
+    out_t = r_t @ (u * (k_t  v_t^T) + S)
+    S     = diag(w_t) S + k_t  v_t^T        (w_t: data-dependent decay)
+
+Grid: (batch, heads, time-chunks).  The state matrix persists in VMEM scratch
+across the (sequential) chunk axis; within a chunk a fori_loop steps through
+time doing rank-1 updates (VPU) and a (1 x dh) x (dh x dh) contraction (MXU).
+The chunked layout keeps r/k/v/w tiles VMEM-resident ((chunk, dh) each), so
+HBM traffic is linear in T with no (T, T) intermediates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref, s_scr,
+            *, chunk: int):
+    ti = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)  # (1, dh); u.T broadcasts over key dim
+
+    def step(t, _):
+        rt = r_ref[0, 0, t, :].astype(jnp.float32)[None, :]   # (1, dh)
+        kt = k_ref[0, 0, t, :].astype(jnp.float32)[None, :]
+        vt = v_ref[0, 0, t, :].astype(jnp.float32)[None, :]
+        wt = w_ref[0, 0, t, :].astype(jnp.float32)[None, :]
+        kv = kt.T * vt                                         # (dh, dh)
+        s = s_scr[...]
+        out = jax.lax.dot(
+            rt, u.T * kv + s, preferred_element_type=jnp.float32
+        )                                                      # (1, dh)
+        o_ref[0, 0, t, :] = out[0].astype(o_ref.dtype)
+        s_scr[...] = wt.T * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ti == nt - 1)
+    def _finalize():
+        sf_ref[0, 0] = s_scr[...].astype(sf_ref.dtype)
+
+
+def rwkv6_scan(
+    r, k, v, w, u, s0, *, chunk: int = 64, interpret: bool = False,
+):
+    """r/k/v/w: (B, H, T, dh); u: (H, dh); s0: (B, H, dh, dh).
+
+    Returns (out (B, H, T, dh), s_final (B, H, dh, dh)).
+    """
+    B, H, T, dh = r.shape
+    chunk = min(chunk, T)
+    nt = pl.cdiv(T, chunk)
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b, h, ti: (0, h, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b, h, ti: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b, h, ti: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, dh), r.dtype),
+            jax.ShapeDtypeStruct((B, H, dh, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u.reshape(1, H, dh), s0)

@@ -1,0 +1,172 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) this lowers + AOT-compiles the real
+step function on the production mesh (single-pod 16x16 and multi-pod 2x16x16
+over 512 fake host devices), records memory_analysis / cost_analysis /
+collective traffic, and writes one JSON per combo under experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, applicable, get_arch, get_shape  # noqa: E402
+from repro.distributed import meshes as M          # noqa: E402
+from repro.distributed.ctx import sharding_hints    # noqa: E402
+from repro.distributed.xla_stats import (          # noqa: E402
+    collective_stats,
+    cost_stats,
+    memory_stats,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import step_and_specs       # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def shardings_for(kind, cfg, args, mesh):
+    """(in_shardings, out_shardings) PartitionSpec trees for the step args."""
+    p_spec = M.param_shardings(args[0], mesh)
+    if kind == "train":
+        o_spec = {
+            "m": M.param_shardings(args[1]["m"], mesh),
+            "v": M.param_shardings(args[1]["v"], mesh),
+            "step": jax.sharding.PartitionSpec(),
+        }
+        b_spec = M.batch_shardings(args[2], mesh)
+        in_s = (p_spec, o_spec, b_spec)
+        stats_spec = jax.tree.map(
+            lambda *_: jax.sharding.PartitionSpec(), {"loss": 0, "ce_loss": 0,
+                                                      "aux_loss": 0,
+                                                      "grad_norm": 0, "lr": 0}
+        )
+        out_s = (p_spec, o_spec, stats_spec)
+    elif kind == "prefill":
+        p_spec = M.param_shardings(args[0], mesh, mode="serve")
+        b_spec = M.batch_shardings(args[1], mesh)
+        in_s = (p_spec, b_spec)
+        out_s = None  # let GSPMD place the fresh cache + last logits
+    else:  # decode
+        # serve-mode (TP-only) weights pay off when the batch spreads work
+        # over the data axis; at B=1 (long_500k) the 2-D layout measured
+        # better — keep it there (EXPERIMENTS.md §Perf)
+        B = args[2].shape[0]
+        dp_n = M.axis_size(mesh, M.dp_axes(mesh))
+        p_mode = "serve" if B >= dp_n else "train"
+        p_spec = M.param_shardings(args[0], mesh, mode=p_mode)
+        c_spec = M.cache_shardings(args[1], mesh, cfg)
+        t_spec = M.batch_shardings({"tokens": args[2]}, mesh)["tokens"]
+        in_s = (p_spec, c_spec, t_spec)
+        # logits stay vocab-sharded (sampling reduces per-shard); gathering
+        # the (B, V) f32 logits to every chip is pure waste
+        V = cfg.vocab_size
+        m_n = mesh.shape[M.MODEL_AXIS]
+        lspec = jax.sharding.PartitionSpec(None, M.MODEL_AXIS) \
+            if V % m_n == 0 else jax.sharding.PartitionSpec()
+        out_s = (lspec, c_spec)
+    if kind == "prefill":
+        return in_s, None
+    return in_s, out_s
+
+
+def run_one(arch_name: str, shape_name: str, multi_pod: bool,
+            out_dir: str = OUT_DIR) -> dict:
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "status": "skipped",
+    }
+    if not applicable(cfg, shape):
+        rec["note"] = "skipped per DESIGN.md arch-applicability"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    dp = M.axis_size(mesh, M.dp_axes(mesh))
+    step, args, kind = step_and_specs(cfg, shape, dp=dp)
+    in_s, out_s = shardings_for(kind, cfg, args, mesh)
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[kind]
+    t0 = time.perf_counter()
+    roles = ("residual", "moe") if kind == "train" else ()
+    with mesh, sharding_hints(mesh, roles=roles):
+        in_named = M.named(in_s, mesh)
+        kw = {}
+        if out_s is not None:
+            kw["out_shardings"] = M.named(out_s, mesh)
+        if donate:
+            kw["donate_argnums"] = donate
+        lowered = jax.jit(step, in_shardings=in_named, **kw).lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+    mem = memory_stats(compiled)
+    cost = cost_stats(compiled)
+    coll = collective_stats(compiled.as_text())
+    rec.update(
+        status="ok", kind=kind, chips=chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=mem, cost=cost, collectives=coll,
+        fits_16gb=mem["peak_bytes_per_device"] < 16 * 1024**3,
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch_name}_{shape_name}_{mesh_name}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ns = ap.parse_args()
+
+    archs = sorted(ARCHS) if (ns.all or ns.arch is None) else [ns.arch]
+    shapes = sorted(SHAPES) if (ns.all or ns.shape is None) else [ns.shape]
+    mesh_opts = {"single": [False], "multi": [True], "both": [False, True]}[
+        ns.mesh
+    ]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in mesh_opts:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                try:
+                    rec = run_one(arch, shape, mp, ns.out)
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    print(f"FAIL {tag}: {e}")
+                    traceback.print_exc()
+                    continue
+                if rec["status"] == "skipped":
+                    print(f"SKIP {tag}: {rec.get('note', '')}")
+                    continue
+                mem_gb = rec["memory"]["peak_bytes_per_device"] / 1024**3
+                print(
+                    f"OK   {tag}: kind={rec['kind']} "
+                    f"mem/dev={mem_gb:.2f}GiB fits={rec['fits_16gb']} "
+                    f"flops={rec['cost']['flops']:.3e} "
+                    f"coll={rec['collectives']['total_bytes']:.3e}B "
+                    f"compile={rec['compile_s']}s"
+                )
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Serving launcher: stand up a deployment (any SI x TD combo) and drive it
+with a synthetic workload.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \\
+      --si si3_dl_server --processing continuous_batch --requests 10
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_arch
+from repro.core.add import (
+    Containerization,
+    Deployment,
+    ModelFormat,
+    Protocol,
+    RequestProcessing,
+    ServingInfrastructure,
+)
+from repro.energy.report import build_green_report
+from repro.models import init_params
+from repro.serving.container import generate_artifact
+from repro.serving.request import synth_workload
+from repro.serving.server import ModelPackage, ServingServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--si", default="si3_dl_server",
+                    choices=[e.value for e in ServingInfrastructure])
+    ap.add_argument("--processing", default="dynamic_batch",
+                    choices=[e.value for e in RequestProcessing])
+    ap.add_argument("--container", default="none",
+                    choices=[e.value for e in Containerization])
+    ap.add_argument("--format", default="rsm",
+                    choices=[e.value for e in ModelFormat])
+    ap.add_argument("--protocol", default="grpc_binary",
+                    choices=[e.value for e in Protocol])
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--emit-artifact", action="store_true")
+    ns = ap.parse_args()
+
+    arch = ns.arch + ("-smoke" if ns.smoke and not ns.arch.endswith("-smoke")
+                      else "")
+    cfg = get_arch(arch)
+    dep = Deployment(
+        arch=arch,
+        si=ServingInfrastructure(ns.si),
+        containerization=Containerization(ns.container),
+        model_format=ModelFormat(ns.format),
+        request_processing=RequestProcessing(ns.processing),
+        protocol=Protocol(ns.protocol),
+        max_batch=1 if ns.processing == "realtime" else ns.max_batch,
+        max_seq=ns.max_seq,
+    ).require_valid()
+    print(dep.describe())
+    if ns.emit_artifact:
+        print(generate_artifact(dep))
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    srv = ServingServer(dep)
+    endpoint = srv.register(ModelPackage(name="m", arch=arch, params=params,
+                                         max_seq=ns.max_seq))
+    print(f"endpoint: {endpoint}")
+    srv.warmup("m", dep.max_batch, 16)
+    wl = synth_workload(ns.requests, 14, 6, cfg.vocab_size,
+                        rate_per_s=ns.rate, seed=0)
+    wire = [(r.arrival_s,
+             srv.codec.encode_request(r.rid, r.prompt, r.max_new_tokens))
+            for r in wl]
+    out, metrics, stats = srv.handle_wire("m", wire)
+    print(metrics.summary())
+    print(f"wire bytes: in={stats.request_bytes} out={stats.response_bytes}")
+    print(build_green_report(dep, metrics).table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""ShapeDtypeStruct input specs + step builders for every (arch x shape).
+
+``input_specs`` produces weak-type-correct, shardable stand-ins (no device
+allocation) for the arguments of the step a shape exercises:
+
+  train_4k                  -> train_step(params, opt_state, batch)
+  prefill_32k               -> prefill_step(params, batch)
+  decode_32k / long_500k    -> serve_step(params, cache, tokens)
+
+Modality frontends are stubs per assignment: audio supplies (B, 1500, D)
+frame embeddings, VLM supplies merged token+patch embeddings + M-RoPE ids.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import transformer
+from repro.training.optim import AdamWConfig, init_opt_state
+from repro.training.trainer import make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+
+
+def opt_struct(cfg: ModelConfig, opt_dtype=jnp.bfloat16):
+    p = params_struct(cfg)
+    return jax.eval_shape(functools.partial(init_opt_state, dtype=opt_dtype), p)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_seq)
+    )
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), cfg.jnp_dtype)
+    if cfg.family == "vlm":
+        # stub frontend: merged token+patch embeddings and 3-component M-RoPE
+        # position ids (t/h/w) — see DESIGN.md (the one allowed stub)
+        batch["embeds"] = _sds((B, S, cfg.d_model), cfg.jnp_dtype)
+        batch["positions"] = _sds((3, B, S), jnp.int32)
+        del batch["tokens"]
+        if with_labels:
+            batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig, dp: int) -> int:
+    """Grad-accum factor: keep per-device microbatch tokens <= ~8k."""
+    tokens_per_dev = shape.global_batch * shape.seq_len // max(dp, 1)
+    mb = max(1, tokens_per_dev // 8192)
+    # must divide the per-step batch
+    while shape.global_batch % mb or (shape.global_batch // mb) % dp:
+        mb -= 1
+    return max(mb, 1)
+
+
+def step_and_specs(
+    cfg: ModelConfig, shape: ShapeConfig, *, dp: int = 1,
+    opt_dtype=jnp.bfloat16, microbatches: int | None = None,
+) -> Tuple[Callable, Tuple, str]:
+    """Returns (step_fn, arg_structs, kind)."""
+    if shape.kind == "train":
+        if microbatches is None:
+            microbatches = microbatches_for(cfg, shape, dp)
+        step = make_train_step(
+            cfg, AdamWConfig(), remat=True, microbatches=microbatches
+        )
+        args = (
+            params_struct(cfg),
+            opt_struct(cfg, opt_dtype),
+            batch_struct(cfg, shape, with_labels=True),
+        )
+        return step, args, "train"
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return transformer.prefill(params, cfg, batch, max_seq=shape.seq_len)
+
+        args = (
+            params_struct(cfg),
+            batch_struct(cfg, shape, with_labels=False),
+        )
+        return prefill_step, args, "prefill"
+
+    # decode: one new token against a full cache. NOTE: the lockstep
+    # uniform_lengths DUS variant measured WORSE than the flagged scatter
+    # (GSPMD lowers sharded-dim DUS to full-cache selects) — see
+    # EXPERIMENTS.md #Perf iteration log; ragged scatter is the default.
+    def serve_step(params, cache, tokens):
+        return transformer.decode_step(params, cfg, cache, tokens)
+
+    B = shape.global_batch
+    cache = cache_struct(cfg, B, shape.seq_len)
+    args = (params_struct(cfg), cache, _sds((B,), jnp.int32))
+    return serve_step, args, "decode"

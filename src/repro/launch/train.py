@@ -1,0 +1,76 @@
+"""Distributed training launcher.
+
+Single-host execution for smoke scales; the same step/shardings the dry-run
+verifies at production scale.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \\
+      --steps 50 --batch 8 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optim import AdamWConfig, init_opt_state
+from repro.training.trainer import make_train_step
+from repro.models import transformer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ns = ap.parse_args()
+
+    arch = ns.arch + ("-smoke" if ns.smoke and not ns.arch.endswith("-smoke")
+                      else "")
+    cfg = get_arch(arch)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"devices={jax.device_count()}")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=ns.seq,
+                      batch_size=ns.batch)
+    data = SyntheticLM(dcfg).batches()
+    opt_cfg = AdamWConfig(lr=ns.lr, warmup_steps=max(ns.steps // 10, 1),
+                          total_steps=ns.steps)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(
+        make_train_step(cfg, opt_cfg, remat=ns.remat,
+                        microbatches=ns.microbatches),
+        donate_argnums=(0, 1),
+    )
+    t0 = time.time()
+    for step in range(ns.steps):
+        params, opt_state, stats = step_fn(params, opt_state, next(data))
+        if step % ns.log_every == 0 or step == ns.steps - 1:
+            print(f"step {step:>5} loss {float(stats['loss']):.4f} "
+                  f"lr {float(stats['lr']):.2e} "
+                  f"gnorm {float(stats['grad_norm']):.3f}")
+    dt = time.time() - t0
+    toks = ns.steps * ns.batch * ns.seq
+    print(f"done: {toks} tokens in {dt:.1f}s ({toks/dt:.0f} tok/s)")
+    if ns.ckpt_dir:
+        path = f"{ns.ckpt_dir}/step_{ns.steps}"
+        n = save_checkpoint(path, params, opt_state, ns.steps,
+                            {"arch": cfg.name})
+        print(f"checkpoint {path} ({n/1e6:.1f} MB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Core layers: norms, MLP variants, embeddings. Pure functional JAX."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+def group_norm_heads(x, weight, bias, num_heads: int, eps: float = 1e-5):
+    """Per-head group norm over (..., H*dh) (used by RWKV6 output)."""
+    *lead, d = x.shape
+    dtype = x.dtype
+    x = x.reshape(*lead, num_heads, d // num_heads).astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x.reshape(*lead, d)
+    return (x * weight + bias).astype(dtype)
+
+
+def dense(x, w, b=None):
+    if hasattr(w, "wq"):  # QTensor (TD2 rsm_int8 serving format)
+        from repro.kernels import ops  # local import avoids a cycle
+
+        *lead, d = x.shape
+        y = ops.int8_matmul(x.reshape(-1, d), w.wq, w.scales).reshape(
+            *lead, w.wq.shape[1]
+        )
+    else:
+        y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+# --- MLP variants -------------------------------------------------------------
+
+
+def mlp_swiglu(x, wi_gate, wi_up, wo):
+    h = jax.nn.silu(dense(x, wi_gate)) * dense(x, wi_up)
+    return dense(h, wo)
+
+
+def mlp_relu2(x, wi, wo):
+    """Squared-ReLU MLP (nemotron/minitron)."""
+    h = jnp.square(jax.nn.relu(dense(x, wi)))
+    return dense(h, wo)
+
+
+def mlp_gelu(x, wi, bi, wo, bo):
+    h = jax.nn.gelu(dense(x, wi, bi), approximate=True)
+    return dense(h, wo, bo)
+
+
+def apply_mlp(p, x, kind: str):
+    if kind == "swiglu":
+        return mlp_swiglu(x, p["wi_gate"], p["wi_up"], p["wo"])
+    if kind == "relu2":
+        return mlp_relu2(x, p["wi"], p["wo"])
+    if kind == "gelu":
+        return mlp_gelu(x, p["wi"], p["bi"], p["wo"], p["bo"])
+    raise ValueError(kind)
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    if kind == "swiglu":
+        return {
+            "wi_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+            "wi_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+            "wo": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+        }
+    if kind == "relu2":
+        return {
+            "wi": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+            "wo": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+        }
+    if kind == "gelu":
+        return {
+            "wi": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+            "bi": jnp.zeros((d_ff,), dtype),
+            "wo": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+            "bo": jnp.zeros((d_model,), dtype),
+        }
+    raise ValueError(kind)
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table):
+    """x: (..., D) @ (D, V) -> logits in f32."""
+    return jnp.einsum(
+        "...d,dv->...v", x, table, preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based scatter dispatch.
+
+Design (TPU-native, GShard/MaxText-lineage):
+  * router top-k over E experts, probs renormalized over the chosen k;
+  * position-in-expert via cumsum of the (slot-major) expert mask, tokens
+    beyond ``capacity`` are dropped (capacity_factor controls slack);
+  * tokens are scattered into an (E*C, D) buffer -> einsum with the stacked
+    expert weights (expert axis shards over the ``model``/``expert`` mesh
+    axis) -> gathered back with combine weights.
+
+FLOPs scale with E*C ~= k*T*capacity_factor (active params), NOT with E*T —
+this keeps the 6*N_active*D MODEL_FLOPS ratio honest in the roofline.
+
+The dense-residual variant (arctic) adds a small always-on MLP in parallel.
+An aux load-balance loss (Switch-style) is returned for training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+from repro.models import layers
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    E = num_experts
+    return {
+        "router": (jax.random.normal(k1, (d_model, E)) * s_in).astype(jnp.float32),
+        "wi_gate": (jax.random.normal(k2, (E, d_model, d_ff)) * s_in).astype(dtype),
+        "wi_up": (jax.random.normal(k3, (E, d_model, d_ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k4, (E, d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def capacity(num_tokens: int, num_experts: int, k: int, factor: float) -> int:
+    c = int(num_tokens * k * factor / num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor 8
+
+
+def route(router_w, x, k: int):
+    """x: (T, D) -> (gates (T,k) f32, idx (T,k) i32, aux_loss scalar)."""
+    logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), router_w
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load balance: E * sum_e fraction_tokens_e * mean_prob_e
+    E = router_w.shape[1]
+    me = probs.mean(axis=0)                                   # (E,)
+    onehot = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)  # top-1 assignment
+    ce = onehot.mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def moe_ffn(p, x, *, experts_per_token: int, capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    E = p["router"].shape[1]
+    k = experts_per_token
+    C = capacity(T, E, k, capacity_factor)
+
+    gates, idx, aux = route(p["router"], xf, k)
+
+    # --- position-in-expert, slot-major priority (top-1 choices first) -------
+    # flat over (k, T): slot j of every token before slot j+1 of any token.
+    idx_km = idx.T.reshape(k * T)                 # (kT,) expert ids, slot-major
+    onehot = jax.nn.one_hot(idx_km, E, dtype=jnp.int32)          # (kT, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                          # 0-based
+    pos_in_e = jnp.take_along_axis(pos, idx_km[:, None], axis=1)[:, 0]  # (kT,)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, idx_km * C + pos_in_e, E * C)          # drop -> trash
+
+    # --- dispatch: scatter tokens into (E*C (+1 trash), D) -------------------
+    # capacity rows are sharded over the data axis (see ctx.constrain): the
+    # scatter then moves only real token rows between shards (all-to-all-ish)
+    # instead of materializing + all-reducing the whole f32 dispatch buffer.
+    xk = jnp.broadcast_to(xf[None], (k, T, D)).reshape(k * T, D)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(xk)
+    xe = ctx.constrain(buf[: E * C].reshape(E, C, D), (None, "dp", None),
+                       role="moe")
+
+    # --- expert computation (E shards over the expert/model mesh axis) -------
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", xe, p["wi_gate"])
+    ) * jnp.einsum("ecd,edf->ecf", xe, p["wi_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])                   # (E, C, D)
+    ye = ctx.constrain(ye, (None, "dp", None), role="moe")
+
+    # --- combine: gather back, weight by gate, sum over slots ----------------
+    # keep the gathered rows in the model dtype: XLA hoists dtype converts
+    # above collectives, so a f32 cast here would DOUBLE the combine's
+    # cross-shard traffic (measured: see EXPERIMENTS.md §Perf)
+    yflat = jnp.concatenate([ye.reshape(E * C, D), jnp.zeros((1, D), ye.dtype)])
+    yk = yflat[slot].reshape(k, T, D)
+    gk = (gates.T.reshape(k * T) * keep).reshape(k, T)
+    out = jnp.einsum("ktd,kt->td", yk, gk.astype(yk.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, D).astype(x.dtype), aux
+
+
+def apply_moe_block(p, x, cfg):
+    """MoE FFN (+ optional arctic dense residual). Returns (out, aux)."""
+    out, aux = moe_ffn(
+        p["moe"],
+        x,
+        experts_per_token=cfg.experts_per_token,
+        capacity_factor=cfg.capacity_factor,
+    )
+    if cfg.moe_dense_residual:
+        out = out + layers.apply_mlp(p["dense_mlp"], x, "swiglu")
+    return out, aux
+
+
+def init_moe_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"moe": init_moe(k1, cfg.d_model, cfg.d_ff, cfg.num_experts, dtype)}
+    if cfg.moe_dense_residual:
+        p["dense_mlp"] = layers.init_mlp(k2, cfg.d_model, cfg.d_ff, "swiglu", dtype)
+    return p

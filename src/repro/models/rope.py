@@ -1,0 +1,55 @@
+"""Rotary position embeddings: standard RoPE + multimodal M-RoPE (qwen2-vl)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _inv_freq(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., S) int -> angles (..., S, head_dim//2) f32."""
+    inv = _inv_freq(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(positions, head_dim: int, theta: float, sections):
+    """positions: (3, B, S) (t/h/w ids) -> (B, S, head_dim//2).
+
+    M-RoPE (qwen2-vl): the rotary frequency axis is split into three sections;
+    each section takes its position id from the matching component (temporal /
+    height / width). Text tokens carry identical t==h==w ids, reducing to RoPE.
+    """
+    assert positions.shape[0] == 3
+    inv = _inv_freq(head_dim, theta)  # (hd/2,)
+    assert sum(sections) == inv.shape[0], (sections, inv.shape)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (3, B, S, hd/2)
+    sec_idx = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=inv.shape[0]
+    )  # (hd/2,) -> which component supplies each frequency
+    onehot = _one_hot(sec_idx, 3)  # (hd/2, 3)
+    return jnp.einsum("sbtf,fs->btf", ang, onehot)
+
+
+def _one_hot(idx, n):
+    return (idx[:, None] == jnp.arange(n)[None, :]).astype(jnp.float32)
+
+
+def apply_rotary(x, angles):
+    """x: (B, S, H, dh), angles: (B, S, dh//2) -> rotated x (same dtype)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def positions_default(batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))

@@ -1,0 +1,151 @@
+"""SI4 'End-to-end ML cloud service': registry + autoscaled managed endpoints.
+
+The SageMaker/Vertex analogue: models live in a registry (persisted via the
+TD2 formats), ``deploy`` creates a managed endpoint with replicas, and an
+autoscaling policy sizes the replica pool from the offered load.  Replication
+is simulated in virtual time (round-robin dispatch, merged metrics) with the
+idle energy of provisioned-but-underutilized replicas charged to the endpoint
+— the "ready-to-use but you pay for the abstraction" trade-off the paper
+describes for SI4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_arch
+from repro.core.add import Deployment, ModelFormat
+from repro.energy.hw import HOST_CPU_POWER_W
+from repro.models import init_params
+from repro.serving import formats
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.server import ModelPackage, ServingServer
+
+
+class ModelRegistry:
+    """Versioned model store backed by the TD2 serialization formats."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, name: str, version: int) -> str:
+        return os.path.join(self.root, f"{name}-v{version}")
+
+    def push(self, name: str, version: int, params, fmt: ModelFormat) -> int:
+        path = self._path(name, version)
+        if fmt == ModelFormat.NATIVE:
+            return formats.save_native(params, path)
+        return formats.save_rsm(
+            params, path, quantize=(fmt == ModelFormat.RSM_INT8)
+        )
+
+    def pull(self, name: str, version: int, template, fmt: ModelFormat,
+             as_qtensor: bool = False):
+        path = self._path(name, version)
+        if fmt == ModelFormat.NATIVE:
+            return formats.load_native(template, path)
+        return formats.load_rsm(template, path, as_qtensor=as_qtensor)
+
+    def versions(self, name: str) -> List[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith(name + "-v"):
+                out.append(int(d.split("-v")[-1].split(".")[0]))
+        return sorted(set(out))
+
+
+@dataclasses.dataclass
+class AutoscalePolicy:
+    target_utilization: float = 0.7
+    min_replicas: int = 1
+    max_replicas: int = 4
+
+    def replicas_for(self, rate_per_s: float, service_time_s: float) -> int:
+        """M/M/c-style sizing: enough replicas to keep utilization at target."""
+        needed = rate_per_s * service_time_s / self.target_utilization
+        return max(self.min_replicas,
+                   min(self.max_replicas, math.ceil(needed)))
+
+
+class CloudService:
+    """Managed endpoints on top of the registry (SI4)."""
+
+    def __init__(self, registry_root: str):
+        self.registry = ModelRegistry(registry_root)
+        self.endpoints: Dict[str, dict] = {}
+
+    def upload_model(self, name: str, version: int, params,
+                     fmt: ModelFormat) -> int:
+        return self.registry.push(name, version, params, fmt)
+
+    def deploy(self, name: str, version: int, deployment: Deployment,
+               template_params=None) -> str:
+        """Creates a managed endpoint; the user never builds an API (SI4)."""
+        deployment.require_valid()
+        cfg = get_arch(deployment.arch)
+        if template_params is None:
+            import jax
+
+            template_params = init_params(cfg, jax.random.PRNGKey(0))
+        params = self.registry.pull(
+            name, version, template_params, deployment.model_format,
+            as_qtensor=(deployment.model_format == ModelFormat.RSM_INT8),
+        )
+        policy = AutoscalePolicy(
+            min_replicas=deployment.min_replicas,
+            max_replicas=deployment.max_replicas,
+        )
+        # replicas share one ServingServer (same compiled executable) and are
+        # simulated by workload partitioning in virtual time
+        server = ServingServer(deployment)
+        server.register(ModelPackage(name=name, arch=deployment.arch,
+                                     params=params, version=version,
+                                     max_seq=deployment.max_seq))
+        self.endpoints[name] = {
+            "server": server, "policy": policy, "deployment": deployment,
+        }
+        return f"https://cloud.local/endpoints/{name}"
+
+    def predict(self, name: str, workload: List[Request],
+                service_time_hint_s: Optional[float] = None) -> ServingMetrics:
+        ep = self.endpoints[name]
+        server: ServingServer = ep["server"]
+        policy: AutoscalePolicy = ep["policy"]
+        if len(workload) > 1:
+            span = max(r.arrival_s for r in workload) - min(
+                r.arrival_s for r in workload
+            )
+            rate = len(workload) / max(span, 1e-6)
+        else:
+            rate = 1.0
+        hint = service_time_hint_s or 0.1
+        R = policy.replicas_for(rate, hint)
+        ep["replicas"] = R
+        # round-robin partition across replicas; replicas run in parallel
+        # virtual time, so merged metrics keep per-request latencies
+        parts: List[List[Request]] = [[] for _ in range(R)]
+        for i, req in enumerate(sorted(workload, key=lambda r: r.arrival_s)):
+            parts[i % R].append(req)
+        merged_responses = []
+        wall = 0.0
+        energy = 0.0
+        tokens = 0
+        span_end = 0.0
+        for part in parts:
+            if not part:
+                continue
+            m = server.handle(name, part)
+            merged_responses.extend(m.responses)
+            wall += m.wall_compute_s
+            energy += m.energy_j
+            tokens += m.total_tokens
+            span_end = max(span_end, max(r.done_s for r in m.responses))
+        # idle energy of provisioned replicas (the SI4 abstraction cost)
+        busy = wall / max(R, 1)
+        idle_s = max(0.0, span_end * R - wall)
+        energy += idle_s * HOST_CPU_POWER_W * 0.3  # idle draw ~30% of active
+        return ServingMetrics(merged_responses, wall, energy, tokens)

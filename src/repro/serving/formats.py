@@ -1,0 +1,209 @@
+"""TD2 'Model format': the serialized forms a model is served from.
+
+Three formats, mirroring the paper's native / converted / optimized split:
+
+  * ``native``   — framework-native: one ``.npz`` of the flattened pytree
+                   (the TF-SavedModel / torch state_dict analogue).
+  * ``rsm``      — repro-saved-model: a manifest.json (tree structure, dtypes,
+                   shapes, offsets) + a single raw tensors.bin, mmap-friendly
+                   zero-copy load (the ONNX/TorchScript-style interchange
+                   format; interoperable because the manifest is the contract).
+  * ``rsm_int8`` — optimized serving format: 2-D matmul weights stored as
+                   per-output-channel symmetric int8 + f32 scales (the
+                   TensorRT/TFLite-engine analogue).  Loads either dequantized
+                   (portable path) or as ``QTensor`` leaves consumed by the
+                   Pallas ``int8_matmul`` kernel (runtime-engine path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.int8_matmul import quantize_int8
+
+# -- QTensor: a quantized leaf the model's dense() dispatches on ---------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    wq: Any                       # (D, N) int8
+    scales: Any                   # (N,) f32
+
+    @property
+    def shape(self):
+        return self.wq.shape
+
+    @property
+    def ndim(self):
+        return self.wq.ndim
+
+    def dequant(self):
+        return (
+            self.wq.astype(jnp.float32) * self.scales[..., None, :]
+        ).astype(jnp.bfloat16)
+
+    def tree_flatten(self):
+        return (self.wq, self.scales), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _flatten(params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        leaves.append(jnp.asarray(flat[key]))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# -- native (npz) ---------------------------------------------------------------
+
+
+def save_native(params, path: str) -> int:
+    flat = {
+        k: (v.astype(np.float32) if v.dtype == jnp.bfloat16 else v)
+        for k, v in _flatten(params).items()
+    }
+    np.savez(path, **flat)
+    return os.path.getsize(path if path.endswith(".npz") else path + ".npz")
+
+
+def load_native(template, path: str):
+    if not path.endswith(".npz"):
+        path += ".npz"
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(template, flat)
+
+
+# -- rsm (manifest + raw bin) ----------------------------------------------------
+
+
+def save_rsm(params, path: str, quantize: bool = False) -> int:
+    """Returns total bytes on disk. ``quantize`` -> rsm_int8."""
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    manifest = {"format": "rsm_int8" if quantize else "rsm", "tensors": {}}
+    offset = 0
+    blobs = []
+    for key, arr in sorted(flat.items()):
+        quantizable = (
+            quantize
+            and arr.ndim in (2, 3)  # (D, N) or stacked-layers (L, D, N)
+            and arr.shape[-2] >= 8
+            and str(arr.dtype) in ("float32", "float16", "bfloat16")
+            # embeddings are gathered (not matmul'd) and routers need f32
+            # logits — keep them full precision
+            and not any(t in key for t in ("embed", "lm_head", "router"))
+        )
+        if quantizable:
+            wq, scales = quantize_int8(jnp.asarray(arr))
+            wq, scales = np.asarray(wq), np.asarray(scales)
+            entry = {
+                "dtype": "int8", "shape": list(arr.shape), "offset": offset,
+                "quantized": True, "scales_offset": offset + wq.nbytes,
+                "orig_dtype": str(arr.dtype),
+            }
+            blobs += [wq.tobytes(), scales.tobytes()]
+            offset += wq.nbytes + scales.nbytes
+        else:
+            a = arr.astype(np.float32) if str(arr.dtype) == "bfloat16" else arr
+            entry = {
+                "dtype": str(a.dtype), "shape": list(arr.shape),
+                "offset": offset, "quantized": False,
+                "orig_dtype": str(arr.dtype),
+            }
+            blobs.append(a.tobytes())
+            offset += a.nbytes
+        manifest["tensors"][key] = entry
+    with open(os.path.join(path, "tensors.bin"), "wb") as f:
+        for b in blobs:
+            f.write(b)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return sum(
+        os.path.getsize(os.path.join(path, n))
+        for n in ("tensors.bin", "manifest.json")
+    )
+
+
+def load_rsm(template, path: str, as_qtensor: bool = False):
+    """Load an rsm/rsm_int8 directory.
+
+    as_qtensor=True keeps int8 weights as QTensor leaves (runtime-engine
+    path); otherwise they are dequantized to the original dtype (portable).
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    buf = np.memmap(os.path.join(path, "tensors.bin"), dtype=np.uint8, mode="r")
+
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path_keys, tmpl_leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys
+        )
+        e = manifest["tensors"][key]
+        shape = tuple(e["shape"])
+        if e["quantized"]:
+            n = int(np.prod(shape))
+            wq = np.frombuffer(
+                buf, np.int8, count=n, offset=e["offset"]
+            ).reshape(shape)
+            scales_shape = shape[:-2] + shape[-1:]
+            scales = np.frombuffer(
+                buf, np.float32, count=int(np.prod(scales_shape)),
+                offset=e["scales_offset"],
+            ).reshape(scales_shape)
+            if as_qtensor:
+                leaves.append(QTensor(jnp.asarray(wq), jnp.asarray(scales)))
+            else:
+                leaves.append(
+                    (jnp.asarray(wq, jnp.float32)
+                     * jnp.asarray(scales)[..., None, :])
+                    .astype(jnp.dtype(e["orig_dtype"]))
+                )
+        else:
+            dt = np.dtype(e["dtype"])
+            n = int(np.prod(shape)) if shape else 1
+            arr = np.frombuffer(buf, dt, count=n, offset=e["offset"]).reshape(
+                shape
+            )
+            leaves.append(jnp.asarray(arr, jnp.dtype(e["orig_dtype"])))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def format_size_bytes(params, fmt: str, tmpdir: str) -> int:
+    """Bytes-on-disk for a format (TD2 interoperability/footprint metric)."""
+    if fmt == "native":
+        return save_native(params, os.path.join(tmpdir, "m.npz"))
+    if fmt == "rsm":
+        return save_rsm(params, os.path.join(tmpdir, "rsm"), quantize=False)
+    if fmt == "rsm_int8":
+        return save_rsm(params, os.path.join(tmpdir, "rsm8"), quantize=True)
+    raise ValueError(fmt)

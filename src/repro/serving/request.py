@@ -1,0 +1,113 @@
+"""Serving request/response types and metrics."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32 token ids
+    max_new_tokens: int = 16
+    arrival_s: float = 0.0             # workload timeline (virtual clock)
+    slo_ms: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    tokens: np.ndarray                 # (n,) generated ids
+    arrival_s: float
+    start_s: float                     # compute start (virtual clock)
+    first_token_s: float               # TTFT point
+    done_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        return self.start_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    responses: List[Response]
+    wall_compute_s: float              # actual compute time spent (host)
+    energy_j: float                    # host-proxy measured* energy
+    total_tokens: int
+
+    @property
+    def throughput_tok_s(self) -> float:
+        if not self.responses:
+            return 0.0
+        span = max(r.done_s for r in self.responses) - min(
+            r.arrival_s for r in self.responses
+        )
+        return self.total_tokens / max(span, 1e-9)
+
+    def latency_percentile(self, p: float) -> float:
+        lats = sorted(r.latency_s for r in self.responses)
+        if not lats:
+            return 0.0
+        i = min(int(p / 100 * len(lats)), len(lats) - 1)
+        return lats[i]
+
+    @property
+    def mean_latency_s(self) -> float:
+        if not self.responses:
+            return 0.0
+        return float(np.mean([r.latency_s for r in self.responses]))
+
+    @property
+    def mean_ttft_s(self) -> float:
+        if not self.responses:
+            return 0.0
+        return float(np.mean([r.ttft_s for r in self.responses]))
+
+    @property
+    def energy_per_request_j(self) -> float:
+        return self.energy_j / max(len(self.responses), 1)
+
+    @property
+    def energy_per_token_j(self) -> float:
+        return self.energy_j / max(self.total_tokens, 1)
+
+    def summary(self) -> dict:
+        return {
+            "n_requests": len(self.responses),
+            "mean_latency_s": round(self.mean_latency_s, 6),
+            "p95_latency_s": round(self.latency_percentile(95), 6),
+            "mean_ttft_s": round(self.mean_ttft_s, 6),
+            "throughput_tok_s": round(self.throughput_tok_s, 3),
+            "energy_per_request_j": round(self.energy_per_request_j, 6),
+            "energy_per_token_j": round(self.energy_per_token_j, 6),
+        }
+
+
+def synth_workload(
+    n: int, prompt_len: int, max_new: int, vocab: int, rate_per_s: float,
+    seed: int = 0,
+) -> List[Request]:
+    """Poisson arrivals, uniform random prompts (deterministic given seed)."""
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n)
+    t = np.cumsum(gaps) - gaps[0]
+    return [
+        Request(
+            rid=i,
+            prompt=rng.randint(0, vocab, size=prompt_len).astype(np.int32),
+            max_new_tokens=max_new,
+            arrival_s=float(t[i]),
+        )
+        for i in range(n)
+    ]

@@ -1,0 +1,111 @@
+"""SI3 'DL-specific software': a packaged model server.
+
+The TF-Serving/TorchServe/Triton analogue: models are *packaged* (manifest +
+handler), the server owns the API (no hand-built web layer), configures an
+endpoint per model, applies the TD3 batching policy, and speaks the TD4 wire
+codec.  Contrast with SI1/SI2 where the practitioner wires the engine to a
+web framework manually.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import get_arch
+from repro.core.add import (
+    Deployment,
+    ModelFormat,
+    Protocol,
+    RequestProcessing,
+    ServingInfrastructure,
+)
+from repro.core.engines import CompiledEngine, EagerEngine, Engine
+from repro.serving.codecs import make_codec
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.scheduler import make_scheduler
+
+
+@dataclasses.dataclass
+class ModelPackage:
+    """What a practitioner hands to the DL-serving software."""
+
+    name: str
+    arch: str
+    params: object
+    version: int = 1
+    handler: str = "lm_generate"      # packaged pre/post-processing
+    max_seq: int = 256
+
+
+@dataclasses.dataclass
+class CodecStats:
+    request_bytes: int = 0
+    response_bytes: int = 0
+    encode_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class ServingServer:
+    """One server process hosting N packaged models (SI3)."""
+
+    def __init__(self, deployment: Deployment):
+        deployment.require_valid()
+        self.deployment = deployment
+        self.codec = make_codec(deployment.protocol.value)
+        self.endpoints: Dict[str, Tuple[Engine, object, ModelPackage]] = {}
+
+    # -- packaging / endpoint configuration (the SI3 'no manual API' step) ----
+    def register(self, pkg: ModelPackage) -> str:
+        cfg = get_arch(pkg.arch)
+        dep = self.deployment
+        if dep.si == ServingInfrastructure.SI1_NO_RUNTIME:
+            engine: Engine = EagerEngine(cfg, pkg.params, pkg.max_seq)
+        else:
+            engine = CompiledEngine(cfg, pkg.params, pkg.max_seq)
+        scheduler = make_scheduler(
+            dep.request_processing.value,
+            engine,
+            max_batch=dep.max_batch,
+            timeout_ms=dep.batch_timeout_ms,
+            max_seq=pkg.max_seq,
+        )
+        self.endpoints[pkg.name] = (engine, scheduler, pkg)
+        return f"/v1/models/{pkg.name}:predict"
+
+    def warmup(self, name: str, batch: int, prompt_len: int) -> float:
+        engine, _, _ = self.endpoints[name]
+        return engine.warmup(batch, prompt_len)
+
+    # -- wire-level entry point ------------------------------------------------
+    def handle_wire(
+        self, name: str, wire: List[Tuple[float, bytes]]
+    ) -> Tuple[List[bytes], ServingMetrics, CodecStats]:
+        """wire: [(arrival_s, encoded_request_bytes)] -> encoded responses."""
+        _, scheduler, _ = self.endpoints[name]
+        stats = CodecStats()
+        requests = []
+        for arrival, data in wire:
+            stats.request_bytes += len(data)
+            t0 = time.perf_counter()
+            rid, tokens, max_new = self.codec.decode_request(data)
+            stats.decode_s += time.perf_counter() - t0
+            requests.append(
+                Request(rid=rid, prompt=tokens, max_new_tokens=max_new,
+                        arrival_s=arrival)
+            )
+        metrics = scheduler.run(requests)
+        out = []
+        for resp in metrics.responses:
+            t0 = time.perf_counter()
+            data = self.codec.encode_response(resp.rid, resp.tokens)
+            stats.encode_s += time.perf_counter() - t0
+            stats.response_bytes += len(data)
+            out.append(data)
+        return out, metrics, stats
+
+    # -- object-level entry point (used by SI4 and benchmarks) -----------------
+    def handle(self, name: str, workload: List[Request]) -> ServingMetrics:
+        _, scheduler, _ = self.endpoints[name]
+        return scheduler.run(workload)

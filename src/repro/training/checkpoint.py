@@ -1,0 +1,56 @@
+"""Checkpointing: reuses the TD2 serving formats (one contract everywhere).
+
+A training checkpoint = params (rsm) + optimizer state (rsm) + a step/meta
+json.  The same ``rsm`` manifest that serves the model restores training —
+the interoperability property TD2 is about.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.serving import formats
+
+
+def save_checkpoint(path: str, params, opt_state, step: int,
+                    meta: Optional[Dict[str, Any]] = None) -> int:
+    os.makedirs(path, exist_ok=True)
+    n = formats.save_rsm(params, os.path.join(path, "params"))
+    n += formats.save_rsm(
+        {"m": opt_state["m"], "v": opt_state["v"]},
+        os.path.join(path, "opt"),
+    )
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+    return n
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    params = formats.load_rsm(params_template, os.path.join(path, "params"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    opt_state = None
+    if opt_template is not None:
+        mv = formats.load_rsm(
+            {"m": opt_template["m"], "v": opt_template["v"]},
+            os.path.join(path, "opt"),
+        )
+        opt_state = {
+            "m": mv["m"], "v": mv["v"],
+            "step": jnp.asarray(meta["step"], jnp.int32),
+        }
+    return params, opt_state, meta
+
+
+def latest_checkpoint(root: str) -> Optional[str]:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for d in os.listdir(root):
+        if d.startswith("step_"):
+            steps.append((int(d.split("_")[1]), os.path.join(root, d)))
+    return max(steps)[1] if steps else None

@@ -1,0 +1,104 @@
+"""Training loop: loss, (pjit-able) train_step, gradient accumulation.
+
+``make_train_step`` returns a pure function suitable both for single-device
+smoke training and for pjit with the shardings from repro.distributed — the
+same function the multi-pod dry-run lowers for the ``train_4k`` shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import forward, transformer
+from repro.training.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            aux_weight: float = 1e-2):
+    """Mean next-token cross-entropy (+ MoE load-balance aux)."""
+    out = forward(params, cfg, batch, remat=remat)
+    logits = out["logits"].astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), -1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = -ll.mean()
+    else:
+        loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * out["aux_loss"], {
+        "ce_loss": loss, "aux_loss": out["aux_loss"]
+    }
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    remat: bool = False, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, stats)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # gradient accumulation over the batch axis (usually axis 0; the
+            # M-RoPE position ids carry batch on axis 1: (3, B, S))
+            B = batch["labels"].shape[0]
+
+            def split(x):
+                if x.shape[0] == B:
+                    return x.reshape(microbatches, B // microbatches,
+                                     *x.shape[1:])
+                assert x.ndim >= 2 and x.shape[1] == B, x.shape
+                r = x.reshape(x.shape[0], microbatches, B // microbatches,
+                              *x.shape[2:])
+                return jnp.moveaxis(r, 1, 0)
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc = carry
+                (loss, aux), grads = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), aux
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), auxs = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            aux = jax.tree.map(lambda a: a.mean(), auxs)
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+        params, opt_state, ostats = adamw_update(opt_cfg, params, grads, opt_state)
+        stats = {"loss": loss, **aux, **ostats}
+        return params, opt_state, stats
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, opt_cfg: AdamWConfig, data_iter, steps: int,
+               *, params=None, log_every: int = 10, key=None,
+               callback=None) -> Dict[str, Any]:
+    """Single-host training driver (smoke scale / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params = transformer.init_params(cfg, key)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    history = []
+    for step in range(steps):
+        batch = next(data_iter)
+        params, opt_state, stats = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            rec = {k: float(v) for k, v in stats.items()}
+            rec["step"] = step
+            history.append(rec)
+            if callback:
+                callback(rec)
+    return {"params": params, "opt_state": opt_state, "history": history}

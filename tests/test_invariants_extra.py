@@ -1,0 +1,109 @@
+"""Additional system invariants (fast property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.energy.estimator import RooflineTerms, carbon_g, step_energy_j
+from repro.kernels.int8_matmul import quantize_int8
+from repro.models.moe import capacity, init_moe, moe_ffn, route
+from repro.serving.request import synth_workload
+from repro.serving.scheduler import DynamicBatchScheduler
+
+SETTINGS = dict(max_examples=20, deadline=None)
+KEY = jax.random.PRNGKey
+
+
+# -- int8 quantization error bound ---------------------------------------------
+
+
+@given(d=st.sampled_from([16, 64]), n=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_int8_roundtrip_error_bound(d, n, seed):
+    w = jax.random.normal(KEY(seed % 2**31), (d, n))
+    wq, sc = quantize_int8(w)
+    back = np.asarray(wq, np.float32) * np.asarray(sc)[None, :]
+    # symmetric per-channel: |err| <= scale/2 elementwise
+    err = np.abs(back - np.asarray(w))
+    assert (err <= np.asarray(sc)[None, :] * 0.5 + 1e-7).all()
+
+
+# -- MoE: dropless dispatch-combine is exact ------------------------------------
+
+
+@given(seed=st.integers(0, 2**30))
+@settings(max_examples=10, deadline=None)
+def test_moe_top1_dropless_exact(seed):
+    E, D, F, T = 2, 8, 16, 12
+    p = init_moe(KEY(seed % 2**31), D, F, E, jnp.float32)
+    x = jax.random.normal(KEY((seed + 1) % 2**31), (1, T, D))
+    out, _ = moe_ffn(p, x, experts_per_token=1, capacity_factor=float(E))
+    gates, idx, _ = route(p["router"], x[0], 1)
+    for t in range(T):
+        e = int(idx[t, 0])
+        v = x[0, t]
+        h = jax.nn.silu(v @ p["wi_gate"][e]) * (v @ p["wi_up"][e])
+        want = np.asarray(h @ p["wo"][e]) * float(gates[t, 0])
+        np.testing.assert_allclose(np.asarray(out[0, t]), want, atol=1e-4,
+                                   rtol=1e-4)
+
+
+@given(t=st.integers(8, 4096), e=st.sampled_from([2, 8, 128]),
+       k=st.sampled_from([1, 2]),
+       cf=st.floats(0.5, 8.0))
+@settings(**SETTINGS)
+def test_moe_capacity_bounds(t, e, k, cf):
+    c = capacity(t, e, k, cf)
+    assert c >= 8 and c % 8 == 0
+    # monotone in tokens and slack factor
+    assert capacity(t * 2, e, k, cf) >= c
+    assert capacity(t, e, k, cf * 2) >= c
+    # tight within one rounding unit of the analytic value
+    assert c <= max(8, int(t * k * cf / e) + 8)
+
+
+# -- scheduler FIFO/causality ------------------------------------------------------
+
+
+def test_dynamic_batch_causality_and_fifo():
+    class FakeEngine:
+        cfg = None
+
+        def generate(self, tokens, max_new):
+            import numpy as np
+
+            from repro.core.engines import GenerationResult
+
+            B = tokens.shape[0]
+            return GenerationResult(
+                tokens=np.zeros((B, max_new), np.int32),
+                prefill_s=0.01, decode_s=0.01 * max_new, n_steps=max_new,
+            )
+
+    wl = synth_workload(9, 8, 2, 100, rate_per_s=30, seed=3)
+    m = DynamicBatchScheduler(FakeEngine(), max_batch=4, timeout_ms=5).run(wl)
+    assert len(m.responses) == 9
+    for r in m.responses:
+        assert r.start_s >= r.arrival_s - 1e-9          # causality
+        assert r.done_s >= r.start_s
+    # batches retire in arrival order
+    by_rid = sorted(m.responses, key=lambda r: r.rid)
+    dones = [r.done_s for r in by_rid]
+    assert dones == sorted(dones)
+
+
+# -- energy model -------------------------------------------------------------------
+
+
+@given(flops=st.floats(1e9, 1e16), bts=st.floats(1e6, 1e14),
+       coll=st.floats(0, 1e13))
+@settings(**SETTINGS)
+def test_energy_monotone_in_time(flops, bts, coll):
+    a = RooflineTerms(flops=flops, hbm_bytes=bts, collective_bytes=coll,
+                      chips=256)
+    b = RooflineTerms(flops=flops * 2, hbm_bytes=bts * 2,
+                      collective_bytes=coll * 2, chips=256)
+    assert step_energy_j(b) >= step_energy_j(a) - 1e-9
+    assert carbon_g(step_energy_j(a)) >= 0

@@ -1,0 +1,152 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.add import (
+    Containerization,
+    Deployment,
+    ModelFormat,
+    Protocol,
+    RequestProcessing,
+    ServingInfrastructure,
+)
+from repro.energy.estimator import RooflineTerms, step_energy_j, step_power_w
+from repro.kernels import ops, ref
+from repro.serving.codecs import BinaryCodec, JsonCodec
+from repro.serving.request import synth_workload
+from repro.training.optim import AdamWConfig, schedule_lr
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# -- codecs: roundtrip is identity; binary never larger than json --------------
+
+
+@given(
+    rid=st.integers(0, 2**31 - 1),
+    tokens=st.lists(st.integers(0, 2**31 - 1), min_size=0, max_size=64),
+    max_new=st.integers(1, 4096),
+)
+@settings(**SETTINGS)
+def test_codec_roundtrip(rid, tokens, max_new):
+    arr = np.asarray(tokens, np.int32)
+    for codec in (JsonCodec(), BinaryCodec()):
+        r2, a2, m2 = codec.decode_request(codec.encode_request(rid, arr, max_new))
+        assert r2 == rid and m2 == max_new
+        np.testing.assert_array_equal(a2, arr)
+        r3, a3 = codec.decode_response(codec.encode_response(rid, arr))
+        assert r3 == rid
+        np.testing.assert_array_equal(a3, arr)
+
+
+@given(tokens=st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=128))
+@settings(**SETTINGS)
+def test_binary_never_larger(tokens):
+    arr = np.asarray(tokens, np.int32)
+    j = len(JsonCodec().encode_request(1, arr, 16))
+    b = len(BinaryCodec().encode_request(1, arr, 16))
+    assert b <= j
+
+
+# -- deployment validation ------------------------------------------------------
+
+
+@given(
+    si=st.sampled_from(list(ServingInfrastructure)),
+    cont=st.sampled_from(list(Containerization)),
+    fmt=st.sampled_from(list(ModelFormat)),
+    rp=st.sampled_from(list(RequestProcessing)),
+    proto=st.sampled_from(list(Protocol)),
+    mb=st.integers(1, 64),
+)
+@settings(**SETTINGS)
+def test_deployment_validation_total(si, cont, fmt, rp, proto, mb):
+    """validate() never crashes and is consistent with require_valid()."""
+    dep = Deployment(arch="yi-9b", si=si, containerization=cont,
+                     model_format=fmt, request_processing=rp, protocol=proto,
+                     max_batch=mb)
+    errs = dep.validate()
+    assert isinstance(errs, list)
+    if not errs:
+        dep.require_valid()
+    # realtime with batch>1 must always be rejected
+    if rp == RequestProcessing.REALTIME and mb != 1:
+        assert errs
+
+
+# -- roofline estimator ----------------------------------------------------------
+
+
+@given(
+    flops=st.floats(1e6, 1e18),
+    bts=st.floats(1e3, 1e15),
+    coll=st.floats(0, 1e15),
+    chips=st.sampled_from([1, 16, 256, 512]),
+)
+@settings(**SETTINGS)
+def test_roofline_invariants(flops, bts, coll, chips):
+    t = RooflineTerms(flops=flops, hbm_bytes=bts, collective_bytes=coll,
+                      chips=chips)
+    assert t.t_step >= max(t.t_compute, t.t_memory, t.t_collective) - 1e-15
+    assert t.bottleneck in ("compute", "memory", "collective")
+    p = step_power_w(t)
+    assert t.chip.power_membound_w - 1e-9 <= p <= t.chip.power_peak_w + 1e-9
+    assert step_energy_j(t) >= 0
+    # more chips never increases per-term time
+    t2 = RooflineTerms(flops=flops, hbm_bytes=bts, collective_bytes=coll,
+                       chips=chips * 2)
+    assert t2.t_step <= t.t_step + 1e-15
+
+
+# -- optimizer schedule -----------------------------------------------------------
+
+
+@given(step=st.integers(0, 20000))
+@settings(**SETTINGS)
+def test_lr_schedule_bounds(step):
+    cfg = AdamWConfig(lr=3e-4, warmup_steps=100, total_steps=10000)
+    lr = float(schedule_lr(cfg, jnp.asarray(step)))
+    assert 0.0 <= lr <= cfg.lr * (1 + 1e-5)
+    if step >= cfg.total_steps:
+        assert abs(lr - cfg.lr * cfg.min_lr_frac) < 1e-8
+
+
+# -- attention: flash == reference on random shapes -------------------------------
+
+
+@given(
+    b=st.integers(1, 2),
+    k=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([16, 48, 64]),
+    data=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_flash_matches_ref_property(b, k, g, s, data):
+    key = jax.random.PRNGKey(data % 2**31)
+    ks = jax.random.split(key, 3)
+    dh = 16
+    q = jax.random.normal(ks[0], (b, k * g, s, dh))
+    kk = jax.random.normal(ks[1], (b, k, s, dh))
+    v = jax.random.normal(ks[2], (b, k, s, dh))
+    o = ops.flash_attention(q, kk, v, causal=True, block_q=16, block_kv=16)
+    r = ref.flash_attention_ref(q, kk, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-4,
+                               rtol=2e-4)
+
+
+# -- workload generator ------------------------------------------------------------
+
+
+@given(n=st.integers(1, 50), rate=st.floats(0.1, 100))
+@settings(**SETTINGS)
+def test_workload_sorted_and_deterministic(n, rate):
+    a = synth_workload(n, 8, 4, 1000, rate, seed=7)
+    b = synth_workload(n, 8, 4, 1000, rate, seed=7)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    arr = [r.arrival_s for r in a]
+    assert arr == sorted(arr) and arr[0] == 0.0
+    assert all(0 <= t < 1000 for r in a for t in r.prompt)
