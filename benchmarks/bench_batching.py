@@ -1,7 +1,16 @@
 """Paper TD3 row (replicating the Yarally'23 / Yao'21 finding the survey
-aggregates): batching vs real-time — energy per request and latency."""
+aggregates): batching vs real-time — energy per request/token and latency.
+
+The engine is calibrated once per shape (measured step times), then each
+policy serves a 1k-request Poisson workload by *replaying* those measured
+durations on the SchedulerCore's virtual clock — minutes of model execution
+become a sub-second simulation, so the TD3 comparison runs at a workload
+scale where queueing effects (and the adaptive policy's sizing) are visible.
+"""
 
 from __future__ import annotations
+
+import time
 
 import jax
 
@@ -10,39 +19,61 @@ from repro.configs import get_arch
 from repro.core.engines import CompiledEngine
 from repro.models import init_params
 from repro.serving.request import synth_workload
-from repro.serving.scheduler import (
-    ContinuousBatchScheduler,
-    DynamicBatchScheduler,
-    RealTimeScheduler,
-)
+from repro.serving.scheduler import make_scheduler
+from repro.serving.stepcache import StepTimeCache, calibrate
 
 ARCH = "minitron-4b-smoke"
+N_REQUESTS = 1000
+PROMPT_LEN = 16
+MAX_NEW = 6
+RATE_PER_S = 500
+SLOTS = 8
 
 
 def run():
     cfg = get_arch(ARCH)
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = CompiledEngine(cfg, params, max_seq=64)
-    engine.warmup(1, 16)
-    engine.warmup(4, 16)
-    engine.warmup(8, 16)
-    results = {}
-    wl = lambda: synth_workload(12, 16, 6, cfg.vocab_size,  # noqa: E731
-                                rate_per_s=500, seed=21)
-    scheds = {
-        "realtime": RealTimeScheduler(engine),
-        "dynamic_b4": DynamicBatchScheduler(engine, 4, 10.0),
-        "dynamic_b8": DynamicBatchScheduler(engine, 8, 10.0),
-        "continuous_b8": ContinuousBatchScheduler(engine, 8, 64),
+    for b in (1, 2, 4, 8):
+        engine.warmup(b, PROMPT_LEN)
+
+    # measure every (batch, bucket) shape once; everything after is replay
+    cache = StepTimeCache()
+    t0 = time.perf_counter()
+    calibrate(engine, cache, batch_sizes=[1, 2, 3, 4, 5, 6, 7, 8],
+              prompt_len=PROMPT_LEN, max_new=MAX_NEW, vocab=cfg.vocab_size,
+              num_slots=SLOTS, max_seq=64)
+    emit("batching_calibration", (time.perf_counter() - t0) * 1e6,
+         f"shapes={len(cache)}")
+
+    wl = lambda: synth_workload(N_REQUESTS, PROMPT_LEN, MAX_NEW,  # noqa: E731
+                                cfg.vocab_size, rate_per_s=RATE_PER_S,
+                                seed=21)
+    policies = {
+        "realtime": dict(kind="realtime"),
+        "dynamic_b4": dict(kind="dynamic_batch", max_batch=4),
+        "dynamic_b8": dict(kind="dynamic_batch", max_batch=8),
+        "adaptive_b8": dict(kind="adaptive_batch", max_batch=8,
+                            ttft_slo_ms=200.0),
+        "continuous_b8": dict(kind="continuous_batch", max_batch=SLOTS),
     }
-    for name, sched in scheds.items():
+    results = {}
+    for name, spec in policies.items():
+        kw = dict(spec)
+        kind = kw.pop("kind")
+        sched = make_scheduler(kind, engine, max_seq=64, timeout_ms=10.0,
+                               step_cache=cache, **kw)
+        t0 = time.perf_counter()
         m = sched.run(wl())
+        sim_s = time.perf_counter() - t0
         results[name] = m
         s = m.summary()
         emit(
             f"batching_{name}",
             s["mean_latency_s"] * 1e6,
             f"J_req={s['energy_per_request_j']};J_tok={s['energy_per_token_j']};"
-            f"tok_s={s['throughput_tok_s']}",
+            f"J_active={s['energy_active_j']};J_idle={s['energy_idle_j']};"
+            f"tok_s={s['throughput_tok_s']};p95_s={s['p95_latency_s']};"
+            f"n={s['n_requests']};sim_host_s={sim_s:.3f}",
         )
     return results

@@ -68,10 +68,14 @@ def run(tmpdir: str = "/tmp/repro_bench"):
 
     for name, m in rows:
         s = m.summary()
+        breakdown = ""
+        if m.meter is not None:   # EnergyMeter: active vs provisioned-idle J
+            breakdown = (f";J_active={s['energy_active_j']}"
+                         f";J_idle={s['energy_idle_j']}")
         emit(
             f"serving_infra_{name}",
             s["mean_latency_s"] * 1e6,
             f"tok_s={s['throughput_tok_s']};J_req={s['energy_per_request_j']};"
-            f"p95_s={s['p95_latency_s']}",
+            f"p95_s={s['p95_latency_s']}" + breakdown,
         )
     return rows

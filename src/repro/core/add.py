@@ -40,6 +40,7 @@ class RequestProcessing(enum.Enum):         # TD3
     REALTIME = "realtime"
     DYNAMIC_BATCH = "dynamic_batch"
     CONTINUOUS_BATCH = "continuous_batch"    # beyond-paper (vLLM-style)
+    ADAPTIVE_BATCH = "adaptive_batch"        # beyond-paper (SLO/energy-aware)
 
 
 class Protocol(enum.Enum):                  # TD4
@@ -61,6 +62,7 @@ class Deployment:
     max_batch: int = 8
     batch_timeout_ms: float = 20.0
     max_seq: int = 256
+    ttft_slo_ms: float = 200.0  # p95 TTFT target (adaptive_batch sizing)
     # SI4 knobs
     min_replicas: int = 1
     max_replicas: int = 1  # >1 only meaningful under SI4 (cloud autoscaling)

@@ -27,6 +27,20 @@ from repro.configs import ModelConfig
 from repro.models import transformer
 
 
+def token_landing_s(prefill_s: float, decode_s: float, n_steps: int,
+                    n: int) -> float:
+    """Offset from generation start at which the n-th token (1-based) lands.
+
+    Token 1 comes out of the prefill logits; tokens 2..n_steps land one
+    decode step apart (``decode_s`` spans the ``n_steps - 1`` decode calls).
+    Schedulers use this to retire each request in a batch at the step where
+    *its* last token lands instead of billing everyone for the longest
+    request's decode.
+    """
+    step = decode_s / max(n_steps - 1, 1)
+    return prefill_s + max(min(n, n_steps) - 1, 0) * step
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray            # (B, n_new)
@@ -38,6 +52,14 @@ class GenerationResult:
     @property
     def decode_s_per_token(self) -> float:
         return self.decode_s / max(self.n_steps, 1)
+
+    @property
+    def total_s(self) -> float:
+        return self.prefill_s + self.decode_s
+
+    def token_done_s(self, n: int) -> float:
+        """Landing offset of this result's n-th token (see token_landing_s)."""
+        return token_landing_s(self.prefill_s, self.decode_s, self.n_steps, n)
 
 
 class Engine:

@@ -46,5 +46,10 @@ TPU_V5E = ChipSpec(
 # an assumed package power (no RAPL access in this container).
 HOST_CPU_POWER_W = 65.0
 
+# Idle package draw as a fraction of active draw: a provisioned endpoint that
+# is not computing still burns power (the SI4 'pay for the abstraction' cost).
+HOST_CPU_IDLE_FRACTION = 0.3
+HOST_CPU_IDLE_POWER_W = HOST_CPU_POWER_W * HOST_CPU_IDLE_FRACTION
+
 # Global-average grid carbon intensity (IEA 2023), g CO2e per kWh.
 CARBON_G_PER_KWH = 475.0

@@ -1,0 +1,123 @@
+"""EnergyMeter: first-class serving-energy accounting (active vs idle draw).
+
+Järvenpää et al. ("Green Architectural Tactics for ML-Enabled Systems") argue
+energy accounting must be a first-class architectural component rather than an
+afterthought; previously every scheduler here computed ``wall * power`` inline.
+All serving-side joule accounting now flows through one ``EnergyMeter`` that
+distinguishes the two power bins that matter for green serving decisions:
+
+  * **active** seconds — the engine is executing (prefill/decode); billed at
+    the active package power and *attributed to the resident requests*, so
+    J/request reflects who actually occupied the hardware;
+  * **idle** seconds — the endpoint is provisioned but waiting (gaps between
+    arrivals, autoscaled replicas sitting warm); billed at the idle power and
+    charged to the endpoint, not to any request.
+
+Conservation invariant (tested): the per-request attribution always sums to
+the active energy, and ``total_j == active_j + idle_j``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable
+
+from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
+
+
+@dataclasses.dataclass
+class EnergyMeter:
+    active_power_w: float = HOST_CPU_POWER_W
+    idle_power_w: float = HOST_CPU_IDLE_POWER_W
+    active_s: float = 0.0
+    idle_s: float = 0.0
+    total_tokens: int = 0
+    per_request_j: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    # -- recording ------------------------------------------------------------
+    def record_active(self, dur_s: float, rids: Iterable[int] = (),
+                      tokens: int = 0) -> float:
+        """Bill ``dur_s`` of compute, split equally across resident ``rids``."""
+        if dur_s <= 0:
+            return 0.0
+        j = dur_s * self.active_power_w
+        self.active_s += dur_s
+        self.total_tokens += tokens
+        rids = list(rids)
+        if rids:
+            share = j / len(rids)
+            for rid in rids:
+                self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + share
+        return j
+
+    def record_active_shared(self, start_s: float,
+                             done_by_rid: Dict[int, float],
+                             tokens: int = 0) -> float:
+        """Bill a batched compute window where requests retire individually.
+
+        The window spans ``[start_s, max(done)]``.  It is cut into segments at
+        each retirement instant; each segment's energy is split across the
+        requests still resident, so a short request in a batch is *not*
+        charged for the tail where only long requests occupy the engine.
+        """
+        if not done_by_rid:
+            return 0.0
+        end = max(done_by_rid.values())
+        total = self.record_active(end - start_s, rids=(), tokens=tokens)
+        t = start_s
+        for e in sorted(set(done_by_rid.values())):
+            seg = e - t
+            if seg <= 0:
+                continue
+            resident = [rid for rid, d in done_by_rid.items() if d > t]
+            share = seg * self.active_power_w / max(len(resident), 1)
+            for rid in resident:
+                self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + share
+            t = e
+        for rid in done_by_rid:              # zero-duration requests: J = 0
+            self.per_request_j.setdefault(rid, 0.0)
+        return total
+
+    def record_idle(self, dur_s: float) -> float:
+        if dur_s <= 0:
+            return 0.0
+        self.idle_s += dur_s
+        return dur_s * self.idle_power_w
+
+    def merge(self, other: "EnergyMeter") -> "EnergyMeter":
+        self.active_s += other.active_s
+        self.idle_s += other.idle_s
+        self.total_tokens += other.total_tokens
+        for rid, j in other.per_request_j.items():
+            self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + j
+        return self
+
+    # -- accounting -----------------------------------------------------------
+    @property
+    def active_j(self) -> float:
+        return self.active_s * self.active_power_w
+
+    @property
+    def idle_j(self) -> float:
+        return self.idle_s * self.idle_power_w
+
+    @property
+    def total_j(self) -> float:
+        return self.active_j + self.idle_j
+
+    @property
+    def energy_per_token_j(self) -> float:
+        return self.total_j / max(self.total_tokens, 1)
+
+    def energy_per_request_j(self, rid: int) -> float:
+        return self.per_request_j.get(rid, 0.0)
+
+    def summary(self) -> dict:
+        return {
+            "active_s": round(self.active_s, 6),
+            "idle_s": round(self.idle_s, 6),
+            "active_j": round(self.active_j, 6),
+            "idle_j": round(self.idle_j, 6),
+            "total_j": round(self.total_j, 6),
+            "j_per_token": round(self.energy_per_token_j, 6),
+        }

@@ -5,6 +5,14 @@ values where this host can measure (latency, throughput, bytes), derived
 values from the TPU roofline model (energy at production scale), and
 qualitative 1-5 scores — taken from the paper's own survey findings — where
 the characteristic is structural (usability, maintainability, ...).
+
+Measured serving energy flows in through :class:`ServingMetrics`, which the
+event-driven ``SchedulerCore`` populates from one
+:class:`repro.energy.meter.EnergyMeter` — active vs idle draw tracked
+separately, per-request/per-token attribution conserved — rather than from
+ad-hoc ``wall * power`` math inside each scheduler.  When a metrics object
+carries its meter, the energy-efficiency entry reflects active + idle joules
+(the provisioned-endpoint view the paper's SI4 discussion cares about).
 """
 
 from __future__ import annotations
@@ -72,10 +80,14 @@ def build_green_report(
                 f"roofline ({roofline.bottleneck}-bound), "
                 f"{roofline.chips} chips, container x{ovh.energy_overhead}")
     elif metrics is not None:
+        note = "host-proxy EnergyMeter"
+        if metrics.meter is not None:
+            note += (f" (active {metrics.meter.active_j:.2f}J"
+                     f" + idle {metrics.meter.idle_j:.2f}J)")
         rep.add(Quality.ENERGY_EFFICIENCY,
                 metrics.energy_per_token_j * ovh.energy_overhead, "J/token",
                 Provenance.MEASURED,
-                "host-proxy wall*power; container overhead simulated")
+                note + "; container overhead simulated")
 
     # -- performance efficiency -------------------------------------------------
     if metrics is not None:

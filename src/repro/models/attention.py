@@ -101,6 +101,9 @@ def _attention_fwd_rule(q, k, v, q_offset, kv_lengths, causal, window,
 
 def _attention_bwd_rule(causal, window, block_kv, has_kv_len, res, dout):
     q, k, v, out, lse, q_offset, kv_lengths = res
+    # residuals may deliver q_offset as a plain Python int (weak-typed scalar
+    # concretized by the VJP machinery); normalize so .ndim/.astype work
+    q_offset = jnp.asarray(q_offset)
     B, Sq, H, dh = q.shape
     _, T, K, _ = k.shape
     G = H // K
@@ -164,6 +167,7 @@ _attention_vjp.defvjp(_attention_fwd_rule, _attention_bwd_rule)
 def _attention_fwd_core(q, k, v, q_offset, kv_lengths, causal, window,
                         block_kv, has_kv_len=True):
     """Returns (out, lse) via the chunked online-softmax forward."""
+    q_offset = jnp.asarray(q_offset)
     B, Sq, H, dh = q.shape
     _, T, K, _ = k.shape
     G = H // K

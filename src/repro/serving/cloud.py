@@ -18,7 +18,7 @@ from typing import Dict, List, Optional
 
 from repro.configs import get_arch
 from repro.core.add import Deployment, ModelFormat
-from repro.energy.hw import HOST_CPU_POWER_W
+from repro.energy.meter import EnergyMeter
 from repro.models import init_params
 from repro.serving import formats
 from repro.serving.request import Request, ServingMetrics
@@ -132,20 +132,23 @@ class CloudService:
             parts[i % R].append(req)
         merged_responses = []
         wall = 0.0
-        energy = 0.0
         tokens = 0
         span_end = 0.0
+        meter = EnergyMeter()           # endpoint-level accounting
         for part in parts:
             if not part:
                 continue
             m = server.handle(name, part)
             merged_responses.extend(m.responses)
             wall += m.wall_compute_s
-            energy += m.energy_j
             tokens += m.total_tokens
+            if m.meter is not None:
+                meter.merge(m.meter)
+            else:                       # pragma: no cover - legacy scheduler
+                meter.record_active(m.wall_compute_s, tokens=m.total_tokens)
             span_end = max(span_end, max(r.done_s for r in m.responses))
-        # idle energy of provisioned replicas (the SI4 abstraction cost)
-        busy = wall / max(R, 1)
-        idle_s = max(0.0, span_end * R - wall)
-        energy += idle_s * HOST_CPU_POWER_W * 0.3  # idle draw ~30% of active
-        return ServingMetrics(merged_responses, wall, energy, tokens)
+        # idle energy of provisioned replicas (the SI4 abstraction cost): every
+        # replica is up for the whole span; bill the part no replica metered
+        meter.record_idle(max(0.0, span_end * R - meter.active_s - meter.idle_s))
+        return ServingMetrics(merged_responses, wall, meter.total_j, tokens,
+                              meter=meter)

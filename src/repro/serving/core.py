@@ -1,0 +1,205 @@
+"""Event-driven serving core: ONE virtual-clock loop for every TD3 policy.
+
+Previously each scheduler (realtime / dynamic / continuous) carried its own
+copy of the virtual-clock loop and its own inline ``wall * power`` energy
+math.  ``SchedulerCore`` owns everything a request-processing policy does not
+care about:
+
+  * the **virtual clock** and the sorted **arrival queue**;
+  * **admission events** — policies pop arrivals and decide what to dispatch;
+  * **retirement events** — per-request completion times (each request
+    retires at the step where its own last token lands, not at the end of
+    the longest request in its batch);
+  * **energy metering** — every active/idle second flows through one
+    :class:`repro.energy.meter.EnergyMeter`; no policy touches power
+    constants;
+  * **measured-step-time replay** — engine calls route through
+    :meth:`SchedulerCore.timed`, so a warm :class:`StepTimeCache` replays
+    recorded durations on the virtual clock instead of re-executing the
+    model (1k+ request workloads simulate in seconds).
+
+A policy implements three small hooks (:meth:`SchedulingPolicy.reset`,
+:meth:`~SchedulingPolicy.step`, :meth:`~SchedulingPolicy.active`) and drives
+the core's primitives; see ``repro.serving.scheduler`` for the four concrete
+policies.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engines import Engine, token_landing_s
+from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
+from repro.energy.meter import EnergyMeter
+from repro.serving.request import Request, Response, ServingMetrics
+from repro.serving.stepcache import StepTimeCache, shape_bucket, synth_tokens
+
+
+def pad_prompts(prompts: List[np.ndarray],
+                width: Optional[int] = None) -> np.ndarray:
+    """Left-align, zero-pad to ``width`` (default: the max prompt length)."""
+    S = width if width is not None else max(len(p) for p in prompts)
+    out = np.zeros((len(prompts), S), np.int32)
+    for i, p in enumerate(prompts):
+        out[i, : len(p)] = p
+    return out
+
+
+class SchedulingPolicy:
+    """Admission/dispatch policy plugged into a :class:`SchedulerCore`.
+
+    ``step`` handles one scheduling event (admit a batch, advance a decode
+    step, ...) using the core's primitives and MUST make progress — either
+    consume pending arrivals, retire active work, or advance the clock.
+    """
+
+    name = "abstract"
+
+    def reset(self, core: "SchedulerCore") -> None:
+        """Called at the start of every run; (re)initialize policy state."""
+
+    def active(self, core: "SchedulerCore") -> bool:
+        """True while the policy holds admitted-but-unretired work."""
+        return False
+
+    def step(self, core: "SchedulerCore") -> None:
+        raise NotImplementedError
+
+
+class SchedulerCore:
+    """Virtual-clock event loop shared by every request-processing policy."""
+
+    def __init__(self, engine: Engine, policy: SchedulingPolicy, *,
+                 step_cache: Optional[StepTimeCache] = None,
+                 active_power_w: float = HOST_CPU_POWER_W,
+                 idle_power_w: float = HOST_CPU_IDLE_POWER_W):
+        self.engine = engine
+        self.policy = policy
+        self.step_cache = step_cache
+        self.active_power_w = active_power_w
+        self.idle_power_w = idle_power_w
+        self._reset([])
+
+    def _reset(self, workload: List[Request]) -> None:
+        self.pending: List[Request] = sorted(workload,
+                                             key=lambda r: r.arrival_s)
+        self._head = 0
+        self.clock = 0.0
+        self.wall = 0.0
+        self.responses: List[Response] = []
+        self.total_tokens = 0
+        self.meter = EnergyMeter(active_power_w=self.active_power_w,
+                                 idle_power_w=self.idle_power_w)
+
+    # -- arrival queue --------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return self.clock
+
+    def peek(self) -> Optional[Request]:
+        if self._head < len(self.pending):
+            return self.pending[self._head]
+        return None
+
+    def pop(self) -> Request:
+        req = self.pending[self._head]
+        self._head += 1
+        return req
+
+    def has_pending(self) -> bool:
+        return self._head < len(self.pending)
+
+    @property
+    def vocab(self) -> int:
+        cfg = getattr(self.engine, "cfg", None)
+        return int(getattr(cfg, "vocab_size", 1 << 30) or (1 << 30))
+
+    # -- clock / energy events ------------------------------------------------
+    def advance_to(self, t: float) -> None:
+        """Idle until virtual time ``t`` (endpoint provisioned, not working)."""
+        if t > self.clock:
+            self.meter.record_idle(t - self.clock)
+            self.clock = t
+
+    def advance_active(self, dur_s: float, rids=(), tokens: int = 0) -> None:
+        """Advance the clock through ``dur_s`` of compute billed to ``rids``."""
+        self.meter.record_active(dur_s, rids, tokens)
+        self.wall += dur_s
+        self.clock += dur_s
+
+    # -- measured/replayed engine execution -----------------------------------
+    def timed(self, key: tuple,
+              thunk: Callable[[], Tuple[Tuple[float, ...], object]]):
+        """Execute ``thunk`` on a cache miss; replay its duration on a hit.
+
+        ``thunk`` returns ``(durations, result)``; on a hit the recorded
+        durations come back with ``result=None`` (callers synthesize tokens).
+        """
+        if self.step_cache is not None:
+            hit = self.step_cache.get(key)
+            if hit is not None:
+                return hit, None
+        payload, result = thunk()
+        if self.step_cache is not None:
+            self.step_cache.put(key, payload)
+        return payload, result
+
+    # -- the shared admit -> generate -> retire path --------------------------
+    def execute_generate(self, batch: List[Request], start_s: float) -> None:
+        """Dispatch ``batch`` as one uniform engine call at ``start_s``.
+
+        Records a Response per request with its own retirement time (the step
+        where its n-th token lands) and bills batch energy segment-wise so
+        early-retiring requests do not pay for the longest request's tail.
+        """
+        self.advance_to(start_s)
+        # pad to the power-of-two bucket the cache key names, so the compiled
+        # executable (and its measured duration) is shared across lengths
+        sb = shape_bucket(max(len(r.prompt) for r in batch))
+        prompts = pad_prompts([r.prompt for r in batch], width=sb)
+        B = prompts.shape[0]
+        max_new = max(r.max_new_tokens for r in batch)
+        key = ("generate", B, sb, max_new)
+
+        def thunk():
+            res = self.engine.generate(prompts, max_new)
+            return (res.prefill_s, res.decode_s), res
+
+        (prefill_s, decode_s), res = self.timed(key, thunk)
+        first_s = start_s + prefill_s
+        done_by_rid = {}
+        n_tokens = 0
+        for bi, req in enumerate(batch):
+            n = min(req.max_new_tokens, max_new)
+            if res is not None:
+                toks = np.asarray(res.tokens[bi, :n])
+            else:
+                toks = synth_tokens(req.prompt, n, self.vocab)
+            done = start_s + token_landing_s(prefill_s, decode_s, max_new, n)
+            done_by_rid[req.rid] = done
+            self.record_response(req, toks, start_s, first_s, done)
+            n_tokens += n
+        self.meter.record_active_shared(start_s, done_by_rid, tokens=n_tokens)
+        self.wall += prefill_s + decode_s
+        self.clock = start_s + prefill_s + decode_s
+
+    def record_response(self, req: Request, tokens, start_s: float,
+                        first_s: float, done_s: float) -> None:
+        self.responses.append(
+            Response(rid=req.rid, tokens=np.asarray(tokens, np.int32),
+                     arrival_s=req.arrival_s, start_s=start_s,
+                     first_token_s=first_s, done_s=done_s)
+        )
+        self.total_tokens += len(tokens)
+
+    # -- the event loop -------------------------------------------------------
+    def run(self, workload: List[Request]) -> ServingMetrics:
+        self._reset(workload)
+        self.policy.reset(self)
+        while self.has_pending() or self.policy.active(self):
+            self.policy.step(self)
+        return ServingMetrics(self.responses, self.wall, self.meter.total_j,
+                              self.total_tokens, meter=self.meter)

@@ -7,6 +7,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.energy.meter import EnergyMeter
+
 
 @dataclasses.dataclass
 class Request:
@@ -42,9 +44,10 @@ class Response:
 @dataclasses.dataclass
 class ServingMetrics:
     responses: List[Response]
-    wall_compute_s: float              # actual compute time spent (host)
-    energy_j: float                    # host-proxy measured* energy
+    wall_compute_s: float              # compute time on the virtual clock
+    energy_j: float                    # host-proxy measured* energy (active+idle)
     total_tokens: int
+    meter: Optional[EnergyMeter] = None  # full active/idle + per-request J
 
     @property
     def throughput_tok_s(self) -> float:
@@ -83,7 +86,7 @@ class ServingMetrics:
         return self.energy_j / max(self.total_tokens, 1)
 
     def summary(self) -> dict:
-        return {
+        d = {
             "n_requests": len(self.responses),
             "mean_latency_s": round(self.mean_latency_s, 6),
             "p95_latency_s": round(self.latency_percentile(95), 6),
@@ -92,6 +95,10 @@ class ServingMetrics:
             "energy_per_request_j": round(self.energy_per_request_j, 6),
             "energy_per_token_j": round(self.energy_per_token_j, 6),
         }
+        if self.meter is not None:
+            d["energy_active_j"] = round(self.meter.active_j, 6)
+            d["energy_idle_j"] = round(self.meter.idle_j, 6)
+        return d
 
 
 def synth_workload(

@@ -1,146 +1,195 @@
-"""TD3 'Request processing': real-time vs dynamic batching vs continuous.
+"""TD3 request-processing policies over the event-driven SchedulerCore.
 
 The paper (via its primary studies Yao'21 / Yarally'23 / Kumara'22) treats
-real-time vs batching as the key transversal decision for energy; we implement
-both plus beyond-paper continuous batching (slot-reuse decode, vLLM-style).
+real-time vs batching as *the* transversal decision for serving energy.  All
+policies here are thin admission/dispatch plug-ins over ONE
+:class:`repro.serving.core.SchedulerCore`, which owns the virtual clock, the
+arrival queue, retirement events, the measured-step-time replay cache and the
+:class:`~repro.energy.meter.EnergyMeter` (active vs idle draw, J/request,
+J/token).  No policy contains a clock loop or an inline energy formula.
 
-Scheduling runs against a VIRTUAL clock driven by MEASURED compute times: the
-simulator executes the real model (host wall-clock) and advances the request
-timeline with those durations, so queueing dynamics are faithful while the
-whole thing stays runnable on one CPU.
+Policies:
+
+  * ``realtime``         — dispatch each arrival alone (batch=1);
+  * ``dynamic_batch``    — accumulate up to (max_batch, timeout), dispatch
+    as one uniform batch;
+  * ``adaptive_batch``   — beyond-paper: per admission window, pick the batch
+    size the step-time cache predicts will keep p95 TTFT under the SLO at
+    minimum J/token;
+  * ``continuous_batch`` — beyond-paper (vLLM-style): slot-reuse decode with
+    per-request admission and retirement.
+
+The legacy ``*Scheduler`` classes remain as constructors-compatible shells:
+``RealTimeScheduler(engine).run(wl)`` builds a core + policy underneath.
 """
 
 from __future__ import annotations
 
 import time
-from typing import List
+from collections import deque
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engines import Engine
-from repro.energy.hw import HOST_CPU_POWER_W
-from repro.models import transformer
-from repro.serving.request import Request, Response, ServingMetrics
+from repro.serving.core import SchedulerCore, SchedulingPolicy, pad_prompts
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.stepcache import StepTimeCache, shape_bucket, synth_tokens
+
+# backwards-compatible alias (pre-core name)
+_pad_prompts = pad_prompts
 
 
-def _pad_prompts(prompts: List[np.ndarray]) -> np.ndarray:
-    """Left-align, zero-pad to the max length (uniform-batch admission)."""
-    S = max(len(p) for p in prompts)
-    out = np.zeros((len(prompts), S), np.int32)
-    for i, p in enumerate(prompts):
-        out[i, : len(p)] = p
-    return out
-
-
-class RealTimeScheduler:
+class RealTimePolicy(SchedulingPolicy):
     """Process each request immediately and alone (batch=1)."""
 
     name = "realtime"
 
-    def __init__(self, engine: Engine):
-        self.engine = engine
-
-    def run(self, workload: List[Request]) -> ServingMetrics:
-        clock = 0.0
-        wall = 0.0
-        responses = []
-        total_tokens = 0
-        for req in sorted(workload, key=lambda r: r.arrival_s):
-            start = max(clock, req.arrival_s)
-            res = self.engine.generate(req.prompt[None, :], req.max_new_tokens)
-            dur = res.prefill_s + res.decode_s
-            wall += dur
-            responses.append(
-                Response(
-                    rid=req.rid,
-                    tokens=res.tokens[0],
-                    arrival_s=req.arrival_s,
-                    start_s=start,
-                    first_token_s=start + res.prefill_s,
-                    done_s=start + dur,
-                )
-            )
-            total_tokens += res.tokens.shape[1]
-            clock = start + dur
-        return ServingMetrics(responses, wall, wall * HOST_CPU_POWER_W,
-                              total_tokens)
+    def step(self, core: SchedulerCore) -> None:
+        req = core.pop()
+        core.execute_generate([req], max(core.now, req.arrival_s))
 
 
-class DynamicBatchScheduler:
+class DynamicBatchPolicy(SchedulingPolicy):
     """Accumulate requests up to (max_batch, timeout) and run them together."""
 
     name = "dynamic_batch"
 
-    def __init__(self, engine: Engine, max_batch: int = 8,
-                 timeout_ms: float = 20.0):
-        self.engine = engine
+    def __init__(self, max_batch: int = 8, timeout_ms: float = 20.0):
         self.max_batch = max_batch
         self.timeout_s = timeout_ms / 1e3
 
-    def run(self, workload: List[Request]) -> ServingMetrics:
-        pending = sorted(workload, key=lambda r: r.arrival_s)
-        clock = 0.0
-        wall = 0.0
-        responses = []
-        total_tokens = 0
-        i = 0
-        while i < len(pending):
-            head = pending[i]
-            open_t = max(clock, head.arrival_s)
-            close_t = open_t + self.timeout_s
-            batch = [head]
-            j = i + 1
-            while (
-                j < len(pending)
-                and len(batch) < self.max_batch
-                and pending[j].arrival_s <= close_t
-            ):
-                batch.append(pending[j])
-                j += 1
-            start = max(open_t if len(batch) == self.max_batch else close_t,
-                        batch[-1].arrival_s)
-            prompts = _pad_prompts([r.prompt for r in batch])
-            max_new = max(r.max_new_tokens for r in batch)
-            res = self.engine.generate(prompts, max_new)
-            dur = res.prefill_s + res.decode_s
-            wall += dur
-            for bi, req in enumerate(batch):
-                n = req.max_new_tokens
-                responses.append(
-                    Response(
-                        rid=req.rid,
-                        tokens=res.tokens[bi, :n],
-                        arrival_s=req.arrival_s,
-                        start_s=start,
-                        first_token_s=start + res.prefill_s,
-                        done_s=start + dur,
-                    )
-                )
-                total_tokens += n
-            clock = start + dur
-            i = j
-        return ServingMetrics(responses, wall, wall * HOST_CPU_POWER_W,
-                              total_tokens)
+    def _admit(self, core: SchedulerCore, max_batch: int) -> List[Request]:
+        head = core.pop()
+        open_t = max(core.now, head.arrival_s)
+        close_t = open_t + self.timeout_s
+        batch = [head]
+        while (
+            core.peek() is not None
+            and len(batch) < max_batch
+            and core.peek().arrival_s <= close_t
+        ):
+            batch.append(core.pop())
+        start = max(open_t if len(batch) == max_batch else close_t,
+                    batch[-1].arrival_s)
+        core.execute_generate(batch, start)
+        return batch
+
+    def step(self, core: SchedulerCore) -> None:
+        self._admit(core, self.max_batch)
 
 
-class ContinuousBatchScheduler:
+class AdaptiveBatchPolicy(DynamicBatchPolicy):
+    """SLO/energy-aware batch sizing from the measured step-time cache.
+
+    For each admission window the policy estimates, per candidate batch size
+    ``b``: p95 TTFT ~ (b-1)/arrival_rate + prefill(b) (the head request waits
+    for the window to fill, then for prefill) and J/token ~
+    active_power * (prefill(b)+decode(b)) / (b * max_new).  It dispatches the
+    candidate meeting the TTFT target at minimum predicted J/token; with an
+    empty cache (no measurements yet) it behaves like dynamic batching at
+    ``max_batch``, which also populates the cache for later windows.
+    """
+
+    name = "adaptive_batch"
+
+    def __init__(self, max_batch: int = 8, ttft_slo_ms: float = 200.0,
+                 rate_window: int = 16):
+        super().__init__(max_batch=max_batch, timeout_ms=ttft_slo_ms / 2)
+        self.ttft_slo_s = ttft_slo_ms / 1e3
+        self._recent = deque(maxlen=rate_window)
+        self.chosen: List[int] = []        # per-window decisions (observable)
+
+    def reset(self, core: SchedulerCore) -> None:
+        self._recent.clear()
+        self.chosen = []
+
+    def _rate(self) -> Optional[float]:
+        if len(self._recent) < 2:
+            return None
+        span = self._recent[-1] - self._recent[0]
+        if span <= 0:
+            return None
+        return (len(self._recent) - 1) / span
+
+    def _choose(self, core: SchedulerCore, head: Request) -> int:
+        cache = core.step_cache
+        if cache is None:
+            return self.max_batch
+        sb = shape_bucket(len(head.prompt))
+        rate = self._rate()
+        best = None              # (infeasible, cost, b)
+        b = 1
+        cands = []
+        while b < self.max_batch:
+            cands.append(b)
+            b *= 2
+        cands.append(self.max_batch)
+        for b in cands:
+            est = cache.estimate_generate(b, sb, head.max_new_tokens)
+            if est is None:
+                continue
+            prefill_s, decode_s = est
+            wait = (b - 1) / rate if rate else 0.0
+            ttft = wait + prefill_s
+            j_tok = (core.active_power_w * (prefill_s + decode_s)
+                     / (b * max(head.max_new_tokens, 1)))
+            feasible = ttft <= self.ttft_slo_s
+            rank = (0, j_tok, -b) if feasible else (1, ttft, -b)
+            if best is None or rank < best[0]:
+                best = (rank, b)
+        if best is None:
+            return self.max_batch
+        return best[1]
+
+    def step(self, core: SchedulerCore) -> None:
+        head = core.peek()
+        b = self._choose(core, head)
+        self.chosen.append(b)
+        # feed EVERY admitted arrival into the rate estimate (one sample per
+        # window would underestimate the rate by ~the batch size)
+        for req in self._admit(core, b):
+            self._recent.append(req.arrival_s)
+
+
+class ContinuousBatchPolicy(SchedulingPolicy):
     """Beyond-paper: slot-based continuous batching (decode-level admission).
 
-    A fixed pool of ``num_slots`` cache slots; every iteration admits arrivals
+    A fixed pool of ``num_slots`` cache slots; every event admits arrivals
     into free slots (per-request prefill) and then advances ALL active slots
-    by one fused decode step.  Requests retire individually, so short requests
-    never wait for long ones — the design that DL-serving software (SI3) and
-    modern LLM servers use to lift both throughput and energy efficiency.
+    by one fused decode step.  Requests retire individually, so short
+    requests never wait for long ones — the design that DL-serving software
+    (SI3) and modern LLM servers use to lift both throughput and energy
+    efficiency.  Prefill/decode durations route through the core's step-time
+    cache, so a calibrated cache simulates this policy without touching the
+    model (replayed steps synthesize token ids deterministically).
     """
 
     name = "continuous_batch"
 
-    def __init__(self, engine: Engine, num_slots: int = 8, max_seq: int = 256):
-        self.engine = engine
+    def __init__(self, num_slots: int = 8, max_seq: int = 256):
         self.num_slots = num_slots
         self.max_seq = max_seq
+
+    def reset(self, core: SchedulerCore) -> None:
+        from repro.models import transformer
+
+        B = self.num_slots
+        self.kv = transformer.init_cache(core.engine.cfg, B, self.max_seq)
+        self.cur_tok = jnp.zeros((B,), jnp.int32)
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.slot_emitted = [0] * B
+        self.slot_tokens: List[List[int]] = [[] for _ in range(B)]
+        self.slot_start = [0.0] * B
+        self.slot_ttft = [0.0] * B
+        # slots admitted via a replayed prefill have no real kv/cur_tok state:
+        # their tokens must stay synthetic even when a decode step executes
+        self.slot_synth = [False] * B
+
+    def active(self, core: SchedulerCore) -> bool:
+        return any(r is not None for r in self.slot_req)
 
     def _insert(self, cache, sub, slot: int):
         def put(leaf, s):
@@ -150,98 +199,147 @@ class ContinuousBatchScheduler:
 
         return jax.tree.map(put, cache, sub)
 
-    def run(self, workload: List[Request]) -> ServingMetrics:
-        cfg = self.engine.cfg
-        pending = sorted(workload, key=lambda r: r.arrival_s)
-        B = self.num_slots
-        cache = transformer.init_cache(cfg, B, self.max_seq)
-        slot_req = [None] * B           # active Request per slot
-        slot_emitted = [0] * B
-        slot_tokens = [[] for _ in range(B)]
-        slot_start = [0.0] * B
-        slot_ttft = [0.0] * B
-        cur_tok = jnp.zeros((B,), jnp.int32)
-        clock = 0.0
-        wall = 0.0
-        responses = []
-        total_tokens = 0
-        idx = 0
+    def _admit(self, core: SchedulerCore) -> None:
+        for s in range(self.num_slots):
+            if self.slot_req[s] is not None:
+                continue
+            nxt = core.peek()
+            if nxt is None or nxt.arrival_s > core.now:
+                return
+            req = core.pop()
+            # bucket prompt length to a power of two so the compiled prefill
+            # executable (and its measured duration) is reused across requests
+            S = len(req.prompt)
+            bucket = shape_bucket(S)
+            prompt = np.zeros((bucket,), np.int32)
+            prompt[:S] = req.prompt
 
-        def active_count():
-            return sum(r is not None for r in slot_req)
+            def thunk():
+                t0 = time.perf_counter()
+                logits, sub = core.engine.prefill_one(prompt[None, :])
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                tok.block_until_ready()
+                return (time.perf_counter() - t0,), (tok, sub)
 
-        while idx < len(pending) or active_count() > 0:
-            # admit
-            for s in range(B):
-                if slot_req[s] is None and idx < len(pending) and \
-                        pending[idx].arrival_s <= clock:
-                    req = pending[idx]
-                    idx += 1
-                    # bucket prompt length to a power of two so the compiled
-                    # prefill executable is reused across requests
-                    S = len(req.prompt)
-                    bucket = 1 << (S - 1).bit_length()
-                    prompt = np.zeros((bucket,), np.int32)
-                    prompt[:S] = req.prompt
-                    t0 = time.perf_counter()
-                    logits, sub = self.engine.prefill_one(prompt[None, :])
-                    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-                    tok.block_until_ready()
-                    dt = time.perf_counter() - t0
-                    wall += dt
-                    clock += dt
-                    cache = self._insert(cache, sub, s)
-                    cur_tok = cur_tok.at[s].set(tok[0])
-                    slot_req[s] = req
-                    slot_emitted[s] = 1
-                    slot_tokens[s] = [int(tok[0])]
-                    slot_start[s] = clock - dt
-                    slot_ttft[s] = clock
-            if active_count() == 0:
-                if idx < len(pending):
-                    clock = max(clock, pending[idx].arrival_s)
-                    continue
-                break
-            # one decode step for every slot (inactive slots masked out later)
+            (dt,), out = core.timed(("prefill1", bucket), thunk)
+            start = core.now
+            core.advance_active(dt, rids=[req.rid], tokens=1)
+            self.slot_synth[s] = out is None
+            if out is not None:
+                tok, sub = out
+                self.kv = self._insert(self.kv, sub, s)
+                self.cur_tok = self.cur_tok.at[s].set(tok[0])
+                first = int(tok[0])
+            else:
+                first = int(synth_tokens(req.prompt, 1, core.vocab)[0])
+            self.slot_req[s] = req
+            self.slot_emitted[s] = 1
+            self.slot_tokens[s] = [first]
+            self.slot_start[s] = start
+            self.slot_ttft[s] = core.now
+
+    def step(self, core: SchedulerCore) -> None:
+        self._admit(core)
+        if not self.active(core):
+            nxt = core.peek()
+            if nxt is not None:
+                core.advance_to(nxt.arrival_s)   # idle until next arrival
+            return
+
+        def thunk():
             t0 = time.perf_counter()
-            logits, cache = self.engine.decode_batch(cache, cur_tok)
+            logits, kv = core.engine.decode_batch(self.kv, self.cur_tok)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             tok.block_until_ready()
-            dt = time.perf_counter() - t0
-            wall += dt
-            clock += dt
-            cur_tok = tok
-            for s in range(B):
-                req = slot_req[s]
-                if req is None:
-                    continue
-                slot_emitted[s] += 1
-                slot_tokens[s].append(int(tok[s]))
-                if slot_emitted[s] >= req.max_new_tokens:
-                    responses.append(
-                        Response(
-                            rid=req.rid,
-                            tokens=np.array(
-                                slot_tokens[s][: req.max_new_tokens], np.int32
-                            ),
-                            arrival_s=req.arrival_s,
-                            start_s=slot_start[s],
-                            first_token_s=slot_ttft[s],
-                            done_s=clock,
-                        )
-                    )
-                    total_tokens += req.max_new_tokens
-                    slot_req[s] = None
-        return ServingMetrics(responses, wall, wall * HOST_CPU_POWER_W,
-                              total_tokens)
+            return (time.perf_counter() - t0,), (tok, kv)
+
+        (dt,), out = core.timed(("decode", self.num_slots), thunk)
+        rids = [r.rid for r in self.slot_req if r is not None]
+        core.advance_active(dt, rids=rids, tokens=len(rids))
+        if out is not None:
+            tok, self.kv = out
+            self.cur_tok = tok
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            if out is not None and not self.slot_synth[s]:
+                nxt_tok = int(np.asarray(tok[s]))
+            else:
+                nxt_tok = int(
+                    synth_tokens(req.prompt, self.slot_emitted[s] + 1,
+                                 core.vocab)[-1]
+                )
+            self.slot_emitted[s] += 1
+            self.slot_tokens[s].append(nxt_tok)
+            if self.slot_emitted[s] >= req.max_new_tokens:
+                core.record_response(
+                    req, self.slot_tokens[s][: req.max_new_tokens],
+                    self.slot_start[s], self.slot_ttft[s], core.now,
+                )
+                self.slot_req[s] = None
+
+
+# -- legacy scheduler shells (constructor-compatible) --------------------------
+
+
+class _PolicyScheduler:
+    """Engine + policy bound into a runnable core (the pre-core interface)."""
+
+    def __init__(self, engine: Engine, policy: SchedulingPolicy,
+                 step_cache: Optional[StepTimeCache] = None):
+        self.engine = engine
+        self.policy = policy
+        self.core = SchedulerCore(engine, policy, step_cache=step_cache)
+        self.name = policy.name
+
+    def run(self, workload: List[Request]) -> ServingMetrics:
+        return self.core.run(workload)
+
+
+class RealTimeScheduler(_PolicyScheduler):
+    name = "realtime"
+
+    def __init__(self, engine: Engine, step_cache=None):
+        super().__init__(engine, RealTimePolicy(), step_cache)
+
+
+class DynamicBatchScheduler(_PolicyScheduler):
+    name = "dynamic_batch"
+
+    def __init__(self, engine: Engine, max_batch: int = 8,
+                 timeout_ms: float = 20.0, step_cache=None):
+        super().__init__(engine, DynamicBatchPolicy(max_batch, timeout_ms),
+                         step_cache)
+
+
+class AdaptiveBatchScheduler(_PolicyScheduler):
+    name = "adaptive_batch"
+
+    def __init__(self, engine: Engine, max_batch: int = 8,
+                 ttft_slo_ms: float = 200.0, step_cache=None):
+        super().__init__(engine, AdaptiveBatchPolicy(max_batch, ttft_slo_ms),
+                         step_cache)
+
+
+class ContinuousBatchScheduler(_PolicyScheduler):
+    name = "continuous_batch"
+
+    def __init__(self, engine: Engine, num_slots: int = 8, max_seq: int = 256,
+                 step_cache=None):
+        super().__init__(engine, ContinuousBatchPolicy(num_slots, max_seq),
+                         step_cache)
 
 
 def make_scheduler(kind: str, engine: Engine, *, max_batch=8, timeout_ms=20.0,
-                   max_seq=256):
+                   max_seq=256, ttft_slo_ms=200.0, step_cache=None):
     if kind == "realtime":
-        return RealTimeScheduler(engine)
+        return RealTimeScheduler(engine, step_cache)
     if kind == "dynamic_batch":
-        return DynamicBatchScheduler(engine, max_batch, timeout_ms)
+        return DynamicBatchScheduler(engine, max_batch, timeout_ms, step_cache)
+    if kind == "adaptive_batch":
+        return AdaptiveBatchScheduler(engine, max_batch, ttft_slo_ms,
+                                      step_cache)
     if kind == "continuous_batch":
-        return ContinuousBatchScheduler(engine, max_batch, max_seq)
+        return ContinuousBatchScheduler(engine, max_batch, max_seq, step_cache)
     raise ValueError(kind)

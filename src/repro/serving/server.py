@@ -57,7 +57,9 @@ class ServingServer:
         self.endpoints: Dict[str, Tuple[Engine, object, ModelPackage]] = {}
 
     # -- packaging / endpoint configuration (the SI3 'no manual API' step) ----
-    def register(self, pkg: ModelPackage) -> str:
+    def register(self, pkg: ModelPackage, step_cache=None) -> str:
+        """Configure an endpoint; an optional StepTimeCache makes repeated
+        workloads replay measured step times instead of re-executing."""
         cfg = get_arch(pkg.arch)
         dep = self.deployment
         if dep.si == ServingInfrastructure.SI1_NO_RUNTIME:
@@ -70,6 +72,8 @@ class ServingServer:
             max_batch=dep.max_batch,
             timeout_ms=dep.batch_timeout_ms,
             max_seq=pkg.max_seq,
+            ttft_slo_ms=dep.ttft_slo_ms,
+            step_cache=step_cache,
         )
         self.endpoints[pkg.name] = (engine, scheduler, pkg)
         return f"/v1/models/{pkg.name}:predict"

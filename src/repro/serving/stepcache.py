@@ -1,0 +1,125 @@
+"""Shape-bucketed measured-step-time cache for virtual-clock replay.
+
+The serving simulator advances a virtual clock with *measured* engine step
+times.  Those times depend (to first order) only on the compiled executable's
+input shapes, not on the token values — so once a ``(kind, batch, bucket)``
+shape has been measured, repeated calls can *replay* the recorded duration on
+the virtual clock instead of re-executing the model.  That turns a 1k-request
+synthetic workload from minutes of model execution into a sub-second
+simulation while keeping the queueing/energy dynamics faithful.
+
+Keys (all sequence lengths power-of-two bucketed):
+
+  ``("generate", B, S_bucket, max_new)`` -> ``(prefill_s, decode_s)``
+  ``("prefill1", S_bucket)``             -> ``(dt_s,)``
+  ``("decode", num_slots)``              -> ``(dt_s,)``
+
+The first measurement for a key wins and is never overwritten, so a warm
+cache replays a deterministic timeline (tested).  Replayed calls skip the
+model entirely; token ids for them are synthesized deterministically from the
+prompt (`synth_tokens`) — fine for workload simulation, not for correctness
+tests, which run uncached.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+
+def shape_bucket(n: int) -> int:
+    """Round up to the next power of two (compiled-executable reuse)."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def synth_tokens(prompt: np.ndarray, n: int, vocab: int) -> np.ndarray:
+    """Deterministic stand-in tokens for replayed (simulated) engine calls."""
+    seed = int(np.asarray(prompt, np.int64).sum()) * 1000003 + 7 * len(prompt)
+    i = np.arange(n, dtype=np.int64)
+    return ((seed + 2654435761 * (i + 1)) % max(int(vocab), 1)).astype(np.int32)
+
+
+class StepTimeCache:
+    """Measured step durations keyed by execution shape; first write wins."""
+
+    def __init__(self):
+        self._times: Dict[tuple, Tuple[float, ...]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._times)
+
+    def get(self, key: tuple) -> Optional[Tuple[float, ...]]:
+        hit = self._times.get(key)
+        if hit is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return hit
+
+    def put(self, key: tuple, payload: Iterable[float]) -> None:
+        self._times.setdefault(key, tuple(float(x) for x in payload))
+
+    def estimate_generate(self, batch: int, s_bucket: int,
+                          max_new: int) -> Optional[Tuple[float, float]]:
+        """(prefill_s, decode_s) prediction for a candidate batch size.
+
+        Exact measurement if present; otherwise linear extrapolation from the
+        nearest measured batch at the same (S_bucket, max_new) — a pessimistic
+        (compute-bound) scaling that the adaptive policy uses for sizing.
+        """
+        exact = self._times.get(("generate", batch, s_bucket, max_new))
+        if exact is not None:
+            return exact
+        near = [
+            (k[1], v) for k, v in self._times.items()
+            if k[0] == "generate" and k[2] == s_bucket and k[3] == max_new
+        ]
+        if not near:
+            return None
+        b_meas, (p, d) = min(near, key=lambda kv: abs(kv[0] - batch))
+        f = batch / b_meas
+        return (p * f, d * f)
+
+
+def calibrate(engine, cache: StepTimeCache, *, batch_sizes: Iterable[int],
+              prompt_len: int, max_new: int, vocab: int,
+              num_slots: Optional[int] = None,
+              max_seq: int = 256) -> StepTimeCache:
+    """Populate ``cache`` with real measurements for the given shapes.
+
+    Measures batched ``generate`` for each batch size, plus the
+    continuous-batching primitives (single-prompt prefill, fused decode step)
+    when ``num_slots`` is given.  After calibration a SchedulerCore run over a
+    workload of these shapes is pure replay — no model execution.
+    """
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(0)
+    sb = shape_bucket(prompt_len)
+    for B in batch_sizes:
+        prompts = rng.randint(0, vocab, size=(B, sb)).astype(np.int32)
+        engine.generate(prompts, max_new)        # warm: keep one-time XLA
+        res = engine.generate(prompts, max_new)  # compile out of the cache
+        cache.put(("generate", B, sb, max_new), (res.prefill_s, res.decode_s))
+    if num_slots is not None:
+        from repro.models import transformer
+
+        prompt = rng.randint(0, vocab, size=(sb,)).astype(np.int32)
+        engine.prefill_one(prompt[None, :])      # warm
+        t0 = time.perf_counter()
+        logits, _sub = engine.prefill_one(prompt[None, :])
+        jnp.argmax(logits, -1).block_until_ready()
+        cache.put(("prefill1", sb), (time.perf_counter() - t0,))
+
+        kv = transformer.init_cache(engine.cfg, num_slots, max_seq)
+        tok = jnp.zeros((num_slots,), jnp.int32)
+        _logits, kv = engine.decode_batch(kv, tok)  # warm (kv donated)
+        t0 = time.perf_counter()
+        logits, _kv = engine.decode_batch(kv, tok)
+        jnp.argmax(logits, -1).block_until_ready()
+        cache.put(("decode", num_slots), (time.perf_counter() - t0,))
+    return cache

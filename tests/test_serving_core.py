@@ -1,0 +1,231 @@
+"""SchedulerCore / EnergyMeter / StepTimeCache contract tests.
+
+Covers the event-driven serving core's load-bearing invariants:
+  * policy equivalence — every TD3 policy produces the same greedy token
+    stream for the same workload (batching must not change outputs);
+  * per-request retirement — short requests in a batch retire (and stop
+    being billed) at their own last token, not the batch's longest;
+  * energy conservation — per-request attribution sums to the active energy
+    and total = active + idle;
+  * step-time-cache determinism — a warm cache replays the exact timeline
+    (identical ServingMetrics) of the run that populated it;
+  * adaptive batching — the SLO/energy-aware policy shrinks its batch under
+    a tight TTFT target and maximizes it under a loose one.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.engines import CompiledEngine, GenerationResult
+from repro.energy.meter import EnergyMeter
+from repro.models import init_params
+from repro.serving.request import Request, synth_workload
+from repro.serving.scheduler import (
+    AdaptiveBatchScheduler,
+    ContinuousBatchScheduler,
+    DynamicBatchScheduler,
+    RealTimeScheduler,
+    make_scheduler,
+)
+from repro.serving.stepcache import StepTimeCache, calibrate, shape_bucket
+
+ARCH = "minitron-4b-smoke"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = CompiledEngine(cfg, params, max_seq=64)
+    return cfg, engine
+
+
+class FakeEngine:
+    """Deterministic timings, no model — for core-mechanics tests."""
+
+    cfg = None
+
+    def __init__(self, prefill_s=0.01, step_s=0.005):
+        self.prefill_s = prefill_s
+        self.step_s = step_s
+
+    def generate(self, tokens, max_new):
+        B = tokens.shape[0]
+        return GenerationResult(
+            tokens=np.ones((B, max_new), np.int32),
+            prefill_s=self.prefill_s,
+            decode_s=self.step_s * (max_new - 1),
+            n_steps=max_new,
+        )
+
+
+# -- policy equivalence --------------------------------------------------------
+
+
+def test_policies_produce_identical_token_streams(setup):
+    cfg, engine = setup
+    wl = lambda: synth_workload(4, 8, 3, cfg.vocab_size,  # noqa: E731
+                                rate_per_s=1000, seed=3)
+    streams = {}
+    for sched in [
+        RealTimeScheduler(engine),
+        DynamicBatchScheduler(engine, max_batch=4, timeout_ms=10),
+        AdaptiveBatchScheduler(engine, max_batch=4),
+        ContinuousBatchScheduler(engine, num_slots=2, max_seq=64),
+    ]:
+        m = sched.run(wl())
+        assert len(m.responses) == 4
+        streams[sched.name] = {r.rid: np.asarray(r.tokens)
+                               for r in m.responses}
+    base = streams["realtime"]
+    for name, by_rid in streams.items():
+        for rid in base:
+            np.testing.assert_array_equal(base[rid], by_rid[rid],
+                                          err_msg=f"{name} rid={rid}")
+
+
+# -- per-request retirement (the dynamic-batch done_s fix) ---------------------
+
+
+def test_short_request_retires_before_long_one():
+    eng = FakeEngine(prefill_s=0.01, step_s=0.01)
+    wl = [
+        Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                max_new_tokens=2, arrival_s=0.0),
+        Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                max_new_tokens=8, arrival_s=0.0),
+    ]
+    m = DynamicBatchScheduler(eng, max_batch=2, timeout_ms=1).run(wl)
+    by = {r.rid: r for r in m.responses}
+    assert len(by[0].tokens) == 2 and len(by[1].tokens) == 8
+    # rid 0's 2nd token lands one decode step after prefill; rid 1 runs the
+    # full decode — it must NOT share its completion time with rid 0
+    assert by[0].done_s < by[1].done_s
+    assert by[0].done_s == pytest.approx(by[0].first_token_s + 0.01)
+    assert by[1].done_s == pytest.approx(by[1].first_token_s + 7 * 0.01)
+    # and rid 0 is billed strictly less energy than rid 1
+    assert m.meter.per_request_j[0] < m.meter.per_request_j[1]
+
+
+# -- energy conservation -------------------------------------------------------
+
+
+def test_energy_meter_conservation_unit():
+    meter = EnergyMeter(active_power_w=10.0, idle_power_w=3.0)
+    meter.record_active(2.0, rids=[1, 2], tokens=4)
+    meter.record_active_shared(0.0, {3: 1.0, 4: 3.0}, tokens=6)
+    meter.record_idle(5.0)
+    assert meter.active_j == pytest.approx(5.0 * 10.0)
+    assert meter.idle_j == pytest.approx(5.0 * 3.0)
+    assert meter.total_j == pytest.approx(meter.active_j + meter.idle_j)
+    assert sum(meter.per_request_j.values()) == pytest.approx(meter.active_j)
+    # shared window: rid 3 resident for [0,1] (shared), rid 4 alone for [1,3]
+    assert meter.per_request_j[3] == pytest.approx(5.0)
+    assert meter.per_request_j[4] == pytest.approx(5.0 + 20.0)
+    assert meter.total_tokens == 10
+
+
+@pytest.mark.parametrize("kind", ["realtime", "dynamic_batch",
+                                  "adaptive_batch"])
+def test_scheduler_energy_conserves(kind):
+    eng = FakeEngine()
+    wl = synth_workload(9, 8, 4, 100, rate_per_s=50, seed=3)
+    m = make_scheduler(kind, eng, max_batch=4, timeout_ms=5).run(wl)
+    assert len(m.responses) == 9
+    assert sum(m.meter.per_request_j.values()) == pytest.approx(
+        m.meter.active_j)
+    assert m.energy_j == pytest.approx(m.meter.active_j + m.meter.idle_j)
+    assert m.meter.total_tokens == m.total_tokens
+    for r in m.responses:
+        assert r.start_s >= r.arrival_s - 1e-9
+        assert r.done_s >= r.first_token_s >= r.start_s
+
+
+def test_continuous_energy_conserves(setup):
+    cfg, engine = setup
+    wl = synth_workload(5, 8, 3, cfg.vocab_size, rate_per_s=100, seed=1)
+    m = ContinuousBatchScheduler(engine, num_slots=4, max_seq=64).run(wl)
+    assert sum(m.meter.per_request_j.values()) == pytest.approx(
+        m.meter.active_j)
+    assert m.energy_j == pytest.approx(m.meter.active_j + m.meter.idle_j)
+
+
+# -- step-time-cache determinism ----------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["realtime", "dynamic_batch",
+                                  "continuous_batch"])
+def test_step_cache_replay_is_deterministic(setup, kind):
+    """A warm cache must replay the exact timeline of the populating run."""
+    cfg, engine = setup
+    cache = StepTimeCache()
+    wl = lambda: synth_workload(8, 8, 3, cfg.vocab_size,  # noqa: E731
+                                rate_per_s=300, seed=7)
+    runs = []
+    for _ in range(2):
+        sched = make_scheduler(kind, engine, max_batch=4, timeout_ms=10,
+                               max_seq=64, step_cache=cache)
+        runs.append(sched.run(wl()))
+    a, b = runs
+    assert a.summary() == b.summary()
+    assert a.meter.per_request_j == pytest.approx(b.meter.per_request_j)
+    done_a = sorted((r.rid, r.done_s) for r in a.responses)
+    done_b = sorted((r.rid, r.done_s) for r in b.responses)
+    assert done_a == done_b
+
+
+def test_step_cache_replays_without_execution(setup):
+    """Once calibrated, large workloads never touch the engine."""
+    cfg, engine = setup
+
+    class Guard:
+        def __init__(self, inner):
+            self.inner = inner
+            self.cfg = inner.cfg
+            self.calls = 0
+
+        def generate(self, tokens, max_new):
+            self.calls += 1
+            return self.inner.generate(tokens, max_new)
+
+    cache = StepTimeCache()
+    calibrate(engine, cache, batch_sizes=[1, 2, 3, 4], prompt_len=8,
+              max_new=3, vocab=cfg.vocab_size)
+    guard = Guard(engine)
+    wl = synth_workload(50, 8, 3, cfg.vocab_size, rate_per_s=1000, seed=5)
+    m = DynamicBatchScheduler(guard, max_batch=4, timeout_ms=10,
+                              step_cache=cache).run(wl)
+    assert len(m.responses) == 50
+    # every batch shape was calibrated -> pure replay, zero engine calls
+    assert guard.calls == 0
+
+
+# -- adaptive batching ---------------------------------------------------------
+
+
+def test_adaptive_batch_sizes_to_slo(setup):
+    cfg, engine = setup
+    cache = StepTimeCache()
+    calibrate(engine, cache, batch_sizes=[1, 2, 4, 8], prompt_len=8,
+              max_new=3, vocab=cfg.vocab_size)
+    wl = lambda: synth_workload(40, 8, 3, cfg.vocab_size,  # noqa: E731
+                                rate_per_s=400, seed=9)
+    tight = AdaptiveBatchScheduler(engine, max_batch=8, ttft_slo_ms=1e-3,
+                                   step_cache=cache)
+    m_tight = tight.run(wl())
+    loose = AdaptiveBatchScheduler(engine, max_batch=8, ttft_slo_ms=60_000,
+                                   step_cache=cache)
+    m_loose = loose.run(wl())
+    assert len(m_tight.responses) == len(m_loose.responses) == 40
+    # impossible SLO -> fall back to lowest-TTFT dispatch (batch=1);
+    # no SLO pressure -> grow to whatever batch measures energy-optimal
+    assert all(b == 1 for b in tight.policy.chosen)
+    assert max(loose.policy.chosen) >= 4
+    assert (m_loose.energy_per_token_j < m_tight.energy_per_token_j)
+
+
+def test_shape_bucket():
+    assert [shape_bucket(n) for n in (1, 2, 3, 8, 9, 17)] == \
+        [1, 2, 4, 8, 16, 32]
