@@ -1,43 +1,85 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes the serving results
+(fleet policy x router grid + TD3 batching summaries) to a machine-readable
+``BENCH_serving.json`` so the energy/latency trajectory is tracked run over
+run (the CI bench job uploads it as an artifact).
 
   bench_serving_infra  - Table 1, Serving Infrastructure rows (SI1..SI4)
   bench_batching       - Table 1, TD3 request-processing row (Yarally'23)
+  bench_fleet          - fleet layer: policy x router grid, 2-endpoint 5k run
   bench_formats        - Table 1, TD2 model-format row
   bench_codecs         - Table 1, TD4 communication-protocol row
   bench_adds           - Table 1 executed as GreenReports (all qualities)
   bench_kernels        - Pallas kernels vs oracles
   bench_roofline       - deliverable (g): roofline terms per (arch x shape)
+
+``--only mod1,mod2`` restricts the run (used by the CI serving smoke job).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def write_serving_json(path: str, results: dict) -> None:
+    """BENCH_serving.json: {fleet_grid: [...], batching: {name: summary}}."""
+    doc = {"generated_by": "benchmarks/run.py"}
+    if "bench_fleet" in results:
+        doc["fleet_grid"] = results["bench_fleet"]
+    if "bench_batching" in results:
+        doc["batching"] = {
+            name: m.summary() for name, m in results["bench_batching"].items()
+        }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
+def main(argv=None) -> None:
     from benchmarks import (
         bench_adds,
         bench_batching,
         bench_codecs,
+        bench_fleet,
         bench_formats,
         bench_kernels,
         bench_roofline,
         bench_serving_infra,
     )
 
+    modules = [bench_codecs, bench_formats, bench_kernels,
+               bench_serving_infra, bench_batching, bench_fleet, bench_adds,
+               bench_roofline]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated module names (e.g. bench_fleet)")
+    ap.add_argument("--serving-json", default="BENCH_serving.json",
+                    help="where to write the serving results JSON")
+    ns = ap.parse_args(argv)
+    if ns.only:
+        wanted = {w if w.startswith("bench_") else f"bench_{w}"
+                  for w in ns.only.split(",") if w}
+        modules = [m for m in modules
+                   if m.__name__.split(".")[-1] in wanted]
+        if not modules:
+            print(f"# no modules match --only={ns.only}", file=sys.stderr)
+            sys.exit(2)
+
     print("name,us_per_call,derived")
+    results = {}
     failed = []
-    for mod in (bench_codecs, bench_formats, bench_kernels,
-                bench_serving_infra, bench_batching, bench_adds,
-                bench_roofline):
+    for mod in modules:
         try:
-            mod.run()
+            results[mod.__name__.split(".")[-1]] = mod.run()
         except Exception as e:  # noqa: BLE001
             failed.append((mod.__name__, e))
             traceback.print_exc()
+    if "bench_fleet" in results or "bench_batching" in results:
+        write_serving_json(ns.serving_json, results)
     if failed:
         print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)
         sys.exit(1)

@@ -66,6 +66,12 @@ class Deployment:
     # SI4 knobs
     min_replicas: int = 1
     max_replicas: int = 1  # >1 only meaningful under SI4 (cloud autoscaling)
+    # SI4 fleet knobs: per-arrival replica routing and virtual-time
+    # autoscaling (see repro.serving.fleet)
+    # router: round_robin | least_loaded | warmest | greenest
+    router: str = "round_robin"
+    autoscale_window_s: float = 1.0    # pool re-sized every W virtual seconds
+    cold_start_s: float = 0.25         # scale-up provisioning penalty
 
     def validate(self) -> List[str]:
         """Returns a list of violated compatibility constraints (empty = ok)."""
@@ -90,6 +96,15 @@ class Deployment:
         if si != ServingInfrastructure.SI4_CLOUD_SERVICE and \
                 self.max_replicas > 1:
             errs.append("autoscaling replicas are an SI4 (cloud) capability")
+        from repro.serving.fleet import ROUTERS  # deferred: avoids a cycle
+
+        if self.router not in ROUTERS:
+            errs.append(f"unknown router {self.router!r}; "
+                        f"known: {sorted(ROUTERS)}")
+        if self.autoscale_window_s <= 0:
+            errs.append("autoscale_window_s must be > 0")
+        if self.cold_start_s < 0:
+            errs.append("cold_start_s must be >= 0")
         return errs
 
     def require_valid(self) -> "Deployment":

@@ -20,9 +20,22 @@ the active energy, and ``total_j == active_j + idle_j``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable
+from typing import Dict, Iterable, Optional
 
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
+
+
+def estimate_j_per_token(active_power_w: float, prefill_s: float,
+                         decode_s: float, batch: int,
+                         max_new_tokens: int) -> float:
+    """Predicted J/token of a batched dispatch from measured step times.
+
+    The ONE pricing formula shared by the adaptive policy's batch sizing and
+    the fleet's route-to-greenest marginal-cost ranking, so refining the
+    energy model keeps admission and routing consistent.
+    """
+    return (active_power_w * (prefill_s + decode_s)
+            / (max(batch, 1) * max(max_new_tokens, 1)))
 
 
 @dataclasses.dataclass
@@ -33,6 +46,9 @@ class EnergyMeter:
     idle_s: float = 0.0
     total_tokens: int = 0
     per_request_j: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # provenance of merged meters (fleet use): source -> active/idle split
+    by_source: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
     # -- recording ------------------------------------------------------------
     def record_active(self, dur_s: float, rids: Iterable[int] = (),
@@ -84,13 +100,48 @@ class EnergyMeter:
         self.idle_s += dur_s
         return dur_s * self.idle_power_w
 
-    def merge(self, other: "EnergyMeter") -> "EnergyMeter":
-        self.active_s += other.active_s
-        self.idle_s += other.idle_s
+    def merge(self, other: "EnergyMeter",
+              source: Optional[str] = None) -> "EnergyMeter":
+        """Fold ``other`` into this meter.
+
+        With ``source`` set (fleet use: ``"endpoint/r3"``) the merged meter
+        keeps per-source provenance — the active/idle second and joule split
+        of every contributor — so a fleet total can always be decomposed back
+        into its replicas (and that decomposition is what the conservation
+        tests check).  The merge is *joule-preserving*: a contributor's
+        energy is folded in as equivalent seconds at THIS meter's power
+        rates, so ``total_j`` equals the sum of its contributors even when
+        replicas run at heterogeneous power envelopes.
+        """
+        if self.active_power_w > 0:
+            self.active_s += other.active_j / self.active_power_w
+        else:
+            self.active_s += other.active_s
+        if self.idle_power_w > 0:
+            self.idle_s += other.idle_j / self.idle_power_w
+        else:
+            self.idle_s += other.idle_s
         self.total_tokens += other.total_tokens
         for rid, j in other.per_request_j.items():
             self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + j
+        if other.by_source:            # nested merge: carry provenance through
+            for src, d in other.by_source.items():
+                self._add_source(src, d["active_s"], d["idle_s"],
+                                 d["active_j"], d["idle_j"])
+        elif source is not None:
+            self._add_source(source, other.active_s, other.idle_s,
+                             other.active_j, other.idle_j)
         return self
+
+    def _add_source(self, source: str, active_s: float, idle_s: float,
+                    active_j: float, idle_j: float) -> None:
+        d = self.by_source.setdefault(
+            source, {"active_s": 0.0, "idle_s": 0.0,
+                     "active_j": 0.0, "idle_j": 0.0})
+        d["active_s"] += active_s
+        d["idle_s"] += idle_s
+        d["active_j"] += active_j
+        d["idle_j"] += idle_j
 
     # -- accounting -----------------------------------------------------------
     @property
@@ -113,7 +164,7 @@ class EnergyMeter:
         return self.per_request_j.get(rid, 0.0)
 
     def summary(self) -> dict:
-        return {
+        d = {
             "active_s": round(self.active_s, 6),
             "idle_s": round(self.idle_s, 6),
             "active_j": round(self.active_j, 6),
@@ -121,3 +172,9 @@ class EnergyMeter:
             "total_j": round(self.total_j, 6),
             "j_per_token": round(self.energy_per_token_j, 6),
         }
+        if self.by_source:
+            d["by_source"] = {
+                src: {k: round(v, 6) for k, v in split.items()}
+                for src, split in sorted(self.by_source.items())
+            }
+        return d

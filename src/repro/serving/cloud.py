@@ -1,12 +1,15 @@
-"""SI4 'End-to-end ML cloud service': registry + autoscaled managed endpoints.
+"""SI4 'End-to-end ML cloud service': registry + fleet-served endpoints.
 
 The SageMaker/Vertex analogue: models live in a registry (persisted via the
-TD2 formats), ``deploy`` creates a managed endpoint with replicas, and an
-autoscaling policy sizes the replica pool from the offered load.  Replication
-is simulated in virtual time (round-robin dispatch, merged metrics) with the
-idle energy of provisioned-but-underutilized replicas charged to the endpoint
-— the "ready-to-use but you pay for the abstraction" trade-off the paper
-describes for SI4.
+TD2 formats), ``deploy`` creates a managed endpoint, and ``predict`` serves a
+workload through a :class:`repro.serving.fleet.ReplicaFleet` — N event-driven
+scheduler cores on one shared virtual timeline, with a pluggable per-arrival
+router and a windowed autoscaler that re-sizes the replica pool in virtual
+time.  ``predict_multi`` runs *several* named endpoints on one timeline, so
+routing and autoscaling trade energy globally.  The idle energy of
+provisioned-but-underutilized replicas is charged to the endpoint with
+per-replica provenance — the "ready-to-use but you pay for the abstraction"
+trade-off the paper describes for SI4, now decomposable replica by replica.
 """
 
 from __future__ import annotations
@@ -14,15 +17,23 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 from repro.configs import get_arch
-from repro.core.add import Deployment, ModelFormat
+from repro.core.add import Deployment, ModelFormat, ServingInfrastructure
+from repro.core.engines import CompiledEngine, EagerEngine, Engine
 from repro.energy.meter import EnergyMeter
 from repro.models import init_params
 from repro.serving import formats
+from repro.serving.fleet import (
+    Autoscaler,
+    EndpointSpec,
+    FleetResult,
+    ReplicaFleet,
+)
 from repro.serving.request import Request, ServingMetrics
-from repro.serving.server import ModelPackage, ServingServer
+from repro.serving.scheduler import make_policy
+from repro.serving.stepcache import StepTimeCache, calibrate
 
 
 class ModelRegistry:
@@ -51,15 +62,29 @@ class ModelRegistry:
         return formats.load_rsm(template, path, as_qtensor=as_qtensor)
 
     def versions(self, name: str) -> List[int]:
+        """Stored versions of exactly ``name``.
+
+        Entries are ``<name>-v<int>``; split on the *last* ``-v`` so model
+        names that themselves contain ``-v`` (e.g. ``yi-v2``) neither leak
+        into other models' listings nor lose their own, and skip suffixes
+        that are not integers.
+        """
         out = []
         for d in os.listdir(self.root):
-            if d.startswith(name + "-v"):
-                out.append(int(d.split("-v")[-1].split(".")[0]))
+            base, sep, suffix = d.rpartition("-v")
+            if not sep or base != name:
+                continue
+            try:
+                out.append(int(suffix.split(".")[0]))
+            except ValueError:
+                continue
         return sorted(set(out))
 
 
 @dataclasses.dataclass
 class AutoscalePolicy:
+    """Initial M/M/c sizing; the fleet's windowed Autoscaler takes over."""
+
     target_utilization: float = 0.7
     min_replicas: int = 1
     max_replicas: int = 4
@@ -69,6 +94,26 @@ class AutoscalePolicy:
         needed = rate_per_s * service_time_s / self.target_utilization
         return max(self.min_replicas,
                    min(self.max_replicas, math.ceil(needed)))
+
+
+def absorb_part(meter: EnergyMeter, m: ServingMetrics,
+                source: Optional[str] = None) -> EnergyMeter:
+    """Fold one partition's metrics into an endpoint-level meter.
+
+    This is the (fixed) legacy merge path for callers that combine
+    partition metrics *outside* the fleet — e.g. results of separate
+    ``ServingServer.handle`` calls.  The fleet itself always has per-replica
+    meters and merges with provenance; this helper exists so any external
+    aggregation inherits the corrected accounting: a partition without an
+    EnergyMeter is billed as active compute with *its own* token count —
+    never a running cumulative total, which used to inflate per-token
+    attribution for every partition after the first (regression-tested).
+    """
+    if m.meter is not None:
+        meter.merge(m.meter, source=source)
+    else:
+        meter.record_active(m.wall_compute_s, tokens=m.total_tokens)
+    return meter
 
 
 class CloudService:
@@ -95,25 +140,42 @@ class CloudService:
             name, version, template_params, deployment.model_format,
             as_qtensor=(deployment.model_format == ModelFormat.RSM_INT8),
         )
-        policy = AutoscalePolicy(
-            min_replicas=deployment.min_replicas,
-            max_replicas=deployment.max_replicas,
-        )
-        # replicas share one ServingServer (same compiled executable) and are
-        # simulated by workload partitioning in virtual time
-        server = ServingServer(deployment)
-        server.register(ModelPackage(name=name, arch=deployment.arch,
-                                     params=params, version=version,
-                                     max_seq=deployment.max_seq))
+        # fleet replicas share one engine (same compiled executables) and are
+        # simulated as independent scheduler cores in virtual time
+        if deployment.si == ServingInfrastructure.SI1_NO_RUNTIME:
+            engine: Engine = EagerEngine(cfg, params, deployment.max_seq)
+        else:
+            engine = CompiledEngine(cfg, params, deployment.max_seq)
         self.endpoints[name] = {
-            "server": server, "policy": policy, "deployment": deployment,
+            "engine": engine,
+            "deployment": deployment,
+            "policy": AutoscalePolicy(
+                min_replicas=deployment.min_replicas,
+                max_replicas=deployment.max_replicas,
+            ),
+            "warm_cache": None,
+            "version": version,
         }
         return f"https://cloud.local/endpoints/{name}"
 
-    def predict(self, name: str, workload: List[Request],
-                service_time_hint_s: Optional[float] = None) -> ServingMetrics:
+    def calibrate_endpoint(self, name: str, *, batch_sizes, prompt_len: int,
+                           max_new: int) -> StepTimeCache:
+        """Measure step times once; every fleet replica is seeded from this
+        cache, so large predict() workloads are pure virtual-time replay."""
         ep = self.endpoints[name]
-        server: ServingServer = ep["server"]
+        cache = ep["warm_cache"] or StepTimeCache()
+        cfg = get_arch(ep["deployment"].arch)
+        calibrate(ep["engine"], cache, batch_sizes=batch_sizes,
+                  prompt_len=prompt_len, max_new=max_new,
+                  vocab=cfg.vocab_size)
+        ep["warm_cache"] = cache
+        return cache
+
+    # -- serving ---------------------------------------------------------------
+    def _spec(self, name: str, workload: List[Request],
+              hint_s: Optional[float]) -> EndpointSpec:
+        ep = self.endpoints[name]
+        dep: Deployment = ep["deployment"]
         policy: AutoscalePolicy = ep["policy"]
         if len(workload) > 1:
             span = max(r.arrival_s for r in workload) - min(
@@ -122,33 +184,83 @@ class CloudService:
             rate = len(workload) / max(span, 1e-6)
         else:
             rate = 1.0
-        hint = service_time_hint_s or 0.1
-        R = policy.replicas_for(rate, hint)
-        ep["replicas"] = R
-        # round-robin partition across replicas; replicas run in parallel
-        # virtual time, so merged metrics keep per-request latencies
-        parts: List[List[Request]] = [[] for _ in range(R)]
-        for i, req in enumerate(sorted(workload, key=lambda r: r.arrival_s)):
-            parts[i % R].append(req)
-        merged_responses = []
-        wall = 0.0
-        tokens = 0
-        span_end = 0.0
-        meter = EnergyMeter()           # endpoint-level accounting
-        for part in parts:
-            if not part:
-                continue
-            m = server.handle(name, part)
-            merged_responses.extend(m.responses)
-            wall += m.wall_compute_s
-            tokens += m.total_tokens
-            if m.meter is not None:
-                meter.merge(m.meter)
-            else:                       # pragma: no cover - legacy scheduler
-                meter.record_active(m.wall_compute_s, tokens=m.total_tokens)
-            span_end = max(span_end, max(r.done_s for r in m.responses))
-        # idle energy of provisioned replicas (the SI4 abstraction cost): every
-        # replica is up for the whole span; bill the part no replica metered
-        meter.record_idle(max(0.0, span_end * R - meter.active_s - meter.idle_s))
-        return ServingMetrics(merged_responses, wall, meter.total_j, tokens,
-                              meter=meter)
+        hint = hint_s or 0.1
+        return EndpointSpec(
+            name=name,
+            engine=ep["engine"],
+            policy_factory=lambda: make_policy(
+                dep.request_processing.value,
+                max_batch=dep.max_batch,
+                timeout_ms=dep.batch_timeout_ms,
+                max_seq=dep.max_seq,
+                ttft_slo_ms=dep.ttft_slo_ms,
+            ),
+            min_replicas=dep.min_replicas,
+            max_replicas=dep.max_replicas,
+            initial_replicas=policy.replicas_for(rate, hint),
+            service_time_hint_s=hint,
+            ttft_slo_s=dep.ttft_slo_ms / 1e3,
+            warm_cache=ep["warm_cache"],
+        )
+
+    def predict_multi(
+        self,
+        workloads: Dict[str, List[Request]],
+        service_time_hint_s: Union[None, float, Dict[str, float]] = None,
+        router: Optional[str] = None,
+    ) -> FleetResult:
+        """Serve several endpoints on ONE shared virtual timeline.
+
+        A single router places every arrival, and one windowed autoscaler
+        re-sizes each endpoint's pool — so energy can be traded across
+        endpoints (e.g. ``greenest`` consolidates load fleet-wide).  Request
+        ids must be unique across the combined workloads.
+        """
+        if not workloads:
+            raise ValueError("no workloads")
+        deps = {name: self.endpoints[name]["deployment"]
+                for name in workloads}
+        # the fleet-level knobs are shared by construction: refuse to pick
+        # one endpoint's configuration over another's silently
+        if router is None:
+            routers = {d.router for d in deps.values()}
+            if len(routers) > 1:
+                raise ValueError(
+                    f"endpoints disagree on router {sorted(routers)}; "
+                    "pass router= explicitly")
+        windows = {(d.autoscale_window_s, d.cold_start_s)
+                   for d in deps.values()}
+        if len(windows) > 1:
+            raise ValueError(
+                "endpoints disagree on (autoscale_window_s, cold_start_s): "
+                f"{sorted(windows)}")
+        dep: Deployment = next(iter(deps.values()))
+        fleet = ReplicaFleet(
+            router=router or dep.router,
+            autoscaler=Autoscaler(window_s=dep.autoscale_window_s,
+                                  cold_start_s=dep.cold_start_s),
+        )
+        for name, wl in workloads.items():
+            hint = service_time_hint_s.get(name) \
+                if isinstance(service_time_hint_s, dict) \
+                else service_time_hint_s
+            fleet.add_endpoint(self._spec(name, wl, hint))
+        result = fleet.run(workloads)
+        for name in workloads:
+            stats = result.endpoints[name].fleet or {}
+            ep = self.endpoints[name]
+            # peak concurrent pool size (the old M/M/c R analogue), NOT the
+            # cumulative spawn count — autoscale churn can mint more
+            # replicas than ever ran at once
+            ep["replicas"] = stats.get("peak_replicas", 0)
+            ep["fleet_stats"] = stats
+        return result
+
+    def predict(self, name: str, workload: List[Request],
+                service_time_hint_s: Optional[float] = None,
+                router: Optional[str] = None) -> ServingMetrics:
+        """Single-endpoint serve (a one-endpoint fleet on its own timeline)."""
+        result = self.predict_multi({name: workload},
+                                    service_time_hint_s=service_time_hint_s,
+                                    router=router)
+        return result.endpoints[name]

@@ -22,10 +22,21 @@ A policy implements three small hooks (:meth:`SchedulingPolicy.reset`,
 :meth:`~SchedulingPolicy.step`, :meth:`~SchedulingPolicy.active`) and drives
 the core's primitives; see ``repro.serving.scheduler`` for the four concrete
 policies.
+
+Two entry modes share one event loop:
+
+  * **batch mode** — :meth:`SchedulerCore.run` takes a whole workload and
+    drains it to completion (the PR-1 interface, unchanged);
+  * **incremental mode** — :meth:`~SchedulerCore.begin`, then a router feeds
+    arrivals one at a time via :meth:`~SchedulerCore.offer` and advances the
+    replica with :meth:`~SchedulerCore.drain_until`; :meth:`~SchedulerCore.
+    finish` closes the run.  This is what :class:`repro.serving.fleet.
+    ReplicaFleet` uses to run N cores on one shared virtual timeline.
 """
 
 from __future__ import annotations
 
+import bisect
 import time
 from typing import Callable, List, Optional, Tuple
 
@@ -54,9 +65,15 @@ class SchedulingPolicy:
     ``step`` handles one scheduling event (admit a batch, advance a decode
     step, ...) using the core's primitives and MUST make progress — either
     consume pending arrivals, retire active work, or advance the clock.
+
+    ``admission_lookahead_s`` tells an incremental driver (the fleet) how far
+    past an arrival this policy's admission window extends: a windowing
+    policy must not be drained right up to the routing frontier, or it would
+    close batches that later-routed arrivals could still have joined.
     """
 
     name = "abstract"
+    admission_lookahead_s = 0.0
 
     def reset(self, core: "SchedulerCore") -> None:
         """Called at the start of every run; (re)initialize policy state."""
@@ -111,6 +128,16 @@ class SchedulerCore:
 
     def has_pending(self) -> bool:
         return self._head < len(self.pending)
+
+    def pending_within(self, t: float) -> List[Request]:
+        """Queued-but-unpopped arrivals with ``arrival_s <= t`` (for SLO-aware
+        policies that size a batch from what is visible in the window)."""
+        out = []
+        for req in self.pending[self._head:]:
+            if req.arrival_s > t:
+                break
+            out.append(req)
+        return out
 
     @property
     def vocab(self) -> int:
@@ -196,10 +223,49 @@ class SchedulerCore:
         self.total_tokens += len(tokens)
 
     # -- the event loop -------------------------------------------------------
+    def begin(self) -> None:
+        """Start an incremental run (arrivals fed later via :meth:`offer`)."""
+        self._reset([])
+        self.policy.reset(self)
+
+    def offer(self, req: Request) -> None:
+        """Enqueue one arrival.  Routers offer in global arrival order, so
+        this is an O(1) append; out-of-order offers fall back to insort."""
+        if not self.pending or req.arrival_s >= self.pending[-1].arrival_s:
+            self.pending.append(req)
+        else:
+            lo = bisect.bisect_right(
+                [r.arrival_s for r in self.pending[self._head:]],
+                req.arrival_s,
+            )
+            self.pending.insert(self._head + lo, req)
+
+    def drain_until(self, horizon: float = float("inf")) -> None:
+        """Process events whose arrivals lie at or before ``horizon``.
+
+        No step *begins* at or past the horizon: once the clock reaches it,
+        the core pauses — policy slot/batch state persists across calls —
+        and resumes next window after the router has offered that window's
+        arrivals.  Since admission is gated on ``arrival_s <= now`` and
+        every step starts with ``now < horizon`` (a frontier the router has
+        fully routed), an incremental run admits exactly what a batch-mode
+        run would: a 1-replica fleet reproduces ``run()``'s timeline
+        (tested).  A single dispatch may still legitimately *end* past the
+        horizon; the crossing step simply becomes the window's last.
+        """
+        while self.clock < horizon:
+            nxt = self.peek()
+            ready = nxt is not None and nxt.arrival_s <= horizon
+            if not ready and not self.policy.active(self):
+                break
+            self.policy.step(self)
+
+    def finish(self) -> ServingMetrics:
+        return ServingMetrics(self.responses, self.wall, self.meter.total_j,
+                              self.total_tokens, meter=self.meter)
+
     def run(self, workload: List[Request]) -> ServingMetrics:
         self._reset(workload)
         self.policy.reset(self)
-        while self.has_pending() or self.policy.active(self):
-            self.policy.step(self)
-        return ServingMetrics(self.responses, self.wall, self.meter.total_j,
-                              self.total_tokens, meter=self.meter)
+        self.drain_until()
+        return self.finish()

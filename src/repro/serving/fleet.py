@@ -1,0 +1,590 @@
+"""Virtual-time replica fleet: shared-timeline routing + windowed autoscaling.
+
+The paper's SI4 trade-off — a managed endpoint is "ready to use, but you pay
+for the abstraction" in provisioned-but-idle replicas — only becomes an
+*architectural* decision once replicas, routing and autoscaling are first
+class.  ``ReplicaFleet`` runs N :class:`~repro.serving.core.SchedulerCore`
+instances (one per replica: engine + its own policy instance + its own
+step-time cache + its own :class:`~repro.energy.meter.EnergyMeter`) on one
+shared virtual timeline, across any number of named endpoints:
+
+  * a pluggable :class:`RoutingPolicy` decides per-arrival placement —
+    ``round_robin``, ``least_loaded`` (join-shortest-queue),
+    ``warmest`` (step-cache affinity: reuse a replica that has already
+    measured this shape) and ``greenest`` (minimize the estimated *marginal*
+    J/token of adding this request, which consolidates load so batches
+    amortize and spare replicas can be scaled away);
+  * every router first prefers replicas that can still honor an arrival's
+    per-request :attr:`~repro.serving.request.Request.slo_ms` budget;
+  * a windowed :class:`Autoscaler` re-sizes each endpoint's pool every
+    ``window_s`` of virtual time from the observed arrival rate and the
+    *measured* per-request service time — scaled-down replicas drain their
+    queue and then stop accruing idle energy; scaled-up replicas pay a
+    cold-start penalty (provisioned-and-drawing but not yet serving).
+
+Simulation semantics: arrivals are processed in windows.  All arrivals of a
+window are routed (and offered to their replica's core) before any core is
+drained, so intra-window batching is exact; each core is then drained only up
+to ``window_end - policy.admission_lookahead_s`` so a batch whose admission
+window is still open waits for the next routing round.  Everything is
+deterministic given the workload, and energy is conserved: the merged fleet
+meter decomposes exactly into its per-replica contributions (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
+from repro.energy.meter import EnergyMeter, estimate_j_per_token
+from repro.serving.core import SchedulerCore, SchedulingPolicy
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.stepcache import StepTimeCache, shape_bucket
+
+
+# -- replicas ------------------------------------------------------------------
+
+
+class Replica:
+    """One scheduler core with a fleet lifecycle.
+
+    States: ``starting`` (cold start: provisioned and drawing idle power but
+    not yet serving) -> ``serving`` -> ``draining`` (router excludes it; it
+    finishes queued work) -> ``stopped`` (deprovisioned: no further idle
+    draw — this is the whole point of scaling down).
+    """
+
+    def __init__(self, name: str, endpoint: str, core: SchedulerCore,
+                 created_s: float, ready_s: float):
+        self.name = name
+        self.endpoint = endpoint
+        self.core = core
+        self.created_s = created_s
+        self.ready_s = ready_s
+        self.cold_start = ready_s > created_s
+        self.draining = False
+        self.drain_mark_s = 0.0            # when the scale-down was decided
+        self.stopped_s: Optional[float] = None
+        self.offered = 0
+        core.begin()
+        if self.cold_start:
+            # cold start: the replica draws idle power while it provisions;
+            # its clock starts where it becomes able to serve
+            core.meter.record_idle(ready_s - created_s)
+        core.clock = ready_s
+
+    @property
+    def backlog(self) -> int:
+        """Offered-but-unretired requests (queued + in flight)."""
+        return self.offered - len(self.core.responses)
+
+    def serving(self, t: float) -> bool:
+        """Can the router hand this replica an arrival at time ``t``?"""
+        return self.stopped_s is None and not self.draining \
+            and self.ready_s <= t
+
+    def eta_wait_s(self, t: float, svc_s: float) -> float:
+        """Estimated queueing delay for work arriving at ``t``: how far the
+        replica's clock lags behind, plus its backlog at the measured
+        per-request service time."""
+        return max(self.core.clock - t, 0.0) + self.backlog * svc_s
+
+    def uptime_end_s(self) -> float:
+        return self.stopped_s if self.stopped_s is not None \
+            else self.core.clock
+
+
+# -- routing -------------------------------------------------------------------
+
+
+class RoutingPolicy:
+    """Per-arrival placement among an endpoint's serving replicas.
+
+    ``choose`` sees the SLO-filtered candidate list (never empty) plus the
+    fleet for load/energy estimates; it must be deterministic.
+    """
+
+    name = "abstract"
+
+    def choose(self, fleet: "ReplicaFleet", candidates: List[Replica],
+               req: Request, now: float) -> Replica:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(RoutingPolicy):
+    name = "round_robin"
+
+    def __init__(self):
+        self._next: Dict[str, int] = {}
+
+    def choose(self, fleet, candidates, req, now):
+        i = self._next.get(req_endpoint(candidates), 0)
+        rep = candidates[i % len(candidates)]
+        self._next[rep.endpoint] = i + 1
+        return rep
+
+
+class LeastLoadedRouter(RoutingPolicy):
+    """Join-shortest-queue by offered-but-unretired backlog."""
+
+    name = "least_loaded"
+
+    def choose(self, fleet, candidates, req, now):
+        return min(candidates, key=lambda r: (r.backlog, r.name))
+
+
+class WarmestRouter(RoutingPolicy):
+    """Step-cache affinity: prefer a replica that has already measured this
+    arrival's execution shape, so replays stay replays (and on real hardware
+    the compiled executable / weights stay hot)."""
+
+    name = "warmest"
+
+    def choose(self, fleet, candidates, req, now):
+        sb = shape_bucket(len(req.prompt))
+        return min(candidates,
+                   key=lambda r: (0 if _cache_warm(r, sb) else 1,
+                                  r.backlog, r.name))
+
+
+class GreenestRouter(RoutingPolicy):
+    """Route by estimated *marginal* J/token of placing the request here.
+
+    Joining a replica with a backlog rides an amortized batch (lower
+    marginal energy); waking an empty replica pays a whole dispatch alone.
+    Minimizing marginal J/token therefore consolidates load onto few
+    replicas, which both fattens batches and leaves the rest of the pool
+    idle for the autoscaler to reclaim.  Ties (e.g. saturated estimates)
+    fall back to shortest queue so the policy spreads once a replica's
+    batch budget is exhausted.
+    """
+
+    name = "greenest"
+
+    def choose(self, fleet, candidates, req, now):
+        def marginal(rep: Replica) -> Tuple:
+            mj = fleet.marginal_j_per_token(rep, req)
+            if mj is None:             # no measurement yet: least-loaded
+                return (1, 0.0, rep.backlog, rep.name)
+            return (0, mj, rep.backlog, rep.name)
+
+        return min(candidates, key=marginal)
+
+
+def req_endpoint(candidates: List[Replica]) -> str:
+    return candidates[0].endpoint
+
+
+def _cache_warm(rep: Replica, sb: int) -> bool:
+    cache = rep.core.step_cache
+    return cache is not None and cache.has_shape(sb)
+
+
+ROUTERS: Dict[str, Callable[[], RoutingPolicy]] = {
+    "round_robin": RoundRobinRouter,
+    "least_loaded": LeastLoadedRouter,
+    "warmest": WarmestRouter,
+    "greenest": GreenestRouter,
+}
+
+
+def make_router(name: str) -> RoutingPolicy:
+    if isinstance(name, RoutingPolicy):
+        return name
+    try:
+        return ROUTERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown router {name!r}; known: {sorted(ROUTERS)}") from None
+
+
+# -- autoscaling ---------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Autoscaler:
+    """Windowed M/M/c-style pool sizing from *observed* load.
+
+    Every ``window_s`` of virtual time, per endpoint: desired replicas =
+    ceil(arrival_rate * measured_service_time / target_utilization), clamped
+    to [min_replicas, max_replicas].  Scale-ups are immediate but pay
+    ``cold_start_s`` before serving; scale-downs drain and stop (no more
+    idle draw) and are hysteretic — the pool shrinks only after
+    ``down_windows`` consecutive low windows, so measurement noise does not
+    thrash replicas through repeated stop/cold-start cycles.
+    """
+
+    window_s: float = 1.0
+    target_utilization: float = 0.7
+    cold_start_s: float = 0.25
+    down_windows: int = 2
+
+    def desired(self, arrivals: int, window_s: float, svc_s: float,
+                min_replicas: int, max_replicas: int) -> int:
+        rate = arrivals / max(window_s, 1e-9)
+        need = math.ceil(rate * svc_s / max(self.target_utilization, 1e-9))
+        return int(max(min_replicas, min(max_replicas, max(need, 0))))
+
+
+# -- the fleet -----------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EndpointSpec:
+    """Everything the fleet needs to mint replicas for one endpoint."""
+
+    name: str
+    engine: object
+    policy_factory: Callable[[], SchedulingPolicy]
+    min_replicas: int = 1
+    max_replicas: int = 4
+    initial_replicas: int = 1
+    service_time_hint_s: float = 0.1   # until a measurement exists
+    # endpoint-level TTFT budget for routing: consolidation-minded routers
+    # (greenest/warmest) pack replicas only while the estimated queueing
+    # delay still honors it; per-request Request.slo_ms overrides it
+    ttft_slo_s: Optional[float] = None
+    warm_cache: Optional[StepTimeCache] = None  # seeds replica caches
+    active_power_w: float = HOST_CPU_POWER_W
+    idle_power_w: float = HOST_CPU_IDLE_POWER_W
+
+
+@dataclasses.dataclass
+class FleetResult:
+    endpoints: Dict[str, ServingMetrics]
+    fleet: ServingMetrics
+
+
+class ReplicaFleet:
+    """N scheduler cores, one shared virtual timeline, one energy story."""
+
+    def __init__(self, router: str = "round_robin",
+                 autoscaler: Optional[Autoscaler] = None):
+        self.router = make_router(router)
+        self.autoscaler = autoscaler
+        self.specs: Dict[str, EndpointSpec] = {}
+        self.replicas: List[Replica] = []
+        self._counter: Dict[str, int] = {}
+        self._svc_obs: Dict[str, Tuple[float, int]] = {}  # (active_s, n_resp)
+        self._down_streak: Dict[str, int] = {}  # consecutive low windows
+        self.scale_events: List[dict] = []
+        # [(t, {endpoint: serving replicas})] — sampled at window boundaries
+        self.replica_timeline: List[Tuple[float, Dict[str, int]]] = []
+        self.cold_starts = 0
+
+    # -- pool management -------------------------------------------------------
+    def add_endpoint(self, spec: EndpointSpec) -> None:
+        if spec.name in self.specs:
+            raise ValueError(f"endpoint {spec.name!r} already registered")
+        self.specs[spec.name] = spec
+        for _ in range(max(spec.initial_replicas, spec.min_replicas)):
+            self._spawn(spec, created_s=0.0, ready_s=0.0)
+
+    def _spawn(self, spec: EndpointSpec, created_s: float,
+               ready_s: float) -> Replica:
+        i = self._counter.get(spec.name, 0)
+        self._counter[spec.name] = i + 1
+        cache = StepTimeCache()
+        if spec.warm_cache is not None:
+            cache.seed_from(spec.warm_cache)
+        core = SchedulerCore(spec.engine, spec.policy_factory(),
+                             step_cache=cache,
+                             active_power_w=spec.active_power_w,
+                             idle_power_w=spec.idle_power_w)
+        rep = Replica(f"{spec.name}/r{i}", spec.name, core, created_s, ready_s)
+        if rep.cold_start:
+            self.cold_starts += 1
+        self.replicas.append(rep)
+        return rep
+
+    def endpoint_replicas(self, name: str) -> List[Replica]:
+        return [r for r in self.replicas if r.endpoint == name]
+
+    # -- estimates shared by routers / autoscaler ------------------------------
+    def service_time_s(self, name: str) -> float:
+        active_s, n = self._svc_obs.get(name, (0.0, 0))
+        if n > 0:
+            return active_s / n
+        return self.specs[name].service_time_hint_s
+
+    def _estimate(self, rep: Replica, req: Request,
+                  batch: int) -> Optional[Tuple[float, float]]:
+        cache = rep.core.step_cache
+        if cache is None:
+            return None
+        sb = shape_bucket(len(req.prompt))
+        return cache.estimate_generate(batch, sb, req.max_new_tokens)
+
+    @staticmethod
+    def _batch_cap(rep: Replica) -> int:
+        """The batch a joining request could amortize over: the policy's
+        batch budget (realtime never batches, so its cap is 1)."""
+        policy = rep.core.policy
+        return getattr(policy, "max_batch", None) \
+            or getattr(policy, "num_slots", None) or 1
+
+    def marginal_j_per_token(self, rep: Replica,
+                             req: Request) -> Optional[float]:
+        b = max(1, min(rep.backlog + 1, self._batch_cap(rep)))
+        est = self._estimate(rep, req, b)
+        if est is None:
+            return None
+        prefill_s, decode_s = est
+        return estimate_j_per_token(rep.core.active_power_w, prefill_s,
+                                    decode_s, b, req.max_new_tokens)
+
+    def _slo_ok(self, rep: Replica, req: Request, now: float) -> bool:
+        budget_s = req.slo_ms / 1e3 if req.slo_ms is not None \
+            else self.specs[rep.endpoint].ttft_slo_s
+        if budget_s is None:
+            return True
+        est = self._estimate(rep, req,
+                             max(1, min(rep.backlog + 1,
+                                        self._batch_cap(rep))))
+        prefill_s = est[0] if est is not None else 0.0
+        wait = rep.eta_wait_s(now, self.service_time_s(rep.endpoint))
+        return wait + prefill_s <= budget_s
+
+    # -- routing ---------------------------------------------------------------
+    def route(self, name: str, req: Request) -> Replica:
+        t = req.arrival_s
+        pool = [r for r in self.endpoint_replicas(name) if r.serving(t)]
+        if not pool:
+            # every serving replica is still cold: queue on the one that
+            # becomes ready first (arrival waits out the cold start)
+            pool = [r for r in self.endpoint_replicas(name)
+                    if r.stopped_s is None and not r.draining]
+            pool.sort(key=lambda r: (r.ready_s, r.name))
+            pool = pool[:1]
+        if not pool:
+            # prefer reviving a draining replica — still provisioned and
+            # warm, so cancelling its drain is free — before cold-starting
+            draining = [r for r in self.endpoint_replicas(name)
+                        if r.stopped_s is None and r.draining]
+            if draining:
+                rep = min(draining, key=lambda r: (r.backlog, r.name))
+                rep.draining = False
+                pool = [rep]
+        if not pool:
+            # scale-from-zero (min_replicas=0 and the pool was reclaimed):
+            # the arrival itself provisions a replica and waits out its
+            # cold start — the serverless corner of the SI4 trade-off
+            cold = self.autoscaler.cold_start_s if self.autoscaler else 0.0
+            pool = [self._spawn(self.specs[name], created_s=t,
+                                ready_s=t + cold)]
+        ok = [r for r in pool if self._slo_ok(r, req, t)]
+        rep = self.router.choose(self, ok or pool, req, t)
+        rep.offered += 1
+        rep.core.offer(req)
+        return rep
+
+    # -- the shared-timeline run ----------------------------------------------
+    def run(self, workloads: Dict[str, List[Request]]) -> FleetResult:
+        """Serve ``{endpoint: workload}`` on one virtual timeline."""
+        for name in workloads:
+            if name not in self.specs:
+                raise KeyError(f"unknown endpoint {name!r}")
+        events: List[Tuple[float, str, Request]] = []
+        for name, wl in workloads.items():
+            events.extend((r.arrival_s, name, r) for r in wl)
+        rids = [e[2].rid for e in events]
+        if len(rids) != len(set(rids)):
+            raise ValueError(
+                "request ids must be unique across all workloads sharing a "
+                "fleet timeline (use synth_workload's rid0= offset)")
+        events.sort(key=lambda e: (e[0], e[1], e[2].rid))
+
+        window_s = self.autoscaler.window_s if self.autoscaler else \
+            float("inf")
+        self.replica_timeline.append((0.0, self._serving_counts()))
+        i = 0
+        t_end = window_s
+        while i < len(events):
+            window_arrivals: Dict[str, int] = {}
+            while i < len(events) and events[i][0] < t_end:
+                _, name, req = events[i]
+                self.route(name, req)
+                window_arrivals[name] = window_arrivals.get(name, 0) + 1
+                i += 1
+            self._drain_window(t_end)
+            self._observe_and_scale(t_end, window_arrivals, window_s,
+                                    more_events=i < len(events))
+            if i >= len(events):
+                break
+            next_end = (math.floor(events[i][0] / window_s) + 1) * window_s
+            if next_end > t_end + window_s:
+                # idle gap: run just enough empty windows for scale-down
+                # hysteresis to trigger (reclaiming replicas early in the
+                # gap), then jump straight to the next busy window
+                gap = int(round((next_end - t_end) / window_s)) - 1
+                for k in range(min(self.autoscaler.down_windows, gap)):
+                    t_empty = t_end + (k + 1) * window_s
+                    self._drain_window(t_empty)
+                    self._observe_and_scale(t_empty, {}, window_s,
+                                            more_events=True)
+            t_end = max(next_end, t_end + window_s)
+        # drain everything that is still in flight to completion
+        for rep in self.replicas:
+            if rep.stopped_s is None:
+                rep.core.drain_until()
+                if rep.draining:
+                    self._stop(rep)
+        return self._finalize()
+
+    def _drain_window(self, t_end: float) -> None:
+        for rep in self.replicas:
+            if rep.stopped_s is not None or rep.ready_s >= t_end:
+                continue
+            # hold back by the policy's admission lookahead so open batch
+            # windows wait for next round's arrivals — but never by more
+            # than one autoscaler window, or a policy with a huge timeout
+            # would freeze draining and feed the autoscaler phantom backlog
+            lookahead = getattr(rep.core.policy, "admission_lookahead_s", 0.0)
+            if self.autoscaler is not None:
+                lookahead = min(lookahead, self.autoscaler.window_s)
+            rep.core.drain_until(max(t_end - lookahead, 0.0))
+            if rep.draining and rep.backlog == 0:
+                self._stop(rep)
+
+    def _stop(self, rep: Replica) -> None:
+        """Deprovision a drained replica: it was up (and billed) until the
+        later of the scale-down decision and its last piece of work; after
+        that it accrues no idle energy — the payoff of scaling down."""
+        rep.stopped_s = max(rep.core.clock, rep.drain_mark_s, rep.ready_s)
+
+    def _serving_counts(self) -> Dict[str, int]:
+        counts = {name: 0 for name in self.specs}
+        for r in self.replicas:
+            if r.stopped_s is None and not r.draining:
+                counts[r.endpoint] += 1
+        return counts
+
+    def _observe_and_scale(self, t_end: float, window_arrivals: Dict[str, int],
+                           window_s: float, more_events: bool) -> None:
+        if self.autoscaler is None:
+            return
+        for name, spec in self.specs.items():
+            pool = [r for r in self.endpoint_replicas(name)
+                    if r.stopped_s is None]
+            active_s = sum(r.core.meter.active_s for r in
+                           self.endpoint_replicas(name))
+            n_resp = sum(len(r.core.responses) for r in
+                         self.endpoint_replicas(name))
+            self._svc_obs[name] = (active_s, n_resp)
+            live = [r for r in pool if not r.draining]
+            if not more_events:
+                continue                   # tail: just drain what exists
+            desired = self.autoscaler.desired(
+                window_arrivals.get(name, 0), window_s,
+                self.service_time_s(name), spec.min_replicas,
+                spec.max_replicas)
+            if desired > len(live):
+                self._down_streak[name] = 0
+                need = desired - len(live)
+                # un-drain still-provisioned replicas first: they are warm
+                # and billing anyway, so reviving them skips the cold start
+                for rep in sorted((r for r in pool if r.draining),
+                                  key=lambda r: (-r.backlog, r.name)):
+                    if need == 0:
+                        break
+                    rep.draining = False
+                    need -= 1
+                for _ in range(need):
+                    self._spawn(spec, created_s=t_end,
+                                ready_s=t_end + self.autoscaler.cold_start_s)
+                self.scale_events.append(
+                    {"t": t_end, "endpoint": name, "from": len(live),
+                     "to": desired, "kind": "up"})
+            elif desired < len(live):
+                # hysteresis: only shrink after down_windows low windows in
+                # a row, so one noisy window doesn't thrash the pool
+                streak = self._down_streak.get(name, 0) + 1
+                self._down_streak[name] = streak
+                if streak < self.autoscaler.down_windows:
+                    continue
+                self._down_streak[name] = 0
+                # drain the emptiest replicas first; keep min_replicas live
+                by_load = sorted(live, key=lambda r: (r.backlog, r.name))
+                n_down = min(len(live) - desired,
+                             len(live) - spec.min_replicas)
+                for rep in by_load[:n_down]:
+                    rep.draining = True
+                    rep.drain_mark_s = t_end
+                    if rep.backlog == 0:
+                        self._stop(rep)
+                if n_down:
+                    self.scale_events.append(
+                        {"t": t_end, "endpoint": name, "from": len(live),
+                         "to": len(live) - n_down, "kind": "down"})
+            else:
+                self._down_streak[name] = 0
+        self.replica_timeline.append((round(t_end, 6),
+                                      self._serving_counts()))
+
+    # -- metrics ---------------------------------------------------------------
+    def _finalize(self) -> FleetResult:
+        # the shared timeline ends when the last provisioned replica goes
+        # quiet; every still-provisioned replica pays idle draw up to there
+        live_ends = [r.core.clock for r in self.replicas
+                     if r.stopped_s is None]
+        fleet_end = max(live_ends, default=0.0)
+        for rep in self.replicas:
+            if rep.stopped_s is None:
+                rep.stopped_s = fleet_end
+            uptime = rep.stopped_s - rep.created_s
+            meter = rep.core.meter
+            meter.record_idle(uptime - meter.active_s - meter.idle_s)
+
+        endpoints: Dict[str, ServingMetrics] = {}
+        fleet_meter = EnergyMeter()
+        all_resp, all_wall, all_tokens = [], 0.0, 0
+        for name in self.specs:
+            reps = self.endpoint_replicas(name)
+            meter = EnergyMeter()
+            responses, wall, tokens = [], 0.0, 0
+            for rep in reps:
+                m = rep.core.finish()
+                responses.extend(m.responses)
+                wall += m.wall_compute_s
+                tokens += m.total_tokens
+                meter.merge(m.meter, source=rep.name)
+                fleet_meter.merge(m.meter, source=rep.name)
+            responses.sort(key=lambda r: r.rid)
+            stats = self._stats(reps, endpoint=name)
+            endpoints[name] = ServingMetrics(
+                responses, wall, meter.total_j, tokens, meter=meter,
+                fleet=stats)
+            all_resp.extend(responses)
+            all_wall += wall
+            all_tokens += tokens
+        all_resp.sort(key=lambda r: r.rid)
+        fleet_stats = self._stats(self.replicas)
+        fleet = ServingMetrics(all_resp, all_wall, fleet_meter.total_j,
+                               all_tokens, meter=fleet_meter,
+                               fleet=fleet_stats)
+        return FleetResult(endpoints=endpoints, fleet=fleet)
+
+    def _stats(self, reps: List[Replica],
+               endpoint: Optional[str] = None) -> dict:
+        """Provisioning stats; ``endpoint=None`` means fleet-wide."""
+        if endpoint is None:
+            timeline = [(t, sum(counts.values()))
+                        for t, counts in self.replica_timeline]
+            events = list(self.scale_events)
+        else:
+            timeline = [(t, counts.get(endpoint, 0))
+                        for t, counts in self.replica_timeline]
+            events = [e for e in self.scale_events
+                      if e["endpoint"] == endpoint]
+        return {
+            "replicas_created": len(reps),
+            "peak_replicas": max((n for _, n in timeline), default=len(reps)),
+            "cold_starts": sum(1 for r in reps if r.cold_start),
+            "replica_seconds": sum(
+                r.uptime_end_s() - r.created_s for r in reps),
+            "replica_timeline": timeline,
+            "scale_events": events,
+            "offered": {r.name: r.offered for r in reps},
+        }

@@ -16,6 +16,9 @@ class Request:
     prompt: np.ndarray                 # (S,) int32 token ids
     max_new_tokens: int = 16
     arrival_s: float = 0.0             # workload timeline (virtual clock)
+    # per-request time-to-first-token budget: the SLO-aware admission policy
+    # sizes batches to the tightest budget visible in its window, and the
+    # fleet router prefers replicas whose queue can still honor it
     slo_ms: Optional[float] = None
 
 
@@ -48,6 +51,7 @@ class ServingMetrics:
     energy_j: float                    # host-proxy measured* energy (active+idle)
     total_tokens: int
     meter: Optional[EnergyMeter] = None  # full active/idle + per-request J
+    fleet: Optional[dict] = None         # replica-fleet stats (see fleet.py)
 
     @property
     def throughput_tok_s(self) -> float:
@@ -98,23 +102,44 @@ class ServingMetrics:
         if self.meter is not None:
             d["energy_active_j"] = round(self.meter.active_j, 6)
             d["energy_idle_j"] = round(self.meter.idle_j, 6)
+        if self.fleet is not None:
+            d["fleet"] = {
+                "replicas_created": self.fleet.get("replicas_created"),
+                "peak_replicas": self.fleet.get("peak_replicas"),
+                "cold_starts": self.fleet.get("cold_starts"),
+                "replica_seconds": round(
+                    self.fleet.get("replica_seconds", 0.0), 6),
+                # replica count over (virtual) time: [(t, n_serving), ...]
+                "replica_timeline": self.fleet.get("replica_timeline"),
+            }
+            if self.meter is not None and self.meter.by_source:
+                d["fleet"]["idle_j_by_replica"] = {
+                    src: round(split["idle_j"], 6)
+                    for src, split in sorted(self.meter.by_source.items())
+                }
         return d
 
 
 def synth_workload(
     n: int, prompt_len: int, max_new: int, vocab: int, rate_per_s: float,
-    seed: int = 0,
+    seed: int = 0, rid0: int = 0, slo_ms: Optional[float] = None,
 ) -> List[Request]:
-    """Poisson arrivals, uniform random prompts (deterministic given seed)."""
+    """Poisson arrivals, uniform random prompts (deterministic given seed).
+
+    ``rid0`` offsets request ids so several endpoint workloads can share one
+    fleet timeline without rid collisions; ``slo_ms`` stamps every request
+    with a per-request TTFT budget.
+    """
     rng = np.random.RandomState(seed)
     gaps = rng.exponential(1.0 / rate_per_s, size=n)
     t = np.cumsum(gaps) - gaps[0]
     return [
         Request(
-            rid=i,
+            rid=rid0 + i,
             prompt=rng.randint(0, vocab, size=prompt_len).astype(np.int32),
             max_new_tokens=max_new,
             arrival_s=float(t[i]),
+            slo_ms=slo_ms,
         )
         for i in range(n)
     ]

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engines import Engine
+from repro.energy.meter import estimate_j_per_token
 from repro.serving.core import SchedulerCore, SchedulingPolicy, pad_prompts
 from repro.serving.request import Request, ServingMetrics
 from repro.serving.stepcache import StepTimeCache, shape_bucket, synth_tokens
@@ -60,6 +61,8 @@ class DynamicBatchPolicy(SchedulingPolicy):
     def __init__(self, max_batch: int = 8, timeout_ms: float = 20.0):
         self.max_batch = max_batch
         self.timeout_s = timeout_ms / 1e3
+        # an admission window stays open for timeout_s past its head arrival
+        self.admission_lookahead_s = self.timeout_s
 
     def _admit(self, core: SchedulerCore, max_batch: int) -> List[Request]:
         head = core.pop()
@@ -91,6 +94,12 @@ class AdaptiveBatchPolicy(DynamicBatchPolicy):
     candidate meeting the TTFT target at minimum predicted J/token; with an
     empty cache (no measurements yet) it behaves like dynamic batching at
     ``max_batch``, which also populates the cache for later windows.
+
+    The TTFT target for a window is the *tightest* budget in sight: the
+    policy-level ``ttft_slo_ms`` default, tightened by any per-request
+    ``Request.slo_ms`` among the head and the arrivals visible inside the
+    admission window — one latency-critical request shrinks the batch it
+    rides in rather than being sacrificed to the global target.
     """
 
     name = "adaptive_batch"
@@ -114,12 +123,22 @@ class AdaptiveBatchPolicy(DynamicBatchPolicy):
             return None
         return (len(self._recent) - 1) / span
 
+    def _window_slo_s(self, core: SchedulerCore, head: Request) -> float:
+        """Tightest TTFT budget among the head and window-visible arrivals."""
+        slo = self.ttft_slo_s
+        open_t = max(core.now, head.arrival_s)
+        for req in [head] + core.pending_within(open_t + self.timeout_s):
+            if req.slo_ms is not None:
+                slo = min(slo, req.slo_ms / 1e3)
+        return slo
+
     def _choose(self, core: SchedulerCore, head: Request) -> int:
         cache = core.step_cache
         if cache is None:
             return self.max_batch
         sb = shape_bucket(len(head.prompt))
         rate = self._rate()
+        slo_s = self._window_slo_s(core, head)
         best = None              # (infeasible, cost, b)
         b = 1
         cands = []
@@ -134,9 +153,9 @@ class AdaptiveBatchPolicy(DynamicBatchPolicy):
             prefill_s, decode_s = est
             wait = (b - 1) / rate if rate else 0.0
             ttft = wait + prefill_s
-            j_tok = (core.active_power_w * (prefill_s + decode_s)
-                     / (b * max(head.max_new_tokens, 1)))
-            feasible = ttft <= self.ttft_slo_s
+            j_tok = estimate_j_per_token(core.active_power_w, prefill_s,
+                                         decode_s, b, head.max_new_tokens)
+            feasible = ttft <= slo_s
             rank = (0, j_tok, -b) if feasible else (1, ttft, -b)
             if best is None or rank < best[0]:
                 best = (rank, b)
@@ -331,15 +350,23 @@ class ContinuousBatchScheduler(_PolicyScheduler):
                          step_cache)
 
 
+def make_policy(kind: str, *, max_batch=8, timeout_ms=20.0, max_seq=256,
+                ttft_slo_ms=200.0) -> SchedulingPolicy:
+    """Fresh policy instance for ``kind`` — policies are stateful, so every
+    replica in a fleet gets its own (the fleet calls this per replica)."""
+    if kind == "realtime":
+        return RealTimePolicy()
+    if kind == "dynamic_batch":
+        return DynamicBatchPolicy(max_batch, timeout_ms)
+    if kind == "adaptive_batch":
+        return AdaptiveBatchPolicy(max_batch, ttft_slo_ms)
+    if kind == "continuous_batch":
+        return ContinuousBatchPolicy(max_batch, max_seq)
+    raise ValueError(kind)
+
+
 def make_scheduler(kind: str, engine: Engine, *, max_batch=8, timeout_ms=20.0,
                    max_seq=256, ttft_slo_ms=200.0, step_cache=None):
-    if kind == "realtime":
-        return RealTimeScheduler(engine, step_cache)
-    if kind == "dynamic_batch":
-        return DynamicBatchScheduler(engine, max_batch, timeout_ms, step_cache)
-    if kind == "adaptive_batch":
-        return AdaptiveBatchScheduler(engine, max_batch, ttft_slo_ms,
-                                      step_cache)
-    if kind == "continuous_batch":
-        return ContinuousBatchScheduler(engine, max_batch, max_seq, step_cache)
-    raise ValueError(kind)
+    policy = make_policy(kind, max_batch=max_batch, timeout_ms=timeout_ms,
+                         max_seq=max_seq, ttft_slo_ms=ttft_slo_ms)
+    return _PolicyScheduler(engine, policy, step_cache)

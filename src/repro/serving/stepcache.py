@@ -63,6 +63,23 @@ class StepTimeCache:
     def put(self, key: tuple, payload: Iterable[float]) -> None:
         self._times.setdefault(key, tuple(float(x) for x in payload))
 
+    def has_shape(self, s_bucket: int) -> bool:
+        """True if any measurement exists for this sequence-length bucket
+        (the fleet's route-to-warmest affinity check)."""
+        for k in self._times:
+            if k[0] == "generate" and k[2] == s_bucket:
+                return True
+            if k[0] == "prefill1" and k[1] == s_bucket:
+                return True
+        return False
+
+    def seed_from(self, other: "StepTimeCache") -> "StepTimeCache":
+        """Copy measurements (first write still wins) — used to hand a
+        calibrated cache to each new fleet replica."""
+        for k, v in other._times.items():
+            self._times.setdefault(k, v)
+        return self
+
     def estimate_generate(self, batch: int, s_bucket: int,
                           max_new: int) -> Optional[Tuple[float, float]]:
         """(prefill_s, decode_s) prediction for a candidate batch size.

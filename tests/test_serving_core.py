@@ -207,9 +207,13 @@ def test_step_cache_replays_without_execution(setup):
 
 def test_adaptive_batch_sizes_to_slo(setup):
     cfg, engine = setup
+    # synthetic monotone step times: prefill grows with batch, J/token
+    # shrinks with batch — real calibration under host contention can
+    # measure prefill(1) > prefill(2) and flake the tight-SLO assertion
     cache = StepTimeCache()
-    calibrate(engine, cache, batch_sizes=[1, 2, 4, 8], prompt_len=8,
-              max_new=3, vocab=cfg.vocab_size)
+    for b in (1, 2, 3, 4, 5, 6, 7, 8):
+        cache.put(("generate", b, shape_bucket(8), 3),
+                  (0.004 + 0.001 * b, 0.010 + 0.002 * b))
     wl = lambda: synth_workload(40, 8, 3, cfg.vocab_size,  # noqa: E731
                                 rate_per_s=400, seed=9)
     tight = AdaptiveBatchScheduler(engine, max_batch=8, ttft_slo_ms=1e-3,
