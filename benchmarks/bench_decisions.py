@@ -1,0 +1,127 @@
+"""Design-decision grid from PURE DATA: sweep a ServingSpec, no glue code.
+
+The paper's claim is that serving design decisions (model format, routing,
+batching, autoscaling) trade energy against quality *as a configuration
+space*.  This bench is that claim executed: one base
+:class:`repro.serving.api.ServingSpec` (two endpoints, one shared timeline)
+is swept over ``format x router`` with :func:`repro.serving.api.sweep` —
+every cell is just a validated spec variant, every engine/calibration is
+memoized by the session, and every row reports per-endpoint J/token
+attribution (the int8 bulk endpoint is priced separately from the fp32 chat
+endpoint by the per-replica meter provenance).
+
+``run()`` returns machine-readable rows; ``benchmarks/run.py`` folds them
+into ``BENCH_serving.json`` under ``decision_grid`` (the CI bench job checks
+the greenest-router J/token against the checked-in baseline).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serving.api import (
+    AutoscaleSpec,
+    EndpointSpec,
+    ServingSession,
+    ServingSpec,
+    sweep,
+)
+from repro.serving.request import synth_workload
+
+ARCH = "minitron-4b-smoke"
+PROMPT_LEN = 16
+MAX_NEW = 6
+N_CHAT, RATE_CHAT = 1500, 100     # latency-sensitive endpoint (fp32 always)
+N_BULK, RATE_BULK = 1000, 60      # throughput endpoint (format swept)
+
+BASE = ServingSpec(
+    endpoints=(
+        EndpointSpec(
+            name="chat", arch=ARCH, model="m", format="rsm",
+            policy="dynamic_batch", max_batch=8, batch_timeout_ms=10.0,
+            max_seq=64, ttft_slo_ms=100.0,
+            autoscale=AutoscaleSpec(min_replicas=1, max_replicas=4,
+                                    replicas_hint=2, window_s=0.25,
+                                    cold_start_s=0.05),
+        ),
+        EndpointSpec(
+            name="bulk", arch=ARCH, model="m", format="rsm",
+            policy="dynamic_batch", max_batch=8, batch_timeout_ms=10.0,
+            max_seq=64, ttft_slo_ms=100.0,
+            autoscale=AutoscaleSpec(min_replicas=1, max_replicas=4,
+                                    replicas_hint=2, window_s=0.25,
+                                    cold_start_s=0.05),
+        ),
+    ),
+    router="round_robin",
+)
+
+GRID = {
+    "endpoints.bulk.format": ["rsm", "rsm_int8"],
+    "router": ["round_robin", "greenest"],
+}
+
+
+def _workloads(vocab):
+    return {
+        "chat": synth_workload(N_CHAT, PROMPT_LEN, MAX_NEW, vocab,
+                               rate_per_s=RATE_CHAT, seed=41),
+        "bulk": synth_workload(N_BULK, PROMPT_LEN, MAX_NEW, vocab,
+                               rate_per_s=RATE_BULK, seed=42, rid0=1_000_000),
+    }
+
+
+def run():
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+
+    rows = []
+    for assignment, spec in sweep(BASE, GRID):
+        session.deploy(spec, params={"m": params})
+        t0 = time.perf_counter()
+        for name in ("chat", "bulk"):
+            # per-engine memoized: already-measured shapes are skipped, so
+            # repeated formats across cells cost nothing here
+            session.calibrate(name, batch_sizes=range(1, 9),
+                              prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+        cal_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        report = session.serve(_workloads(cfg.vocab_size))
+        sim_s = time.perf_counter() - t0
+        f = report.fleet
+        row = {
+            "bulk_format": assignment["endpoints.bulk.format"],
+            "router": assignment["router"],
+            "n_requests": f.n_requests,
+            "j_per_token": f.j_per_token,
+            "j_per_request": f.j_per_request,
+            "j_active": f.j_active,
+            "j_idle": f.j_idle,
+            "p95_latency_s": f.latency_p95_s,
+            "mean_ttft_s": f.mean_ttft_s,
+            "replica_seconds": f.replica_seconds,
+            "cold_starts": f.cold_starts,
+            # the per-decision attribution: each endpoint (= each format)
+            # priced from its own replicas' meters
+            "per_endpoint_j_per_token": {
+                name: rep.j_per_token
+                for name, rep in report.endpoints.items()
+            },
+            "sim_host_s": sim_s,
+        }
+        rows.append(row)
+        emit(
+            f"decisions_{row['bulk_format']}_{row['router']}",
+            f.latency_p95_s * 1e6,
+            f"J_tok={f.j_per_token:.6f};"
+            f"bulk_J_tok={row['per_endpoint_j_per_token']['bulk']:.6f};"
+            f"chat_J_tok={row['per_endpoint_j_per_token']['chat']:.6f};"
+            f"cal_s={cal_s:.2f};sim_host_s={sim_s:.3f}",
+        )
+    return rows

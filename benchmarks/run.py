@@ -8,6 +8,7 @@ run (the CI bench job uploads it as an artifact).
   bench_serving_infra  - Table 1, Serving Infrastructure rows (SI1..SI4)
   bench_batching       - Table 1, TD3 request-processing row (Yarally'23)
   bench_fleet          - fleet layer: policy x router grid, 2-endpoint 5k run
+  bench_decisions      - ServingSpec sweep: format x router grid (pure data)
   bench_formats        - Table 1, TD2 model-format row
   bench_codecs         - Table 1, TD4 communication-protocol row
   bench_adds           - Table 1 executed as GreenReports (all qualities)
@@ -26,10 +27,12 @@ import traceback
 
 
 def write_serving_json(path: str, results: dict) -> None:
-    """BENCH_serving.json: {fleet_grid: [...], batching: {name: summary}}."""
+    """BENCH_serving.json: fleet_grid + decision_grid + batching summaries."""
     doc = {"generated_by": "benchmarks/run.py"}
     if "bench_fleet" in results:
         doc["fleet_grid"] = results["bench_fleet"]
+    if "bench_decisions" in results:
+        doc["decision_grid"] = results["bench_decisions"]
     if "bench_batching" in results:
         doc["batching"] = {
             name: m.summary() for name, m in results["bench_batching"].items()
@@ -44,6 +47,7 @@ def main(argv=None) -> None:
         bench_adds,
         bench_batching,
         bench_codecs,
+        bench_decisions,
         bench_fleet,
         bench_formats,
         bench_kernels,
@@ -52,8 +56,8 @@ def main(argv=None) -> None:
     )
 
     modules = [bench_codecs, bench_formats, bench_kernels,
-               bench_serving_infra, bench_batching, bench_fleet, bench_adds,
-               bench_roofline]
+               bench_serving_infra, bench_batching, bench_fleet,
+               bench_decisions, bench_adds, bench_roofline]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated module names (e.g. bench_fleet)")
@@ -78,7 +82,7 @@ def main(argv=None) -> None:
         except Exception as e:  # noqa: BLE001
             failed.append((mod.__name__, e))
             traceback.print_exc()
-    if "bench_fleet" in results or "bench_batching" in results:
+    if results.keys() & {"bench_fleet", "bench_batching", "bench_decisions"}:
         write_serving_json(ns.serving_json, results)
     if failed:
         print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)

@@ -1,28 +1,31 @@
-"""Two managed endpoints, one virtual timeline: fleet routing + autoscaling.
+"""Two endpoints, one declarative spec: fleet routing + autoscaling.
 
-Deploys two models on a CloudService (SI4), calibrates step times once, then
-serves both endpoints' workloads through one ReplicaFleet — comparing
-round-robin dispatch against route-to-greenest under the same TTFT budget.
-The summary shows the SI4 abstraction cost decomposed per replica: active vs
-idle joules, cold starts, and the replica count over virtual time.
+Everything about the deployment — formats, scheduling policy, router,
+autoscaling, SLO classes — is ONE :class:`repro.serving.api.ServingSpec`
+value (printed as JSON below; round-trippable).  The session deploys it,
+calibrates step times once, serves both endpoints' workloads on one shared
+virtual timeline, and the typed report decomposes the SI4 abstraction cost
+per replica: active vs idle joules, cold starts, and the replica count over
+virtual time.  Compare round-robin dispatch against route-to-greenest by
+overriding a single field.
 
 Run:  PYTHONPATH=src python examples/serve_fleet.py
 """
 
 import argparse
-import tempfile
 
 import jax
 
 from repro.configs import get_arch
-from repro.core.add import (
-    Deployment,
-    ModelFormat,
-    RequestProcessing,
-    ServingInfrastructure,
-)
 from repro.models import init_params
-from repro.serving.cloud import CloudService
+from repro.serving.api import (
+    AutoscaleSpec,
+    EndpointSpec,
+    ServingSession,
+    ServingSpec,
+    SLOClass,
+    with_override,
+)
 from repro.serving.request import synth_workload
 
 
@@ -34,43 +37,50 @@ def main():
     cfg = get_arch(ns.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
 
-    with tempfile.TemporaryDirectory() as td:
-        cloud = CloudService(td)
-        for name in ("chat", "bulk"):
-            cloud.upload_model(name, 1, params, ModelFormat.RSM)
-            cloud.deploy(name, 1, Deployment(
-                arch=ns.arch,
-                si=ServingInfrastructure.SI4_CLOUD_SERVICE,
-                request_processing=RequestProcessing.DYNAMIC_BATCH,
-                max_batch=8, max_seq=64, min_replicas=1, max_replicas=4,
-                autoscale_window_s=0.25, cold_start_s=0.05,
-            ), template_params=params)
-            cloud.calibrate_endpoint(name, batch_sizes=range(1, 9),
-                                     prompt_len=16, max_new=6)
+    autoscale = AutoscaleSpec(min_replicas=1, max_replicas=4,
+                              window_s=0.25, cold_start_s=0.05)
+    spec = ServingSpec(
+        endpoints=(
+            EndpointSpec(name="chat", arch=ns.arch, model="m",
+                         policy="dynamic_batch", max_batch=8, max_seq=64,
+                         autoscale=autoscale,
+                         slo_classes={"interactive": SLOClass(slo_ms=150.0)}),
+            EndpointSpec(name="bulk", arch=ns.arch, model="m",
+                         policy="dynamic_batch", max_batch=8, max_seq=64,
+                         autoscale=autoscale),
+        ),
+        router="round_robin",
+    ).validate()
+    print(spec.to_json(indent=1))
 
-        def workloads():
-            return {
-                "chat": synth_workload(ns.n, 16, 6, cfg.vocab_size,
-                                       rate_per_s=100, seed=31),
-                "bulk": synth_workload(ns.n, 16, 6, cfg.vocab_size,
-                                       rate_per_s=60, seed=32, rid0=10**6),
-            }
+    session = ServingSession()
+    session.deploy(spec, params={"m": params})
+    for name in ("chat", "bulk"):
+        session.calibrate(name, batch_sizes=range(1, 9), prompt_len=16,
+                          max_new=6)
 
-        for router in ("round_robin", "greenest"):
-            res = cloud.predict_multi(workloads(), router=router)
-            m = res.fleet
-            s = m.summary()
-            print(f"\n== router={router} ==")
-            print(f"  requests={s['n_requests']}  "
-                  f"J/token={s['energy_per_token_j']:.5f}  "
-                  f"p95={s['p95_latency_s']:.4f}s")
-            print(f"  active J={s['energy_active_j']:.1f}  "
-                  f"idle J={s['energy_idle_j']:.1f}  "
-                  f"replica-seconds={s['fleet']['replica_seconds']:.1f}  "
-                  f"cold starts={s['fleet']['cold_starts']}")
-            print(f"  replicas over time: {s['fleet']['replica_timeline']}")
-            for src, idle_j in s["fleet"]["idle_j_by_replica"].items():
-                print(f"    {src}: idle {idle_j:.2f} J")
+    def workloads():
+        return {
+            "chat": synth_workload(ns.n, 16, 6, cfg.vocab_size,
+                                   rate_per_s=100, seed=31),
+            "bulk": synth_workload(ns.n, 16, 6, cfg.vocab_size,
+                                   rate_per_s=60, seed=32, rid0=10**6),
+        }
+
+    for router in ("round_robin", "greenest"):
+        session.deploy(with_override(spec, "router", router),
+                       params={"m": params})     # engines + caches memoized
+        report = session.serve(workloads())
+        f = report.fleet
+        print(f"\n== router={router} ==")
+        print(f"  requests={f.n_requests}  J/token={f.j_per_token:.5f}  "
+              f"p95={f.latency_p95_s:.4f}s")
+        print(f"  active J={f.j_active:.1f}  idle J={f.j_idle:.1f}  "
+              f"replica-seconds={f.replica_seconds:.1f}  "
+              f"cold starts={f.cold_starts}")
+        print(f"  replicas over time: {f.replica_timeline}")
+        for src, j in f.j_by_replica.items():
+            print(f"    {src}: {j:.2f} J")
 
 
 if __name__ == "__main__":

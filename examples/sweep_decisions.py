@@ -1,0 +1,54 @@
+"""Sweep the paper's design decisions as pure data -> BENCH_serving.json.
+
+A design-decision study is a grid over a :class:`repro.serving.api.
+ServingSpec`: here ``model format x router`` (2x2), expanded with
+:func:`repro.serving.api.sweep` from ``{field_path: [values]}`` overrides —
+no per-cell glue code, every cell validated before anything runs.  Engines
+and calibrations are memoized inside one :class:`~repro.serving.api.
+ServingSession`, so the whole grid costs two calibrations and four
+sub-second virtual-time replays.  The resulting rows (fleet J/token, p95,
+and per-endpoint J/token attribution) are merged into ``BENCH_serving.json``
+under ``decision_grid`` — the file CI uses as the green-serving trajectory
+baseline.
+
+Run:  PYTHONPATH=src python examples/sweep_decisions.py --out BENCH_serving.json
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import bench_decisions  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="JSON file to merge the decision_grid into")
+    ns = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    rows = bench_decisions.run()
+
+    doc = {}
+    if os.path.exists(ns.out):
+        with open(ns.out) as f:
+            doc = json.load(f)
+    doc["decision_grid"] = rows
+    doc.setdefault("generated_by", "examples/sweep_decisions.py")
+    with open(ns.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# wrote decision_grid ({len(rows)} cells) to {ns.out}",
+          file=sys.stderr)
+
+    best = min(rows, key=lambda r: r["j_per_token"])
+    print(f"# greenest cell: bulk_format={best['bulk_format']} "
+          f"router={best['router']} -> {best['j_per_token']:.6f} J/token "
+          f"(p95 {best['p95_latency_s']:.4f}s)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Non-blocking green-serving regression check for CI.
+
+Compares a freshly generated decision grid against the checked-in
+``BENCH_serving.json`` baseline: if the greenest-router J/token regressed by
+more than ``--threshold`` (relative), emit a GitHub Actions ``::warning::``
+annotation — loud on the PR, but never red (bench hosts are noisy; the
+blocking signal is the test suite, the trajectory signal is this file).
+
+  python scripts/check_bench_regression.py \\
+      --baseline BENCH_serving.json --fresh BENCH_decisions_fresh.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def greenest_j_per_token(doc: dict) -> float | None:
+    """Best (minimum) J/token among the decision grid's greenest-router
+    cells; falls back to the fleet grid for pre-decision-grid baselines."""
+    rows = doc.get("decision_grid") or []
+    cells = [r["j_per_token"] for r in rows if r.get("router") == "greenest"]
+    if not cells:
+        rows = doc.get("fleet_grid") or []
+        cells = [r["j_per_token"] for r in rows
+                 if r.get("router") == "greenest"]
+    return min(cells) if cells else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_serving.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative J/token regression that triggers the "
+                         "annotation (default 10%%)")
+    ns = ap.parse_args(argv)
+
+    def read(path: str):
+        try:
+            with open(path) as f:
+                return greenest_j_per_token(json.load(f))
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            print(f"::warning file={path}::bench file unreadable ({e}); "
+                  "skipping regression check")
+            return None
+
+    base = read(ns.baseline)
+    fresh = read(ns.fresh)
+    if base is None or fresh is None or base <= 0:
+        if base is not None or fresh is not None:
+            print(f"::warning file={ns.baseline}::no comparable "
+                  f"greenest-router rows (baseline={base}, fresh={fresh})")
+        return 0
+
+    rel = (fresh - base) / base
+    msg = (f"greenest-router J/token: baseline={base:.6f} fresh={fresh:.6f} "
+           f"({rel:+.1%})")
+    if rel > ns.threshold:
+        print(f"::warning file={ns.baseline},title=green-serving "
+              f"regression::{msg} exceeds the {ns.threshold:.0%} budget")
+    else:
+        print(f"# ok: {msg}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

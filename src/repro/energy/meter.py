@@ -38,6 +38,27 @@ def estimate_j_per_token(active_power_w: float, prefill_s: float,
             / (max(batch, 1) * max(max_new_tokens, 1)))
 
 
+def absorb_part(meter: "EnergyMeter", m,
+                source: Optional[str] = None) -> "EnergyMeter":
+    """Fold one partition's :class:`~repro.serving.request.ServingMetrics`
+    into an aggregate meter.
+
+    The (fixed) legacy merge path for callers that combine metrics *outside*
+    the fleet — e.g. results of separate ``ServingServer.handle`` calls.  The
+    fleet always has per-replica meters and merges with provenance; this
+    helper exists so any external aggregation inherits the corrected
+    accounting: a partition without an EnergyMeter is billed as active
+    compute with *its own* token count — never a running cumulative total,
+    which used to inflate per-token attribution for every partition after
+    the first (regression-tested).
+    """
+    if m.meter is not None:
+        meter.merge(m.meter, source=source)
+    else:
+        meter.record_active(m.wall_compute_s, tokens=m.total_tokens)
+    return meter
+
+
 @dataclasses.dataclass
 class EnergyMeter:
     active_power_w: float = HOST_CPU_POWER_W

@@ -1,0 +1,841 @@
+"""The declarative green-serving API: every design decision as spec data.
+
+Durán et al.'s catalog of ML-serving architectural design decisions only
+becomes *usable* when a complete assignment of decisions is one comparable,
+serializable value — not knobs smeared across ``ServingServer``,
+``CloudService`` kwargs and two rival autoscaler configs.  This module is the
+single public entry point to the serving stack:
+
+  * :class:`ServingSpec` — the whole deployment as data: a shared virtual
+    timeline, a global TTFT budget, a hardware/power envelope, and named
+    :class:`EndpointSpec` s, each a full decision assignment — serving
+    infrastructure (SI1..SI4), containerization (TD1), **model format**
+    (TD2 — it really selects the replica's weights: ``rsm_int8`` endpoints
+    serve quantized params, so an int8-bulk + fp32-quality fleet behind one
+    router is just two endpoints that disagree on one field), scheduling
+    policy (TD3), wire protocol (TD4), router, :class:`AutoscaleSpec` and
+    per-class :class:`SLOClass` latency budgets;
+  * :class:`ServingSession` — ``deploy(spec)`` / ``submit(...)`` / ``run()``
+    over one :class:`~repro.serving.fleet.ReplicaFleet`, returning a typed
+    :class:`ServingReport` (latency percentiles, J/request, J/token, replica
+    timeline, and per-decision energy attribution including the simulated
+    TD1 container overhead);
+  * ``spec.to_json()`` / :func:`ServingSpec.from_json` — lossless round-trip,
+    so sweeps, CI baselines and experiment grids are pure data;
+  * :func:`sweep` — expand ``{field_path: [values]}`` overrides into the
+    cartesian grid of validated spec variants (``benchmarks/bench_decisions``
+    charts format x router from exactly this).
+
+Validation is eager and names the offending field: every constraint violation
+raises :class:`SpecError` with a ``endpoints[name].field`` style path.
+
+``CloudService``, ``ServingServer`` and ``repro.launch.serve`` are thin
+adapters over this module (kept for compatibility); new code should build a
+``ServingSpec`` directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import math
+import os
+import tempfile
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.configs import get_arch
+from repro.core.add import (
+    Containerization,
+    Deployment,
+    ModelFormat,
+    Protocol,
+    ServingInfrastructure,
+)
+from repro.core.engines import CompiledEngine, EagerEngine, Engine
+from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
+from repro.serving import container as td1
+from repro.serving.fleet import ROUTERS, Autoscaler, FleetResult, ReplicaFleet
+from repro.serving.fleet import EndpointSpec as FleetEndpoint
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.scheduler import POLICIES, make_policy
+from repro.serving.stepcache import StepTimeCache, calibrate, shape_bucket
+
+
+class SpecError(ValueError):
+    """A spec constraint violation, carrying the offending field's path."""
+
+    def __init__(self, field: str, message: str):
+        self.field = field
+        super().__init__(f"{field}: {message}")
+
+
+def _check(ok: bool, field: str, message: str) -> None:
+    if not ok:
+        raise SpecError(field, message)
+
+
+def _construct(cls, kwargs: Mapping, path: str):
+    """Build a spec dataclass from deserialized data, turning unknown or
+    misspelled field names into a SpecError with the field path (rather
+    than a bare TypeError from ``__init__``)."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(kwargs) - names)
+    if unknown:
+        raise SpecError(f"{path}.{unknown[0]}",
+                        f"unknown field(s) {unknown} for {cls.__name__}; "
+                        f"known: {sorted(names)}")
+    return cls(**kwargs)
+
+
+_FORMATS = tuple(f.value for f in ModelFormat)
+_CONTAINERS = tuple(c.value for c in Containerization)
+_PROTOCOLS = tuple(p.value for p in Protocol)
+_SIS = tuple(s.value for s in ServingInfrastructure)
+
+
+# -- the decision fields -------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A named latency class: requests submitted under it inherit its budget.
+
+    ``slo_ms`` is a per-request TTFT budget — it steers both the fleet router
+    (SLO-feasibility pre-filter) and adaptive batch sizing
+    (tightest-in-queue).  ``None`` means best-effort.
+    """
+
+    slo_ms: Optional[float] = None
+
+    def validate(self, path: str) -> None:
+        if self.slo_ms is not None:
+            _check(self.slo_ms > 0, f"{path}.slo_ms",
+                   f"budget must be > 0 ms, got {self.slo_ms}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleSpec:
+    """THE autoscaling config — unifies the old ``cloud.AutoscalePolicy``
+    (M/M/c initial sizing) and ``fleet.Autoscaler`` (windowed re-sizing).
+
+    ``replicas_hint`` pins the initial pool; ``None`` sizes it M/M/c-style
+    from the observed arrival rate and the service-time hint (exactly what
+    ``AutoscalePolicy.replicas_for`` used to do).  ``enabled=False`` freezes
+    the pool at its initial size (no windowed re-sizing at all).
+    """
+
+    enabled: bool = True
+    min_replicas: int = 1
+    max_replicas: int = 4
+    replicas_hint: Optional[int] = None
+    target_utilization: float = 0.7
+    window_s: float = 1.0
+    cold_start_s: float = 0.25
+    down_windows: int = 2
+
+    def validate(self, path: str) -> None:
+        _check(self.min_replicas >= 0, f"{path}.min_replicas",
+               f"must be >= 0, got {self.min_replicas}")
+        _check(self.max_replicas >= 1, f"{path}.max_replicas",
+               f"must be >= 1, got {self.max_replicas}")
+        _check(self.min_replicas <= self.max_replicas, f"{path}.min_replicas",
+               f"min_replicas={self.min_replicas} exceeds "
+               f"max_replicas={self.max_replicas}")
+        if self.replicas_hint is not None:
+            _check(self.replicas_hint >= 1, f"{path}.replicas_hint",
+                   f"must be >= 1, got {self.replicas_hint}")
+        _check(0 < self.target_utilization <= 1.0,
+               f"{path}.target_utilization",
+               f"must be in (0, 1], got {self.target_utilization}")
+        _check(self.window_s > 0, f"{path}.window_s",
+               f"must be > 0, got {self.window_s}")
+        _check(self.cold_start_s >= 0, f"{path}.cold_start_s",
+               f"must be >= 0, got {self.cold_start_s}")
+        _check(self.down_windows >= 1, f"{path}.down_windows",
+               f"must be >= 1, got {self.down_windows}")
+
+    def initial_pool(self, rate_per_s: float, service_time_s: float) -> int:
+        """Initial replica count: the pinned hint, else M/M/c sizing (the
+        folded-in ``AutoscalePolicy.replicas_for``)."""
+        if self.replicas_hint is not None:
+            return max(self.min_replicas,
+                       min(self.max_replicas, self.replicas_hint))
+        needed = rate_per_s * service_time_s / self.target_utilization
+        return max(self.min_replicas,
+                   min(self.max_replicas, math.ceil(needed)))
+
+
+@dataclasses.dataclass(frozen=True)
+class EndpointSpec:
+    """One endpoint = one complete assignment of the paper's decisions."""
+
+    name: str
+    arch: str
+    model: str = ""                    # registry model name; "" -> name
+    version: int = 1
+    format: str = "rsm"                # TD2 — selects the replica's weights
+    si: str = "si4_cloud"              # SI1..SI4 (si1 -> eager engine)
+    container: str = "none"            # TD1 — billed via container.overhead()
+    protocol: str = "grpc_binary"      # TD4 — wire codec (server adapter)
+    policy: str = "dynamic_batch"      # TD3 request processing
+    max_batch: int = 8
+    batch_timeout_ms: float = 20.0
+    max_seq: int = 256
+    # endpoint TTFT budget steering the router's SLO pre-filter and the
+    # policy's batch sizing; None falls back to the spec-global
+    # ttft_budget_s (and, for the policy target only, a 200 ms default)
+    ttft_slo_ms: Optional[float] = None
+    autoscale: AutoscaleSpec = AutoscaleSpec()
+    slo_classes: Mapping[str, SLOClass] = dataclasses.field(
+        default_factory=dict)
+    service_time_hint_s: float = 0.1   # until a measurement exists
+    # power envelope overrides; None inherits the ServingSpec envelope
+    active_power_w: Optional[float] = None
+    idle_power_w: Optional[float] = None
+    # simulation knob: replay measured step times on fleet replicas (the
+    # server adapter turns this off when registered without a cache, so an
+    # uncached endpoint really executes the model every dispatch)
+    step_cache: bool = True
+
+    @property
+    def model_name(self) -> str:
+        return self.model or self.name
+
+    def validate(self, path: str) -> None:
+        _check(bool(self.name), f"{path}.name", "endpoint name is empty")
+        _check(bool(self.arch), f"{path}.arch", "arch is required")
+        _check(self.format in _FORMATS, f"{path}.format",
+               f"unknown model format {self.format!r}; "
+               f"known: {sorted(_FORMATS)}")
+        _check(self.si in _SIS, f"{path}.si",
+               f"unknown serving infrastructure {self.si!r}; "
+               f"known: {sorted(_SIS)}")
+        _check(self.container in _CONTAINERS, f"{path}.container",
+               f"unknown containerization {self.container!r}; "
+               f"known: {sorted(_CONTAINERS)}")
+        _check(self.protocol in _PROTOCOLS, f"{path}.protocol",
+               f"unknown protocol {self.protocol!r}; "
+               f"known: {sorted(_PROTOCOLS)}")
+        _check(self.policy in POLICIES, f"{path}.policy",
+               f"unknown scheduling policy {self.policy!r}; "
+               f"known: {sorted(POLICIES)}")
+        _check(self.max_batch >= 1, f"{path}.max_batch",
+               f"must be >= 1, got {self.max_batch}")
+        if self.policy == "realtime":
+            _check(self.max_batch == 1, f"{path}.max_batch",
+                   "realtime processing implies max_batch == 1")
+        _check(self.batch_timeout_ms >= 0, f"{path}.batch_timeout_ms",
+               f"must be >= 0, got {self.batch_timeout_ms}")
+        _check(self.max_seq >= 1, f"{path}.max_seq",
+               f"must be >= 1, got {self.max_seq}")
+        if self.ttft_slo_ms is not None:
+            _check(self.ttft_slo_ms > 0, f"{path}.ttft_slo_ms",
+                   f"budget must be > 0 ms, got {self.ttft_slo_ms}")
+        _check(self.service_time_hint_s > 0, f"{path}.service_time_hint_s",
+               f"must be > 0, got {self.service_time_hint_s}")
+        # the paper's §4.1 compatibility constraints
+        if self.si == "si1_no_runtime":
+            _check(self.format != "rsm_int8", f"{path}.format",
+                   "rsm_int8 requires a runtime engine (SI2/SI3/SI4)")
+            _check(self.policy != "continuous_batch", f"{path}.policy",
+                   "continuous batching requires SI2+ (compiled decode)")
+        if self.si != "si4_cloud":
+            _check(self.autoscale.max_replicas <= 1,
+                   f"{path}.autoscale.max_replicas",
+                   "autoscaling replicas are an SI4 (cloud) capability")
+        self.autoscale.validate(f"{path}.autoscale")
+        for cls_name, cls in self.slo_classes.items():
+            cls.validate(f"{path}.slo_classes[{cls_name}]")
+        if self.active_power_w is not None:
+            _check(self.active_power_w > 0, f"{path}.active_power_w",
+                   f"must be > 0, got {self.active_power_w}")
+        if self.idle_power_w is not None:
+            _check(self.idle_power_w >= 0, f"{path}.idle_power_w",
+                   f"must be >= 0, got {self.idle_power_w}")
+
+    def decisions(self) -> Dict[str, object]:
+        """The decision assignment as a flat dict (report attribution)."""
+        return {
+            "si": self.si,
+            "container": self.container,
+            "format": self.format,
+            "policy": self.policy,
+            "protocol": self.protocol,
+            "autoscale": "windowed" if self.autoscale.enabled else "fixed",
+            "max_batch": self.max_batch,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSpec:
+    """The whole deployment as one comparable, serializable value."""
+
+    endpoints: Tuple[EndpointSpec, ...]
+    router: str = "round_robin"
+    ttft_budget_s: Optional[float] = None   # global TTFT budget (fallback)
+    # hardware/power envelope (endpoint fields override)
+    active_power_w: float = HOST_CPU_POWER_W
+    idle_power_w: float = HOST_CPU_IDLE_POWER_W
+
+    def __post_init__(self):
+        if not isinstance(self.endpoints, tuple):
+            object.__setattr__(self, "endpoints", tuple(self.endpoints))
+
+    # -- access ----------------------------------------------------------------
+    def endpoint(self, name: str) -> EndpointSpec:
+        for ep in self.endpoints:
+            if ep.name == name:
+                return ep
+        raise SpecError("endpoints",
+                        f"no endpoint named {name!r}; "
+                        f"known: {[e.name for e in self.endpoints]}")
+
+    # -- validation ------------------------------------------------------------
+    def validate(self) -> "ServingSpec":
+        _check(len(self.endpoints) > 0, "endpoints",
+               "a spec needs at least one endpoint")
+        seen = set()
+        for i, ep in enumerate(self.endpoints):
+            if ep.name in seen:
+                raise SpecError(f"endpoints[{i}].name",
+                                f"duplicate endpoint name {ep.name!r}")
+            seen.add(ep.name)
+            ep.validate(f"endpoints[{ep.name}]")
+        _check(self.router in ROUTERS, "router",
+               f"unknown router {self.router!r}; known: {sorted(ROUTERS)}")
+        if self.ttft_budget_s is not None:
+            _check(self.ttft_budget_s > 0, "ttft_budget_s",
+                   f"budget must be > 0 s, got {self.ttft_budget_s}")
+        _check(self.active_power_w > 0, "active_power_w",
+               f"must be > 0, got {self.active_power_w}")
+        _check(self.idle_power_w >= 0, "idle_power_w",
+               f"must be >= 0, got {self.idle_power_w}")
+        # the shared-timeline knobs must agree (one fleet autoscaler)
+        scaled = [ep for ep in self.endpoints if ep.autoscale.enabled]
+        for field in ("window_s", "target_utilization", "down_windows"):
+            vals = {getattr(ep.autoscale, field) for ep in scaled}
+            if len(vals) > 1:
+                raise SpecError(
+                    f"endpoints[*].autoscale.{field}",
+                    f"endpoints sharing a timeline disagree: {sorted(vals)}; "
+                    "autoscale windows are fleet-global")
+        return self
+
+    # -- serialization ---------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServingSpec":
+        eps = []
+        for i, e in enumerate(d.get("endpoints", ())):
+            e = dict(e)
+            path = f"endpoints[{e.get('name', i)}]"
+            e["autoscale"] = _construct(AutoscaleSpec, e.get("autoscale", {}),
+                                        f"{path}.autoscale")
+            e["slo_classes"] = {
+                k: _construct(SLOClass, v, f"{path}.slo_classes[{k}]")
+                for k, v in e.get("slo_classes", {}).items()}
+            eps.append(_construct(EndpointSpec, e, path))
+        top = {k: v for k, v in d.items() if k != "endpoints"}
+        top["endpoints"] = tuple(eps)
+        return _construct(cls, top, "spec")
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServingSpec":
+        return cls.from_dict(json.loads(text))
+
+
+# -- spec sweeps: design-decision grids from pure data -------------------------
+
+
+def _replace_path(obj, parts: Sequence[str], value, path: str):
+    head = parts[0]
+    if not any(f.name == head for f in dataclasses.fields(obj)):
+        raise SpecError(path, f"{type(obj).__name__} has no field {head!r}")
+    if len(parts) == 1:
+        return dataclasses.replace(obj, **{head: value})
+    sub = _replace_path(getattr(obj, head), parts[1:], value, path)
+    return dataclasses.replace(obj, **{head: sub})
+
+
+def with_override(spec: ServingSpec, path: str, value) -> ServingSpec:
+    """A copy of ``spec`` with one dotted field path replaced.
+
+    ``"router"`` and other top-level fields address the spec itself;
+    ``"endpoints.<name>.<field...>"`` addresses one endpoint (``*`` = all),
+    e.g. ``"endpoints.bulk.format"`` or ``"endpoints.*.autoscale.window_s"``.
+    """
+    parts = path.split(".")
+    if parts[0] != "endpoints":
+        return _replace_path(spec, parts, value, path)
+    _check(len(parts) >= 3, path,
+           "endpoint overrides look like endpoints.<name>.<field>")
+    sel, rest = parts[1], parts[2:]
+    if sel != "*":
+        spec.endpoint(sel)             # raises SpecError if unknown
+    eps = tuple(
+        _replace_path(ep, rest, value, path) if sel in ("*", ep.name) else ep
+        for ep in spec.endpoints
+    )
+    return dataclasses.replace(spec, endpoints=eps)
+
+
+def sweep(spec: ServingSpec,
+          overrides: Mapping[str, Sequence]) -> List[Tuple[dict, ServingSpec]]:
+    """Expand ``{field_path: [values]}`` into the cartesian grid of variants.
+
+    Returns ``[(assignment, spec), ...]`` where ``assignment`` maps each
+    swept path to the value this variant uses.  Every variant is validated,
+    so an infeasible cell fails at grid-construction time with the offending
+    field path — not halfway through a benchmark run.
+    """
+    paths = list(overrides)
+    out = []
+    for combo in itertools.product(*(overrides[p] for p in paths)):
+        variant = spec
+        for path, value in zip(paths, combo):
+            variant = with_override(variant, path, value)
+        out.append((dict(zip(paths, combo)), variant.validate()))
+    return out
+
+
+# -- Deployment bridge (the legacy entry points build specs through this) ------
+
+
+def endpoint_from_deployment(name: str, dep: Deployment, *,
+                             model: str = "", version: int = 1,
+                             max_seq: Optional[int] = None,
+                             autoscale_enabled: bool = True) -> EndpointSpec:
+    """Translate a legacy :class:`~repro.core.add.Deployment` into the one
+    declarative vocabulary (the adapters' shim path)."""
+    return EndpointSpec(
+        name=name,
+        arch=dep.arch,
+        model=model,
+        version=version,
+        format=dep.model_format.value,
+        si=dep.si.value,
+        container=dep.containerization.value,
+        protocol=dep.protocol.value,
+        policy=dep.request_processing.value,
+        max_batch=dep.max_batch,
+        batch_timeout_ms=dep.batch_timeout_ms,
+        max_seq=max_seq if max_seq is not None else dep.max_seq,
+        ttft_slo_ms=dep.ttft_slo_ms,
+        autoscale=AutoscaleSpec(
+            enabled=autoscale_enabled,
+            min_replicas=dep.min_replicas,
+            max_replicas=dep.max_replicas,
+            window_s=dep.autoscale_window_s,
+            cold_start_s=dep.cold_start_s,
+        ),
+    )
+
+
+# -- the report ----------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EndpointReport:
+    """Typed result slice for one endpoint (or the whole fleet)."""
+
+    name: str
+    decisions: Dict[str, object]
+    n_requests: int
+    total_tokens: int
+    latency_p50_s: float
+    latency_p95_s: float
+    latency_p99_s: float
+    mean_ttft_s: float
+    throughput_tok_s: float
+    j_active: float
+    j_idle: float
+    j_measured: float                  # meter total (active + idle)
+    j_container_overhead: float        # simulated TD1 multiplier (Hampau'22)
+    j_billed: float                    # measured + container overhead
+    j_per_request: float               # billed
+    j_per_token: float                 # billed
+    replica_seconds: float
+    cold_starts: int
+    replica_timeline: List[Tuple[float, int]]
+    j_by_replica: Dict[str, float]     # per-replica meter provenance
+    metrics: ServingMetrics            # full object, not serialized
+
+    def to_dict(self) -> dict:
+        # field-by-field, NOT dataclasses.asdict: asdict would deep-copy
+        # every response token array inside `metrics` just to discard it
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self) if f.name != "metrics"}
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """What :meth:`ServingSession.run` returns: every number a green-serving
+    comparison needs, decomposed per endpoint and per design decision."""
+
+    spec: ServingSpec
+    endpoints: Dict[str, EndpointReport]
+    fleet: EndpointReport
+    result: FleetResult                # the raw fleet result (adapters)
+
+    def to_dict(self) -> dict:
+        return {
+            "spec": self.spec.to_dict(),
+            "endpoints": {n: r.to_dict() for n, r in self.endpoints.items()},
+            "fleet": self.fleet.to_dict(),
+        }
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+
+def _percentiles(m: ServingMetrics) -> Tuple[float, float, float]:
+    return (m.latency_percentile(50), m.latency_percentile(95),
+            m.latency_percentile(99))
+
+
+def _endpoint_report(name: str, decisions: Dict[str, object],
+                     m: ServingMetrics, energy_mult: float) -> EndpointReport:
+    stats = m.fleet or {}
+    p50, p95, p99 = _percentiles(m)
+    measured = m.meter.total_j if m.meter is not None else m.energy_j
+    overhead_j = measured * (energy_mult - 1.0)
+    billed = measured + overhead_j
+    by_replica = {}
+    if m.meter is not None:
+        by_replica = {src: round(d["active_j"] + d["idle_j"], 6)
+                      for src, d in sorted(m.meter.by_source.items())}
+    return EndpointReport(
+        name=name,
+        decisions=decisions,
+        n_requests=len(m.responses),
+        total_tokens=m.total_tokens,
+        latency_p50_s=p50, latency_p95_s=p95, latency_p99_s=p99,
+        mean_ttft_s=m.mean_ttft_s,
+        throughput_tok_s=m.throughput_tok_s,
+        j_active=m.meter.active_j if m.meter else 0.0,
+        j_idle=m.meter.idle_j if m.meter else 0.0,
+        j_measured=measured,
+        j_container_overhead=overhead_j,
+        j_billed=billed,
+        j_per_request=billed / max(len(m.responses), 1),
+        j_per_token=billed / max(m.total_tokens, 1),
+        replica_seconds=stats.get("replica_seconds", 0.0),
+        cold_starts=stats.get("cold_starts", 0),
+        replica_timeline=stats.get("replica_timeline", []),
+        j_by_replica=by_replica,
+        metrics=m,
+    )
+
+
+# -- the session ---------------------------------------------------------------
+
+
+class ServingSession:
+    """The single facade over the serving stack: deploy / submit / run.
+
+    A session owns engines (memoized across deploys by (model, version,
+    format, si, arch, max_seq), so sweeping a spec grid rebuilds nothing it
+    has already built), calibration caches (keyed by engine, so a format
+    calibrated once stays calibrated for every variant that uses it), and a
+    model registry directory (supplied, or a session-private temp dir).
+    """
+
+    def __init__(self, registry_root: Optional[str] = None):
+        self._registry_root = registry_root
+        self._tmp_registry: Optional[tempfile.TemporaryDirectory] = None
+        self._endpoints: Dict[str, dict] = {}   # name -> {engine, spec}
+        self._workloads: Dict[str, List[Request]] = {}
+        self._hints: Dict[str, float] = {}
+        # key -> (params, engine); see _build_engine for the key contract
+        self._engine_memo: Dict[tuple, Tuple[object, Engine]] = {}
+        # calibration caches keyed by engine object (identity hash): the
+        # strong reference pins the engine so a recycled id() can never
+        # attach another engine's measured step times
+        self._cal: Dict[Engine, StepTimeCache] = {}
+        self.spec: Optional[ServingSpec] = None
+
+    # -- deploy ---------------------------------------------------------------
+    def deploy(self, spec: ServingSpec, *,
+               params: Optional[Mapping[str, object]] = None,
+               engines: Optional[Mapping[str, Engine]] = None,
+               ) -> "ServingSession":
+        """Validate ``spec`` and stand its endpoints up.
+
+        ``params`` maps model names to parameter pytrees; each endpoint's
+        params are pushed to the session registry in the endpoint's **model
+        format** and pulled back through it (``rsm_int8`` endpoints serve
+        QTensor weights), then wrapped in the SI-appropriate engine.
+        ``engines`` short-circuits that for adapters that already own an
+        engine.  Re-deploying replaces the previous spec; submitted-but-unrun
+        workloads are dropped.
+        """
+        spec.validate()
+        self.spec = spec
+        self._endpoints = {}
+        self._workloads = {}
+        self._hints = {}
+        for ep in spec.endpoints:
+            if engines is not None and ep.name in engines:
+                engine = engines[ep.name]
+            else:
+                if params is None or ep.model_name not in params:
+                    raise SpecError(
+                        f"endpoints[{ep.name}]",
+                        f"no params for model {ep.model_name!r} and no "
+                        "engine injected; pass params={...} or engines={...}")
+                engine = self._build_engine(ep, params[ep.model_name])
+            self._endpoints[ep.name] = {"engine": engine, "spec": ep}
+        return self
+
+    def _registry(self) -> str:
+        if self._registry_root is None:
+            # held on the session so its finalizer removes the serialized
+            # weights when the session is collected (or at interpreter exit)
+            self._tmp_registry = tempfile.TemporaryDirectory(
+                prefix="repro-registry-")
+            self._registry_root = self._tmp_registry.name
+        os.makedirs(self._registry_root, exist_ok=True)
+        return self._registry_root
+
+    def _build_engine(self, ep: EndpointSpec, template_params) -> Engine:
+        """Materialize the TD2 decision: the format on disk IS the format
+        served — int8 endpoints pull QTensor weights, fp32 endpoints pull
+        full precision, from the same uploaded checkpoint.
+
+        The memo key includes the params' identity (and the memo entry pins
+        the params object alive), so re-deploying the same model name with
+        DIFFERENT weights rebuilds — it never silently serves the first
+        deploy's checkpoint.
+        """
+        key = (id(template_params), ep.model_name, ep.version, ep.format,
+               ep.si, ep.arch, ep.max_seq)
+        hit = self._engine_memo.get(key)
+        if hit is not None:
+            return hit[1]
+        from repro.serving import formats
+
+        cfg = get_arch(ep.arch)
+        path = os.path.join(self._registry(),
+                            f"{ep.model_name}-v{ep.version}.{ep.format}")
+        if ep.format == "native":
+            formats.save_native(template_params, path)
+            served = formats.load_native(template_params, path)
+        else:
+            formats.save_rsm(template_params, path,
+                             quantize=(ep.format == "rsm_int8"))
+            served = formats.load_rsm(template_params, path,
+                                      as_qtensor=(ep.format == "rsm_int8"))
+        if ep.si == "si1_no_runtime":
+            engine: Engine = EagerEngine(cfg, served, ep.max_seq)
+        else:
+            engine = CompiledEngine(cfg, served, ep.max_seq)
+        self._engine_memo[key] = (template_params, engine)
+        return engine
+
+    def engine(self, name: str) -> Engine:
+        return self._endpoints[name]["engine"]
+
+    # -- calibration / warm caches --------------------------------------------
+    def calibrate(self, name: str, *, batch_sizes, prompt_len: int,
+                  max_new: int,
+                  num_slots: Optional[int] = None) -> StepTimeCache:
+        """Measure step times once per engine; every replica of any variant
+        that shares the engine replays them (sweeps stay sub-second).
+        Already-measured shapes are skipped, so calibrating two endpoints
+        that resolve to the same memoized engine costs one measurement."""
+        engine = self.engine(name)
+        cache = self._cal.setdefault(engine, StepTimeCache())
+        ep: EndpointSpec = self._endpoints[name]["spec"]
+        sb = shape_bucket(prompt_len)
+        missing = [b for b in batch_sizes
+                   if not cache.has(("generate", b, sb, max_new))]
+        slots = num_slots
+        if slots is not None and cache.has(("prefill1", sb)) \
+                and cache.has(("decode", slots)):
+            slots = None
+        if not missing and slots is None:
+            return cache
+        cfg = get_arch(ep.arch)
+        calibrate(engine, cache, batch_sizes=missing,
+                  prompt_len=prompt_len, max_new=max_new,
+                  vocab=cfg.vocab_size, num_slots=slots,
+                  max_seq=ep.max_seq)
+        return cache
+
+    def warm(self, name: str, cache: StepTimeCache) -> None:
+        """Adopt an externally calibrated cache for this endpoint's engine."""
+        engine = self.engine(name)
+        self._cal.setdefault(engine, StepTimeCache()).seed_from(cache)
+
+    def _warm_cache(self, name: str) -> Optional[StepTimeCache]:
+        return self._cal.get(self.engine(name))
+
+    # -- submit ----------------------------------------------------------------
+    def submit(self, name: str, workload: List[Request],
+               slo_class: Optional[str] = None,
+               service_time_hint_s: Optional[float] = None) -> None:
+        """Queue a workload on an endpoint.  ``slo_class`` stamps every
+        request that has no explicit budget with the class's ``slo_ms``."""
+        if name not in self._endpoints:
+            raise SpecError("endpoints",
+                            f"no endpoint named {name!r}; "
+                            f"known: {sorted(self._endpoints)}")
+        ep: EndpointSpec = self._endpoints[name]["spec"]
+        if slo_class is not None:
+            if slo_class not in ep.slo_classes:
+                raise SpecError(
+                    f"endpoints[{name}].slo_classes",
+                    f"unknown SLO class {slo_class!r}; "
+                    f"known: {sorted(ep.slo_classes)}")
+            budget = ep.slo_classes[slo_class].slo_ms
+            # stamp COPIES: the caller's requests stay unowned, so the same
+            # workload can be resubmitted under a different class
+            workload = [dataclasses.replace(r, slo_ms=budget)
+                        if r.slo_ms is None else r for r in workload]
+        if service_time_hint_s is not None:
+            self._hints[name] = service_time_hint_s
+        self._workloads.setdefault(name, []).extend(workload)
+
+    # -- run -------------------------------------------------------------------
+    def _slo_floor_check(self, name: str) -> None:
+        """An opted-into SLO budget tighter than the measured floor (batch-1
+        prefill) can never be met: fail with the field path instead of
+        silently missing it for the whole run.
+
+        Only the hard, opt-in budgets are enforced — per-class ``slo_ms``
+        and the spec-global ``ttft_budget_s``.  The endpoint-level
+        ``ttft_slo_ms`` stays a soft routing/batching target (the legacy
+        ``Deployment.ttft_slo_ms`` semantic), so adapter traffic on a slow
+        host degrades instead of erroring.
+        """
+        cache = self._warm_cache(name)
+        if cache is None:
+            return
+        floor_s = cache.floor_ttft_s()
+        if floor_s is None:
+            return
+        ep: EndpointSpec = self._endpoints[name]["spec"]
+        budgets: Dict[str, Optional[float]] = {}
+        if self.spec.ttft_budget_s is not None:
+            budgets["ttft_budget_s"] = self.spec.ttft_budget_s * 1e3
+        for cls_name, cls in ep.slo_classes.items():
+            budgets[f"endpoints[{name}].slo_classes[{cls_name}].slo_ms"] = \
+                cls.slo_ms
+        for path, ms in budgets.items():
+            if ms is not None and ms / 1e3 < floor_s:
+                raise SpecError(
+                    path,
+                    f"budget {ms}ms is tighter than the measured floor "
+                    f"({floor_s * 1e3:.3f}ms batch-1 prefill): "
+                    "no schedule can meet it")
+
+    def _rate(self, workload: List[Request]) -> float:
+        if len(workload) > 1:
+            span = (max(r.arrival_s for r in workload)
+                    - min(r.arrival_s for r in workload))
+            return len(workload) / max(span, 1e-6)
+        return 1.0
+
+    def _fleet_endpoint(self, ep: EndpointSpec,
+                        workload: List[Request]) -> FleetEndpoint:
+        hint = self._hints.get(ep.name, ep.service_time_hint_s)
+        ovh = td1.overhead(Containerization(ep.container))
+        ttft_s = (ep.ttft_slo_ms / 1e3 if ep.ttft_slo_ms is not None
+                  else self.spec.ttft_budget_s)
+        # the policy's TTFT target honors the same chain: endpoint budget,
+        # else the spec-global budget, else the library default
+        policy_ttft_ms = (ttft_s * 1e3 if ttft_s is not None else 200.0)
+        initial = ep.autoscale.initial_pool(self._rate(workload), hint)
+        if ep.autoscale.enabled:
+            lo, hi = ep.autoscale.min_replicas, ep.autoscale.max_replicas
+        else:
+            # a frozen endpoint keeps its initial pool even when it shares
+            # the timeline (and hence the fleet autoscaler) with scaled ones
+            lo = hi = initial
+        return FleetEndpoint(
+            name=ep.name,
+            engine=self.engine(ep.name),
+            policy_factory=lambda ep=ep: make_policy(
+                ep.policy, max_batch=ep.max_batch,
+                timeout_ms=ep.batch_timeout_ms, max_seq=ep.max_seq,
+                ttft_slo_ms=policy_ttft_ms,
+            ),
+            min_replicas=lo,
+            max_replicas=hi,
+            initial_replicas=initial,
+            service_time_hint_s=hint,
+            ttft_slo_s=ttft_s,
+            warm_cache=self._warm_cache(ep.name),
+            use_step_cache=ep.step_cache,
+            # TD1: a containerized replica pays the container's cold start on
+            # top of the provisioning penalty, every scale-up
+            cold_start_s=ep.autoscale.cold_start_s + ovh.cold_start_s,
+            active_power_w=(ep.active_power_w if ep.active_power_w is not None
+                            else self.spec.active_power_w),
+            idle_power_w=(ep.idle_power_w if ep.idle_power_w is not None
+                          else self.spec.idle_power_w),
+        )
+
+    def _autoscaler(self) -> Optional[Autoscaler]:
+        scaled = [ep for ep in self.spec.endpoints if ep.autoscale.enabled]
+        if not scaled:
+            return None
+        a = scaled[0].autoscale
+        return Autoscaler(window_s=a.window_s,
+                          target_utilization=a.target_utilization,
+                          cold_start_s=a.cold_start_s,
+                          down_windows=a.down_windows)
+
+    def run(self) -> ServingReport:
+        """Serve every submitted workload on ONE shared virtual timeline and
+        return the typed report.  Consumes the submitted workloads."""
+        if self.spec is None:
+            raise SpecError("spec", "deploy(spec) before run()")
+        if not self._workloads:
+            raise SpecError("workloads", "nothing submitted; submit() first")
+        for name in self._workloads:
+            self._slo_floor_check(name)
+        fleet = ReplicaFleet(router=self.spec.router,
+                             autoscaler=self._autoscaler())
+        for name, wl in self._workloads.items():
+            fleet.add_endpoint(
+                self._fleet_endpoint(self._endpoints[name]["spec"], wl))
+        workloads, self._workloads = self._workloads, {}
+        result = fleet.run(workloads)
+
+        reports: Dict[str, EndpointReport] = {}
+        fleet_overhead_j = 0.0
+        for name, m in result.endpoints.items():
+            ep: EndpointSpec = self._endpoints[name]["spec"]
+            mult = td1.overhead(Containerization(ep.container)).energy_overhead
+            rep = _endpoint_report(name, ep.decisions(), m, mult)
+            reports[name] = rep
+            fleet_overhead_j += rep.j_container_overhead
+        fm = result.fleet
+        fleet_measured = fm.meter.total_j if fm.meter else fm.energy_j
+        fleet_rep = _endpoint_report(
+            "fleet", {"router": self.spec.router,
+                      "endpoints": [e.name for e in self.spec.endpoints]},
+            fm, 1.0)
+        # the fleet bills the sum of its endpoints' container overheads
+        fleet_rep.j_container_overhead = fleet_overhead_j
+        fleet_rep.j_billed = fleet_measured + fleet_overhead_j
+        fleet_rep.j_per_request = fleet_rep.j_billed / max(
+            fleet_rep.n_requests, 1)
+        fleet_rep.j_per_token = fleet_rep.j_billed / max(
+            fleet_rep.total_tokens, 1)
+        return ServingReport(spec=self.spec, endpoints=reports,
+                             fleet=fleet_rep, result=result)
+
+    # -- one-shot convenience --------------------------------------------------
+    def serve(self, workloads: Mapping[str, List[Request]]) -> ServingReport:
+        """submit() every workload, then run()."""
+        for name, wl in workloads.items():
+            self.submit(name, wl)
+        return self.run()

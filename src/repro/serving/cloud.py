@@ -1,38 +1,40 @@
-"""SI4 'End-to-end ML cloud service': registry + fleet-served endpoints.
+"""SI4 'End-to-end ML cloud service': registry + spec-served endpoints.
 
-The SageMaker/Vertex analogue: models live in a registry (persisted via the
-TD2 formats), ``deploy`` creates a managed endpoint, and ``predict`` serves a
-workload through a :class:`repro.serving.fleet.ReplicaFleet` — N event-driven
-scheduler cores on one shared virtual timeline, with a pluggable per-arrival
-router and a windowed autoscaler that re-sizes the replica pool in virtual
-time.  ``predict_multi`` runs *several* named endpoints on one timeline, so
-routing and autoscaling trade energy globally.  The idle energy of
-provisioned-but-underutilized replicas is charged to the endpoint with
-per-replica provenance — the "ready-to-use but you pay for the abstraction"
-trade-off the paper describes for SI4, now decomposable replica by replica.
+The SageMaker/Vertex analogue, now a THIN ADAPTER over the declarative
+serving API (:mod:`repro.serving.api`): models live in a registry (persisted
+via the TD2 formats), ``deploy`` creates a managed endpoint from a legacy
+:class:`~repro.core.add.Deployment`, and ``predict`` / ``predict_multi``
+translate those deployments into a :class:`~repro.serving.api.ServingSpec`
+and serve them through one :class:`~repro.serving.api.ServingSession` —
+same replica fleet, same shared timeline, same energy story, but every
+design decision flows through the one spec vocabulary.  New code should
+build a ``ServingSpec`` directly; this class is the compatibility shim the
+paper-era call sites keep working on.
+
+The old ``AutoscalePolicy`` M/M/c pre-sizing class is gone — its sizing
+formula lives on as :meth:`repro.serving.api.AutoscaleSpec.initial_pool`
+(``replicas_hint=None`` selects it), and ``absorb_part`` moved to
+:func:`repro.energy.meter.absorb_part` with the rest of the meter math.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
 import os
 from typing import Dict, List, Optional, Union
 
 from repro.configs import get_arch
 from repro.core.add import Deployment, ModelFormat, ServingInfrastructure
 from repro.core.engines import CompiledEngine, EagerEngine, Engine
-from repro.energy.meter import EnergyMeter
 from repro.models import init_params
 from repro.serving import formats
-from repro.serving.fleet import (
-    Autoscaler,
-    EndpointSpec,
-    FleetResult,
-    ReplicaFleet,
+from repro.serving.api import (
+    ServingSession,
+    ServingSpec,
+    SpecError,
+    endpoint_from_deployment,
 )
+from repro.serving.fleet import FleetResult
 from repro.serving.request import Request, ServingMetrics
-from repro.serving.scheduler import make_policy
 from repro.serving.stepcache import StepTimeCache, calibrate
 
 
@@ -81,43 +83,8 @@ class ModelRegistry:
         return sorted(set(out))
 
 
-@dataclasses.dataclass
-class AutoscalePolicy:
-    """Initial M/M/c sizing; the fleet's windowed Autoscaler takes over."""
-
-    target_utilization: float = 0.7
-    min_replicas: int = 1
-    max_replicas: int = 4
-
-    def replicas_for(self, rate_per_s: float, service_time_s: float) -> int:
-        """M/M/c-style sizing: enough replicas to keep utilization at target."""
-        needed = rate_per_s * service_time_s / self.target_utilization
-        return max(self.min_replicas,
-                   min(self.max_replicas, math.ceil(needed)))
-
-
-def absorb_part(meter: EnergyMeter, m: ServingMetrics,
-                source: Optional[str] = None) -> EnergyMeter:
-    """Fold one partition's metrics into an endpoint-level meter.
-
-    This is the (fixed) legacy merge path for callers that combine
-    partition metrics *outside* the fleet — e.g. results of separate
-    ``ServingServer.handle`` calls.  The fleet itself always has per-replica
-    meters and merges with provenance; this helper exists so any external
-    aggregation inherits the corrected accounting: a partition without an
-    EnergyMeter is billed as active compute with *its own* token count —
-    never a running cumulative total, which used to inflate per-token
-    attribution for every partition after the first (regression-tested).
-    """
-    if m.meter is not None:
-        meter.merge(m.meter, source=source)
-    else:
-        meter.record_active(m.wall_compute_s, tokens=m.total_tokens)
-    return meter
-
-
 class CloudService:
-    """Managed endpoints on top of the registry (SI4)."""
+    """Managed endpoints on top of the registry (SI4) — a ServingSpec shim."""
 
     def __init__(self, registry_root: str):
         self.registry = ModelRegistry(registry_root)
@@ -149,10 +116,6 @@ class CloudService:
         self.endpoints[name] = {
             "engine": engine,
             "deployment": deployment,
-            "policy": AutoscalePolicy(
-                min_replicas=deployment.min_replicas,
-                max_replicas=deployment.max_replicas,
-            ),
             "warm_cache": None,
             "version": version,
         }
@@ -171,37 +134,36 @@ class CloudService:
         ep["warm_cache"] = cache
         return cache
 
-    # -- serving ---------------------------------------------------------------
-    def _spec(self, name: str, workload: List[Request],
-              hint_s: Optional[float]) -> EndpointSpec:
-        ep = self.endpoints[name]
-        dep: Deployment = ep["deployment"]
-        policy: AutoscalePolicy = ep["policy"]
-        if len(workload) > 1:
-            span = max(r.arrival_s for r in workload) - min(
-                r.arrival_s for r in workload
-            )
-            rate = len(workload) / max(span, 1e-6)
-        else:
-            rate = 1.0
-        hint = hint_s or 0.1
-        return EndpointSpec(
-            name=name,
-            engine=ep["engine"],
-            policy_factory=lambda: make_policy(
-                dep.request_processing.value,
-                max_batch=dep.max_batch,
-                timeout_ms=dep.batch_timeout_ms,
-                max_seq=dep.max_seq,
-                ttft_slo_ms=dep.ttft_slo_ms,
-            ),
-            min_replicas=dep.min_replicas,
-            max_replicas=dep.max_replicas,
-            initial_replicas=policy.replicas_for(rate, hint),
-            service_time_hint_s=hint,
-            ttft_slo_s=dep.ttft_slo_ms / 1e3,
-            warm_cache=ep["warm_cache"],
+    # -- serving (ServingSpec translation) -------------------------------------
+    def _spec(self, names, router: Optional[str]) -> ServingSpec:
+        deps = {n: self.endpoints[n]["deployment"] for n in names}
+        if router is None:
+            routers = {d.router for d in deps.values()}
+            if len(routers) > 1:
+                raise SpecError(
+                    "router",
+                    f"endpoints disagree on router {sorted(routers)}; "
+                    "pass router= explicitly")
+            router = next(iter(routers))
+        eps = tuple(
+            endpoint_from_deployment(n, dep,
+                                     version=self.endpoints[n]["version"])
+            for n, dep in deps.items()
         )
+        return ServingSpec(endpoints=eps, router=router)
+
+    def session(self, names, router: Optional[str] = None) -> ServingSession:
+        """A ServingSession over already-deployed endpoints (shared engines
+        and warm caches) — the migration path off this shim."""
+        session = ServingSession(registry_root=self.registry.root)
+        session.deploy(self._spec(names, router),
+                       engines={n: self.endpoints[n]["engine"]
+                                for n in names})
+        for n in names:
+            warm = self.endpoints[n]["warm_cache"]
+            if warm is not None:
+                session.warm(n, warm)
+        return session
 
     def predict_multi(
         self,
@@ -218,43 +180,22 @@ class CloudService:
         """
         if not workloads:
             raise ValueError("no workloads")
-        deps = {name: self.endpoints[name]["deployment"]
-                for name in workloads}
-        # the fleet-level knobs are shared by construction: refuse to pick
-        # one endpoint's configuration over another's silently
-        if router is None:
-            routers = {d.router for d in deps.values()}
-            if len(routers) > 1:
-                raise ValueError(
-                    f"endpoints disagree on router {sorted(routers)}; "
-                    "pass router= explicitly")
-        windows = {(d.autoscale_window_s, d.cold_start_s)
-                   for d in deps.values()}
-        if len(windows) > 1:
-            raise ValueError(
-                "endpoints disagree on (autoscale_window_s, cold_start_s): "
-                f"{sorted(windows)}")
-        dep: Deployment = next(iter(deps.values()))
-        fleet = ReplicaFleet(
-            router=router or dep.router,
-            autoscaler=Autoscaler(window_s=dep.autoscale_window_s,
-                                  cold_start_s=dep.cold_start_s),
-        )
+        session = self.session(list(workloads), router)
         for name, wl in workloads.items():
             hint = service_time_hint_s.get(name) \
                 if isinstance(service_time_hint_s, dict) \
                 else service_time_hint_s
-            fleet.add_endpoint(self._spec(name, wl, hint))
-        result = fleet.run(workloads)
+            session.submit(name, wl, service_time_hint_s=hint)
+        report = session.run()
         for name in workloads:
-            stats = result.endpoints[name].fleet or {}
+            stats = report.result.endpoints[name].fleet or {}
             ep = self.endpoints[name]
             # peak concurrent pool size (the old M/M/c R analogue), NOT the
             # cumulative spawn count — autoscale churn can mint more
             # replicas than ever ran at once
             ep["replicas"] = stats.get("peak_replicas", 0)
             ep["fleet_stats"] = stats
-        return result
+        return report.result
 
     def predict(self, name: str, workload: List[Request],
                 service_time_hint_s: Optional[float] = None,

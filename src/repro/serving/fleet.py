@@ -247,6 +247,12 @@ class EndpointSpec:
     # delay still honors it; per-request Request.slo_ms overrides it
     ttft_slo_s: Optional[float] = None
     warm_cache: Optional[StepTimeCache] = None  # seeds replica caches
+    # False: replicas run with NO step cache at all — every dispatch executes
+    # the engine (the SI3 server's uncached registration path)
+    use_step_cache: bool = True
+    # per-endpoint cold-start override (e.g. containerized endpoints pay the
+    # container's startup on top); None defers to the fleet Autoscaler's
+    cold_start_s: Optional[float] = None
     active_power_w: float = HOST_CPU_POWER_W
     idle_power_w: float = HOST_CPU_IDLE_POWER_W
 
@@ -286,9 +292,11 @@ class ReplicaFleet:
                ready_s: float) -> Replica:
         i = self._counter.get(spec.name, 0)
         self._counter[spec.name] = i + 1
-        cache = StepTimeCache()
-        if spec.warm_cache is not None:
-            cache.seed_from(spec.warm_cache)
+        cache: Optional[StepTimeCache] = None
+        if spec.use_step_cache:
+            cache = StepTimeCache()
+            if spec.warm_cache is not None:
+                cache.seed_from(spec.warm_cache)
         core = SchedulerCore(spec.engine, spec.policy_factory(),
                              step_cache=cache,
                              active_power_w=spec.active_power_w,
@@ -301,6 +309,13 @@ class ReplicaFleet:
 
     def endpoint_replicas(self, name: str) -> List[Replica]:
         return [r for r in self.replicas if r.endpoint == name]
+
+    def cold_start_s(self, spec: EndpointSpec) -> float:
+        """Scale-up provisioning penalty for this endpoint: the spec's own
+        override (e.g. container startup included), else the autoscaler's."""
+        if spec.cold_start_s is not None:
+            return spec.cold_start_s
+        return self.autoscaler.cold_start_s if self.autoscaler else 0.0
 
     # -- estimates shared by routers / autoscaler ------------------------------
     def service_time_s(self, name: str) -> float:
@@ -371,7 +386,7 @@ class ReplicaFleet:
             # scale-from-zero (min_replicas=0 and the pool was reclaimed):
             # the arrival itself provisions a replica and waits out its
             # cold start — the serverless corner of the SI4 trade-off
-            cold = self.autoscaler.cold_start_s if self.autoscaler else 0.0
+            cold = self.cold_start_s(self.specs[name])
             pool = [self._spawn(self.specs[name], created_s=t,
                                 ready_s=t + cold)]
         ok = [r for r in pool if self._slo_ok(r, req, t)]
@@ -493,7 +508,7 @@ class ReplicaFleet:
                     need -= 1
                 for _ in range(need):
                     self._spawn(spec, created_s=t_end,
-                                ready_s=t_end + self.autoscaler.cold_start_s)
+                                ready_s=t_end + self.cold_start_s(spec))
                 self.scale_events.append(
                     {"t": t_end, "endpoint": name, "from": len(live),
                      "to": desired, "kind": "up"})

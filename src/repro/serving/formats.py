@@ -161,6 +161,13 @@ def load_rsm(template, path: str, as_qtensor: bool = False):
         manifest = json.load(f)
     buf = np.memmap(os.path.join(path, "tensors.bin"), dtype=np.uint8, mode="r")
 
+    def _own(view: np.ndarray) -> np.ndarray:
+        # frombuffer on the memmap returns a VIEW of the file, and on CPU
+        # jnp.asarray may alias it zero-copy — a later overwrite of the
+        # registry entry would then mutate already-loaded engine weights
+        # in place.  Copy so every loaded tree owns its memory.
+        return np.array(view)
+
     paths = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree_util.tree_structure(template)
     leaves = []
@@ -172,14 +179,14 @@ def load_rsm(template, path: str, as_qtensor: bool = False):
         shape = tuple(e["shape"])
         if e["quantized"]:
             n = int(np.prod(shape))
-            wq = np.frombuffer(
+            wq = _own(np.frombuffer(
                 buf, np.int8, count=n, offset=e["offset"]
-            ).reshape(shape)
+            ).reshape(shape))
             scales_shape = shape[:-2] + shape[-1:]
-            scales = np.frombuffer(
+            scales = _own(np.frombuffer(
                 buf, np.float32, count=int(np.prod(scales_shape)),
                 offset=e["scales_offset"],
-            ).reshape(scales_shape)
+            ).reshape(scales_shape))
             if as_qtensor:
                 leaves.append(QTensor(jnp.asarray(wq), jnp.asarray(scales)))
             else:
@@ -191,8 +198,10 @@ def load_rsm(template, path: str, as_qtensor: bool = False):
         else:
             dt = np.dtype(e["dtype"])
             n = int(np.prod(shape)) if shape else 1
-            arr = np.frombuffer(buf, dt, count=n, offset=e["offset"]).reshape(
-                shape
+            arr = _own(
+                np.frombuffer(buf, dt, count=n, offset=e["offset"]).reshape(
+                    shape
+                )
             )
             leaves.append(jnp.asarray(arr, jnp.dtype(e["orig_dtype"])))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -350,6 +350,10 @@ class ContinuousBatchScheduler(_PolicyScheduler):
                          step_cache)
 
 
+# the TD3 vocabulary (spec validation checks membership before make_policy)
+POLICIES = ("realtime", "dynamic_batch", "adaptive_batch", "continuous_batch")
+
+
 def make_policy(kind: str, *, max_batch=8, timeout_ms=20.0, max_seq=256,
                 ttft_slo_ms=200.0) -> SchedulingPolicy:
     """Fresh policy instance for ``kind`` — policies are stateful, so every

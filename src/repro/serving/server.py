@@ -5,26 +5,31 @@ handler), the server owns the API (no hand-built web layer), configures an
 endpoint per model, applies the TD3 batching policy, and speaks the TD4 wire
 codec.  Contrast with SI1/SI2 where the practitioner wires the engine to a
 web framework manually.
+
+Since the spec redesign this class is a THIN ADAPTER: ``handle`` translates
+the server's :class:`~repro.core.add.Deployment` into a single-endpoint
+:class:`~repro.serving.api.ServingSpec` (fixed one-replica pool, no
+autoscaling — the SI3 shape) and serves it through a
+:class:`~repro.serving.api.ServingSession`.  New code should build a spec
+directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.configs import get_arch
-from repro.core.add import (
-    Deployment,
-    ModelFormat,
-    Protocol,
-    RequestProcessing,
-    ServingInfrastructure,
-)
+from repro.core.add import Deployment, ServingInfrastructure
 from repro.core.engines import CompiledEngine, EagerEngine, Engine
+from repro.serving.api import (
+    ServingSession,
+    ServingSpec,
+    endpoint_from_deployment,
+)
 from repro.serving.codecs import make_codec
 from repro.serving.request import Request, ServingMetrics
-from repro.serving.scheduler import make_scheduler
 
 
 @dataclasses.dataclass
@@ -54,7 +59,8 @@ class ServingServer:
         deployment.require_valid()
         self.deployment = deployment
         self.codec = make_codec(deployment.protocol.value)
-        self.endpoints: Dict[str, Tuple[Engine, object, ModelPackage]] = {}
+        self.endpoints: Dict[str, Tuple[Engine, ModelPackage]] = {}
+        self._step_caches: Dict[str, object] = {}
 
     # -- packaging / endpoint configuration (the SI3 'no manual API' step) ----
     def register(self, pkg: ModelPackage, step_cache=None) -> str:
@@ -66,28 +72,44 @@ class ServingServer:
             engine: Engine = EagerEngine(cfg, pkg.params, pkg.max_seq)
         else:
             engine = CompiledEngine(cfg, pkg.params, pkg.max_seq)
-        scheduler = make_scheduler(
-            dep.request_processing.value,
-            engine,
-            max_batch=dep.max_batch,
-            timeout_ms=dep.batch_timeout_ms,
-            max_seq=pkg.max_seq,
-            ttft_slo_ms=dep.ttft_slo_ms,
-            step_cache=step_cache,
-        )
-        self.endpoints[pkg.name] = (engine, scheduler, pkg)
+        self.endpoints[pkg.name] = (engine, pkg)
+        if step_cache is not None:
+            self._step_caches[pkg.name] = step_cache
         return f"/v1/models/{pkg.name}:predict"
 
     def warmup(self, name: str, batch: int, prompt_len: int) -> float:
-        engine, _, _ = self.endpoints[name]
+        engine, _ = self.endpoints[name]
         return engine.warmup(batch, prompt_len)
+
+    # -- the Deployment -> ServingSpec translation ----------------------------
+    def _session(self, name: str) -> ServingSession:
+        """One-endpoint session: the SI3 server is a fixed single replica
+        (no cloud autoscaling), optionally replaying a registered cache."""
+        engine, pkg = self.endpoints[name]
+        cache = self._step_caches.get(name)
+        ep = dataclasses.replace(
+            endpoint_from_deployment(name, self.deployment,
+                                     max_seq=pkg.max_seq,
+                                     autoscale_enabled=False),
+            arch=pkg.arch,
+            version=pkg.version,
+            step_cache=cache is not None,
+        )
+        # pin the pool at exactly one replica: an SI3 server process is one
+        # scheduler, whatever the deployment's cloud knobs say
+        ep = dataclasses.replace(
+            ep, autoscale=dataclasses.replace(ep.autoscale, replicas_hint=1))
+        session = ServingSession()
+        session.deploy(ServingSpec(endpoints=(ep,)), engines={name: engine})
+        if cache is not None:
+            session.warm(name, cache)
+        return session
 
     # -- wire-level entry point ------------------------------------------------
     def handle_wire(
         self, name: str, wire: List[Tuple[float, bytes]]
     ) -> Tuple[List[bytes], ServingMetrics, CodecStats]:
         """wire: [(arrival_s, encoded_request_bytes)] -> encoded responses."""
-        _, scheduler, _ = self.endpoints[name]
         stats = CodecStats()
         requests = []
         for arrival, data in wire:
@@ -99,7 +121,7 @@ class ServingServer:
                 Request(rid=rid, prompt=tokens, max_new_tokens=max_new,
                         arrival_s=arrival)
             )
-        metrics = scheduler.run(requests)
+        metrics = self.handle(name, requests)
         out = []
         for resp in metrics.responses:
             t0 = time.perf_counter()
@@ -111,5 +133,7 @@ class ServingServer:
 
     # -- object-level entry point (used by SI4 and benchmarks) -----------------
     def handle(self, name: str, workload: List[Request]) -> ServingMetrics:
-        _, scheduler, _ = self.endpoints[name]
-        return scheduler.run(workload)
+        """Serve one workload through the declarative session facade."""
+        session = self._session(name)
+        session.submit(name, workload)
+        return session.run().endpoints[name].metrics

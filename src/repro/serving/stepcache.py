@@ -52,6 +52,10 @@ class StepTimeCache:
     def __len__(self) -> int:
         return len(self._times)
 
+    def has(self, key: tuple) -> bool:
+        """Membership without touching the hit/miss counters."""
+        return key in self._times
+
     def get(self, key: tuple) -> Optional[Tuple[float, ...]]:
         hit = self._times.get(key)
         if hit is None:
@@ -72,6 +76,27 @@ class StepTimeCache:
             if k[0] == "prefill1" and k[1] == s_bucket:
                 return True
         return False
+
+    def floor_ttft_s(self) -> Optional[float]:
+        """The tightest TTFT any schedule could achieve from these
+        measurements: the smallest measured batch-1 prefill on record.
+        Spec validation rejects SLO budgets below this floor.
+
+        Only true batch-1 measurements are used when available; otherwise
+        the fallback scales a batched prefill linearly down to b=1, which
+        (prefill scaling sublinearly in batch) is a LOWER bound — the check
+        may then pass a borderline-infeasible budget, but never rejects a
+        feasible one.
+        """
+        exact, approx = [], []
+        for k, v in self._times.items():
+            if k[0] == "generate":
+                (exact if k[1] == 1 else approx).append(v[0] / max(k[1], 1))
+            elif k[0] == "prefill1":
+                exact.append(v[0])
+        if exact:
+            return min(exact)
+        return min(approx) if approx else None
 
     def seed_from(self, other: "StepTimeCache") -> "StepTimeCache":
         """Copy measurements (first write still wins) — used to hand a

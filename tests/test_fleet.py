@@ -22,9 +22,9 @@ import numpy as np
 import pytest
 
 from repro.core.engines import GenerationResult
-from repro.energy.meter import EnergyMeter
+from repro.energy.meter import EnergyMeter, absorb_part
 from repro.models import init_params as init_params_cached
-from repro.serving.cloud import ModelRegistry, absorb_part
+from repro.serving.cloud import ModelRegistry
 from repro.serving.fleet import Autoscaler, EndpointSpec, ReplicaFleet
 from repro.serving.request import Request, ServingMetrics, synth_workload
 from repro.serving.scheduler import AdaptiveBatchScheduler, make_policy
