@@ -31,7 +31,7 @@ from repro.serving.api import (
     ServingSpec,
     sweep,
 )
-from repro.serving.request import synth_workload
+from repro.workload.generators import poisson
 
 ARCH = "minitron-4b-smoke"
 PROMPT_LEN = 16
@@ -68,11 +68,13 @@ GRID = {
 
 
 def _workloads(vocab):
+    # workload/ generators (bit-identical to the legacy synth_workload for
+    # the same seed — regression-tested — so the grid baseline is unchanged)
     return {
-        "chat": synth_workload(N_CHAT, PROMPT_LEN, MAX_NEW, vocab,
-                               rate_per_s=RATE_CHAT, seed=41),
-        "bulk": synth_workload(N_BULK, PROMPT_LEN, MAX_NEW, vocab,
-                               rate_per_s=RATE_BULK, seed=42, rid0=1_000_000),
+        "chat": poisson(N_CHAT, PROMPT_LEN, MAX_NEW, vocab,
+                        rate_per_s=RATE_CHAT, seed=41),
+        "bulk": poisson(N_BULK, PROMPT_LEN, MAX_NEW, vocab,
+                        rate_per_s=RATE_BULK, seed=42, rid0=1_000_000),
     }
 
 

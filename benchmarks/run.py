@@ -9,6 +9,7 @@ run (the CI bench job uploads it as an artifact).
   bench_batching       - Table 1, TD3 request-processing row (Yarally'23)
   bench_fleet          - fleet layer: policy x router grid, 2-endpoint 5k run
   bench_decisions      - ServingSpec sweep: format x router grid (pure data)
+  bench_carbon         - temporal grid: carbon signal x deferral x router
   bench_formats        - Table 1, TD2 model-format row
   bench_codecs         - Table 1, TD4 communication-protocol row
   bench_adds           - Table 1 executed as GreenReports (all qualities)
@@ -22,17 +23,30 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
 
 def write_serving_json(path: str, results: dict) -> None:
-    """BENCH_serving.json: fleet_grid + decision_grid + batching summaries."""
-    doc = {"generated_by": "benchmarks/run.py"}
+    """BENCH_serving.json: fleet/decision/carbon grids + batching summaries.
+
+    Merges into an existing file, so ``--only carbon`` refreshes only the
+    ``carbon_grid`` key instead of dropping every other grid."""
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except ValueError:
+            doc = {}
+    doc["generated_by"] = "benchmarks/run.py"
     if "bench_fleet" in results:
         doc["fleet_grid"] = results["bench_fleet"]
     if "bench_decisions" in results:
         doc["decision_grid"] = results["bench_decisions"]
+    if "bench_carbon" in results:
+        doc["carbon_grid"] = results["bench_carbon"]
     if "bench_batching" in results:
         doc["batching"] = {
             name: m.summary() for name, m in results["bench_batching"].items()
@@ -46,6 +60,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         bench_adds,
         bench_batching,
+        bench_carbon,
         bench_codecs,
         bench_decisions,
         bench_fleet,
@@ -57,7 +72,7 @@ def main(argv=None) -> None:
 
     modules = [bench_codecs, bench_formats, bench_kernels,
                bench_serving_infra, bench_batching, bench_fleet,
-               bench_decisions, bench_adds, bench_roofline]
+               bench_decisions, bench_carbon, bench_adds, bench_roofline]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated module names (e.g. bench_fleet)")
@@ -82,7 +97,8 @@ def main(argv=None) -> None:
         except Exception as e:  # noqa: BLE001
             failed.append((mod.__name__, e))
             traceback.print_exc()
-    if results.keys() & {"bench_fleet", "bench_batching", "bench_decisions"}:
+    if results.keys() & {"bench_fleet", "bench_batching", "bench_decisions",
+                         "bench_carbon"}:
         write_serving_json(ns.serving_json, results)
     if failed:
         print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)

@@ -1,0 +1,132 @@
+"""Temporal demand shifting in one page: move grams, keep the p95.
+
+Two endpoints on one shared timeline:
+
+  * ``chat`` — interactive Poisson traffic; its p95 is the contract that
+    must NOT move;
+  * ``batch`` — flash crowds that land exactly on the diurnal carbon
+    signal's dirty peaks, carrying a completion deadline instead of a TTFT
+    budget (the deferrable batch class).
+
+Four spec variants (all pure data: ``sweep`` over ``deferral.enabled x
+router``) are served from one memoized session, and the table prints the
+trade this PR is about: deferral + carbon-aware routing cuts total gCO2
+roughly in half at full deadline compliance, while the chat endpoint's p95
+stays where it was — the grams move, the latency doesn't.
+
+Run:  PYTHONPATH=src python examples/carbon_shift.py
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+
+from repro.carbon.shift import DeferralSpec  # noqa: E402
+from repro.carbon.signal import CarbonSpec  # noqa: E402
+from repro.configs import get_arch  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.serving.api import (  # noqa: E402
+    AutoscaleSpec,
+    EndpointSpec,
+    ServingSession,
+    ServingSpec,
+    sweep,
+)
+from repro.workload.generators import WorkloadSpec  # noqa: E402
+
+ARCH = "minitron-4b-smoke"
+PERIOD_S = 20.0          # one compressed grid "day"
+PROMPT_LEN, MAX_NEW = 16, 6
+
+SPEC = ServingSpec(
+    endpoints=(
+        EndpointSpec(
+            name="chat", arch=ARCH, model="m", max_seq=64,
+            policy="dynamic_batch", max_batch=8, batch_timeout_ms=10.0,
+            ttft_slo_ms=100.0,
+            autoscale=AutoscaleSpec(replicas_hint=2, window_s=0.25,
+                                    cold_start_s=0.05),
+            workload=WorkloadSpec(kind="poisson", n=2000,
+                                  prompt_len=PROMPT_LEN,
+                                  max_new_tokens=MAX_NEW,
+                                  rate_per_s=100.0, seed=61),
+        ),
+        EndpointSpec(
+            name="batch", arch=ARCH, model="m", max_seq=64,
+            policy="dynamic_batch", max_batch=8, batch_timeout_ms=10.0,
+            zones=("solar", "coal"),
+            autoscale=AutoscaleSpec(min_replicas=0, max_replicas=6,
+                                    replicas_hint=2, window_s=0.25,
+                                    cold_start_s=0.05),
+            # flash crowds on the dirty peak, 25 s completion deadline
+            workload=WorkloadSpec(kind="bursty", n=2000,
+                                  prompt_len=PROMPT_LEN,
+                                  max_new_tokens=MAX_NEW,
+                                  rate_per_s=20.0, burst_n=600,
+                                  burst_every_s=PERIOD_S,
+                                  burst_rate_per_s=600.0,
+                                  phase_s=PERIOD_S / 4,
+                                  deadline_s=25.0,
+                                  rid0=1_000_000, seed=62),
+        ),
+    ),
+    router="round_robin",
+    carbon=CarbonSpec(kind="diurnal", g_per_kwh=450.0,
+                      amplitude_g_per_kwh=400.0, period_s=PERIOD_S),
+    carbon_zones={
+        "solar": CarbonSpec(kind="diurnal", g_per_kwh=300.0,
+                            amplitude_g_per_kwh=280.0, period_s=PERIOD_S,
+                            phase_s=PERIOD_S / 2),
+        "coal": CarbonSpec(kind="constant", g_per_kwh=820.0),
+    },
+    deferral=DeferralSpec(enabled=False, margin_s=1.0),
+)
+
+GRID = {
+    "deferral.enabled": [False, True],
+    "router": ["round_robin", "carbon_aware"],
+}
+
+
+def main():
+    argparse.ArgumentParser(description=__doc__).parse_args()
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+
+    print(f"{'deferral':>8} {'router':>13} {'gCO2':>8} {'g/tok':>10} "
+          f"{'J/tok':>8} {'chat p95 ms':>12} {'ddl ok':>7}")
+    base_g = None
+    for assignment, spec in sweep(SPEC, GRID):
+        session.deploy(spec, params={"m": params})
+        for name in ("chat", "batch"):
+            session.calibrate(name, batch_sizes=range(1, 9),
+                              prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+        report = session.run_declared()
+        f = report.fleet
+        ddl = report.endpoints["batch"].deadline_compliance
+        if base_g is None:
+            base_g = f.gco2_total
+        print(f"{str(assignment['deferral.enabled']):>8} "
+              f"{assignment['router']:>13} "
+              f"{f.gco2_total:8.3f} {f.gco2_per_token:10.2e} "
+              f"{f.j_per_token:8.4f} "
+              f"{report.endpoints['chat'].latency_p95_s * 1e3:12.1f} "
+              f"{ddl:7.3f}")
+    print(f"# gCO2 vs serve-immediately round-robin: "
+          f"{f.gco2_total / base_g - 1:+.1%} "
+          f"(deferral + carbon-aware routing; deadlines all met)",
+          file=sys.stderr)
+    held = report.result.fleet.fleet.get("deferral", {})
+    print(f"# deferral: {held.get('released', 0)} requests held "
+          f"{held.get('mean_held_s', 0.0):.1f}s on average, moved "
+          f"{held.get('mean_intensity_drop_g_per_kwh', 0.0):.0f} g/kWh "
+          "down the carbon curve", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

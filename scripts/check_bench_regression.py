@@ -1,10 +1,16 @@
 """Non-blocking green-serving regression check for CI.
 
-Compares a freshly generated decision grid against the checked-in
-``BENCH_serving.json`` baseline: if the greenest-router J/token regressed by
-more than ``--threshold`` (relative), emit a GitHub Actions ``::warning::``
-annotation — loud on the PR, but never red (bench hosts are noisy; the
-blocking signal is the test suite, the trajectory signal is this file).
+Compares a freshly generated grid against the checked-in
+``BENCH_serving.json`` baseline on two trajectories:
+
+  * the **greenest-router J/token** (decision grid, falling back to the
+    fleet grid for old baselines);
+  * the **carbon-aware-router gCO2/token** (carbon grid).
+
+A relative regression beyond ``--threshold`` emits a GitHub Actions
+``::warning::`` annotation — loud on the PR, but never red (bench hosts are
+noisy; the blocking signal is the test suite, the trajectory signal is this
+file).
 
   python scripts/check_bench_regression.py \\
       --baseline BENCH_serving.json --fresh BENCH_decisions_fresh.json
@@ -17,16 +23,48 @@ import json
 import sys
 
 
+def _min_cell(doc: dict, grid: str, router: str, metric: str) -> float | None:
+    """Minimum ``metric`` among a grid's rows for ``router``; None (never a
+    crash) when the grid is absent or its rows predate the metric — this
+    script must stay green on schema drift, only ever warn."""
+    rows = doc.get(grid) or []
+    try:
+        cells = [r.get(metric) for r in rows if r.get("router") == router]
+    except (AttributeError, TypeError):
+        return None
+    cells = [c for c in cells if isinstance(c, (int, float))]
+    return min(cells) if cells else None
+
+
 def greenest_j_per_token(doc: dict) -> float | None:
     """Best (minimum) J/token among the decision grid's greenest-router
     cells; falls back to the fleet grid for pre-decision-grid baselines."""
-    rows = doc.get("decision_grid") or []
-    cells = [r["j_per_token"] for r in rows if r.get("router") == "greenest"]
-    if not cells:
-        rows = doc.get("fleet_grid") or []
-        cells = [r["j_per_token"] for r in rows
-                 if r.get("router") == "greenest"]
-    return min(cells) if cells else None
+    best = _min_cell(doc, "decision_grid", "greenest", "j_per_token")
+    if best is None:
+        best = _min_cell(doc, "fleet_grid", "greenest", "j_per_token")
+    return best
+
+
+def carbon_aware_g_per_token(doc: dict) -> float | None:
+    """Best (minimum) gCO2/token among the carbon grid's carbon-aware-router
+    cells (None for pre-carbon-grid baselines)."""
+    return _min_cell(doc, "carbon_grid", "carbon_aware", "gco2_per_token")
+
+
+def check_metric(label: str, base: float | None, fresh: float | None,
+                 threshold: float, baseline_path: str) -> None:
+    if base is None or fresh is None or base <= 0:
+        if base is not None or fresh is not None:
+            print(f"::warning file={baseline_path}::no comparable "
+                  f"{label} rows (baseline={base}, fresh={fresh})")
+        return
+    rel = (fresh - base) / base
+    msg = (f"{label}: baseline={base:.8f} fresh={fresh:.8f} ({rel:+.1%})")
+    if rel > threshold:
+        print(f"::warning file={baseline_path},title=green-serving "
+              f"regression::{msg} exceeds the {threshold:.0%} budget")
+    else:
+        print(f"# ok: {msg}")
 
 
 def main(argv=None) -> int:
@@ -34,35 +72,32 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="BENCH_serving.json")
     ap.add_argument("--fresh", required=True)
     ap.add_argument("--threshold", type=float, default=0.10,
-                    help="relative J/token regression that triggers the "
+                    help="relative regression that triggers the "
                          "annotation (default 10%%)")
     ns = ap.parse_args(argv)
 
-    def read(path: str):
+    def read(path: str) -> dict | None:
         try:
             with open(path) as f:
-                return greenest_j_per_token(json.load(f))
-        except (OSError, ValueError, KeyError, TypeError) as e:
+                return json.load(f)
+        except (OSError, ValueError) as e:
             print(f"::warning file={path}::bench file unreadable ({e}); "
                   "skipping regression check")
             return None
 
-    base = read(ns.baseline)
-    fresh = read(ns.fresh)
-    if base is None or fresh is None or base <= 0:
-        if base is not None or fresh is not None:
-            print(f"::warning file={ns.baseline}::no comparable "
-                  f"greenest-router rows (baseline={base}, fresh={fresh})")
+    base_doc = read(ns.baseline)
+    fresh_doc = read(ns.fresh)
+    if base_doc is None or fresh_doc is None:
         return 0
 
-    rel = (fresh - base) / base
-    msg = (f"greenest-router J/token: baseline={base:.6f} fresh={fresh:.6f} "
-           f"({rel:+.1%})")
-    if rel > ns.threshold:
-        print(f"::warning file={ns.baseline},title=green-serving "
-              f"regression::{msg} exceeds the {ns.threshold:.0%} budget")
-    else:
-        print(f"# ok: {msg}")
+    check_metric("greenest-router J/token",
+                 greenest_j_per_token(base_doc),
+                 greenest_j_per_token(fresh_doc),
+                 ns.threshold, ns.baseline)
+    check_metric("carbon-aware-router gCO2/token",
+                 carbon_aware_g_per_token(base_doc),
+                 carbon_aware_g_per_token(fresh_doc),
+                 ns.threshold, ns.baseline)
     return 0
 
 

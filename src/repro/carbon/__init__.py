@@ -1,0 +1,27 @@
+"""Carbon-aware serving: intensity signals + temporal demand shifting.
+
+``repro.carbon.signal`` maps virtual time to grid gCO2e/kWh (constant /
+diurnal / recorded trace); ``repro.carbon.shift`` holds deadline-carrying
+batch requests for low-carbon windows.  ``repro.energy.meter.EnergyMeter``
+bills every metered joule in grams through these signals, and
+``repro.serving.fleet`` consumes them for carbon-aware routing, deferral
+and zone attribution.
+
+Import note: :mod:`repro.energy` modules import ``repro.carbon.signal``
+directly (the submodule), never this package root, so the root is free to
+re-export ``shift`` (which itself depends on the serving layer).
+"""
+
+from repro.carbon.signal import (  # noqa: F401
+    CARBON_G_PER_KWH,
+    J_PER_KWH,
+    CarbonSignal,
+    CarbonSpec,
+    ConstantSignal,
+    DiurnalSignal,
+    TraceSignal,
+)
+from repro.carbon.shift import (  # noqa: F401
+    DeferralSpec,
+    TemporalShifter,
+)

@@ -15,8 +15,10 @@ GreenReport's energy-efficiency entry.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
-from repro.energy.hw import CARBON_G_PER_KWH, TPU_V5E, ChipSpec
+from repro.carbon.signal import CarbonSignal, ConstantSignal
+from repro.energy.hw import TPU_V5E, ChipSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,8 +85,20 @@ def energy_per_token_j(terms: RooflineTerms, tokens_per_step: int) -> float:
     return step_energy_j(terms) / max(tokens_per_step, 1)
 
 
-def carbon_g(energy_j: float) -> float:
-    return energy_j / 3.6e6 * CARBON_G_PER_KWH
+_CONSTANT_SIGNAL = ConstantSignal()
+
+
+def carbon_g(energy_j: float, signal: Optional[CarbonSignal] = None,
+             t_s: float = 0.0) -> float:
+    """Joules -> grams CO2e through a carbon-intensity signal.
+
+    The default signal is the constant IEA grid average — the single source
+    of truth that used to be an inline ``/ 3.6e6 * CARBON_G_PER_KWH`` here;
+    pass a :class:`~repro.carbon.signal.CarbonSignal` and a virtual time to
+    price the same joules on a time-varying grid.
+    """
+    return (signal if signal is not None else _CONSTANT_SIGNAL).grams(
+        energy_j, t_s)
 
 
 def measured_energy_j(wall_s: float, power_w: float) -> float:

@@ -51,5 +51,7 @@ HOST_CPU_POWER_W = 65.0
 HOST_CPU_IDLE_FRACTION = 0.3
 HOST_CPU_IDLE_POWER_W = HOST_CPU_POWER_W * HOST_CPU_IDLE_FRACTION
 
-# Global-average grid carbon intensity (IEA 2023), g CO2e per kWh.
-CARBON_G_PER_KWH = 475.0
+# Global-average grid carbon intensity (IEA 2023), g CO2e per kWh.  The
+# constant now lives with the carbon-intensity signals (it is the
+# ConstantSignal default); re-exported here for legacy importers.
+from repro.carbon.signal import CARBON_G_PER_KWH  # noqa: E402,F401

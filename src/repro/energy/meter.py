@@ -13,8 +13,17 @@ distinguishes the two power bins that matter for green serving decisions:
     arrivals, autoscaled replicas sitting warm); billed at the idle power and
     charged to the endpoint, not to any request.
 
-Conservation invariant (tested): the per-request attribution always sums to
-the active energy, and ``total_j == active_j + idle_j``.
+Every joule is also billed in **grams of CO2e** through a
+:class:`repro.carbon.signal.CarbonSignal` — billed at the virtual time the
+energy was drawn (``t_s`` on every recording call), so the same joules cost
+different grams on a dirty evening peak than in a solar valley.  A meter
+without an explicit signal uses the constant IEA-average signal, which
+reproduces the old static ``J -> g`` conversion exactly.
+
+Conservation invariants (tested): the per-request attribution always sums to
+the active energy, ``total_j == active_j + idle_j`` — and identically in
+grams: ``sum(per_request_g) == active_g`` and ``total_g ==
+active_g + idle_g``, preserved across :meth:`merge` / :func:`absorb_part`.
 """
 
 from __future__ import annotations
@@ -22,7 +31,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, Optional
 
+from repro.carbon.signal import CarbonSignal, ConstantSignal
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
+
+# the static-world fallback: one flat IEA-average grid
+_CONSTANT_SIGNAL = ConstantSignal()
 
 
 def estimate_j_per_token(active_power_w: float, prefill_s: float,
@@ -32,7 +45,9 @@ def estimate_j_per_token(active_power_w: float, prefill_s: float,
 
     The ONE pricing formula shared by the adaptive policy's batch sizing and
     the fleet's route-to-greenest marginal-cost ranking, so refining the
-    energy model keeps admission and routing consistent.
+    energy model keeps admission and routing consistent.  (The carbon-aware
+    router multiplies this by the replica zone's intensity to get marginal
+    gCO2/token — same formula, different unit.)
     """
     return (active_power_w * (prefill_s + decode_s)
             / (max(batch, 1) * max(max_new_tokens, 1)))
@@ -63,28 +78,50 @@ def absorb_part(meter: "EnergyMeter", m,
 class EnergyMeter:
     active_power_w: float = HOST_CPU_POWER_W
     idle_power_w: float = HOST_CPU_IDLE_POWER_W
+    # grid carbon-intensity signal for gram billing; None = constant IEA
+    carbon: Optional[CarbonSignal] = None
     active_s: float = 0.0
     idle_s: float = 0.0
+    # grams are accumulated (not derived like joules): with a time-varying
+    # signal they depend on WHEN each second was billed, and a merge must
+    # preserve them absolutely across meters with different signals/zones
+    active_g: float = 0.0
+    idle_g: float = 0.0
     total_tokens: int = 0
     per_request_j: Dict[int, float] = dataclasses.field(default_factory=dict)
+    per_request_g: Dict[int, float] = dataclasses.field(default_factory=dict)
     # provenance of merged meters (fleet use): source -> active/idle split
     by_source: Dict[str, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
 
+    @property
+    def signal(self) -> CarbonSignal:
+        return self.carbon if self.carbon is not None else _CONSTANT_SIGNAL
+
+    def _grams(self, j: float, t_s: Optional[float], dur_s: float) -> float:
+        t0 = 0.0 if t_s is None else t_s
+        return self.signal.grams(j, t0, t0 + dur_s)
+
     # -- recording ------------------------------------------------------------
     def record_active(self, dur_s: float, rids: Iterable[int] = (),
-                      tokens: int = 0) -> float:
-        """Bill ``dur_s`` of compute, split equally across resident ``rids``."""
+                      tokens: int = 0, t_s: Optional[float] = None) -> float:
+        """Bill ``dur_s`` of compute starting at virtual time ``t_s``, split
+        equally across resident ``rids`` (joules and grams alike)."""
         if dur_s <= 0:
             return 0.0
         j = dur_s * self.active_power_w
+        g = self._grams(j, t_s, dur_s)
         self.active_s += dur_s
+        self.active_g += g
         self.total_tokens += tokens
         rids = list(rids)
         if rids:
-            share = j / len(rids)
+            share, share_g = j / len(rids), g / len(rids)
             for rid in rids:
-                self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + share
+                self.per_request_j[rid] = \
+                    self.per_request_j.get(rid, 0.0) + share
+                self.per_request_g[rid] = \
+                    self.per_request_g.get(rid, 0.0) + share_g
         return j
 
     def record_active_shared(self, start_s: float,
@@ -96,29 +133,48 @@ class EnergyMeter:
         each retirement instant; each segment's energy is split across the
         requests still resident, so a short request in a batch is *not*
         charged for the tail where only long requests occupy the engine.
+        Grams are billed per segment at the segment's own instant on the
+        carbon signal, so the per-request gram attribution sums exactly to
+        the active grams this window added.
         """
         if not done_by_rid:
             return 0.0
         end = max(done_by_rid.values())
-        total = self.record_active(end - start_s, rids=(), tokens=tokens)
+        dur = end - start_s
+        if dur <= 0:
+            for rid in done_by_rid:        # zero-duration requests: J = g = 0
+                self.per_request_j.setdefault(rid, 0.0)
+                self.per_request_g.setdefault(rid, 0.0)
+            return 0.0
+        self.active_s += dur
+        self.total_tokens += tokens
         t = start_s
         for e in sorted(set(done_by_rid.values())):
             seg = e - t
             if seg <= 0:
                 continue
             resident = [rid for rid, d in done_by_rid.items() if d > t]
-            share = seg * self.active_power_w / max(len(resident), 1)
+            seg_j = seg * self.active_power_w
+            seg_g = self.signal.grams(seg_j, t, e)
+            self.active_g += seg_g
+            share = seg_j / max(len(resident), 1)
+            share_g = seg_g / max(len(resident), 1)
             for rid in resident:
-                self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + share
+                self.per_request_j[rid] = \
+                    self.per_request_j.get(rid, 0.0) + share
+                self.per_request_g[rid] = \
+                    self.per_request_g.get(rid, 0.0) + share_g
             t = e
         for rid in done_by_rid:              # zero-duration requests: J = 0
             self.per_request_j.setdefault(rid, 0.0)
-        return total
+            self.per_request_g.setdefault(rid, 0.0)
+        return dur * self.active_power_w
 
-    def record_idle(self, dur_s: float) -> float:
+    def record_idle(self, dur_s: float, t_s: Optional[float] = None) -> float:
         if dur_s <= 0:
             return 0.0
         self.idle_s += dur_s
+        self.idle_g += self._grams(dur_s * self.idle_power_w, t_s, dur_s)
         return dur_s * self.idle_power_w
 
     def merge(self, other: "EnergyMeter",
@@ -126,13 +182,16 @@ class EnergyMeter:
         """Fold ``other`` into this meter.
 
         With ``source`` set (fleet use: ``"endpoint/r3"``) the merged meter
-        keeps per-source provenance — the active/idle second and joule split
-        of every contributor — so a fleet total can always be decomposed back
-        into its replicas (and that decomposition is what the conservation
-        tests check).  The merge is *joule-preserving*: a contributor's
-        energy is folded in as equivalent seconds at THIS meter's power
-        rates, so ``total_j`` equals the sum of its contributors even when
-        replicas run at heterogeneous power envelopes.
+        keeps per-source provenance — the active/idle second, joule and gram
+        split of every contributor — so a fleet total can always be
+        decomposed back into its replicas (and that decomposition is what
+        the conservation tests check).  The merge is *joule-preserving*: a
+        contributor's energy is folded in as equivalent seconds at THIS
+        meter's power rates, so ``total_j`` equals the sum of its
+        contributors even when replicas run at heterogeneous power
+        envelopes.  Grams are carried over verbatim — they were already
+        priced at the contributor's own zone signal and drawing time, which
+        the aggregate could not reconstruct.
         """
         if self.active_power_w > 0:
             self.active_s += other.active_j / self.active_power_w
@@ -142,27 +201,37 @@ class EnergyMeter:
             self.idle_s += other.idle_j / self.idle_power_w
         else:
             self.idle_s += other.idle_s
+        self.active_g += other.active_g
+        self.idle_g += other.idle_g
         self.total_tokens += other.total_tokens
         for rid, j in other.per_request_j.items():
             self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + j
+        for rid, g in other.per_request_g.items():
+            self.per_request_g[rid] = self.per_request_g.get(rid, 0.0) + g
         if other.by_source:            # nested merge: carry provenance through
             for src, d in other.by_source.items():
                 self._add_source(src, d["active_s"], d["idle_s"],
-                                 d["active_j"], d["idle_j"])
+                                 d["active_j"], d["idle_j"],
+                                 d.get("active_g", 0.0), d.get("idle_g", 0.0))
         elif source is not None:
             self._add_source(source, other.active_s, other.idle_s,
-                             other.active_j, other.idle_j)
+                             other.active_j, other.idle_j,
+                             other.active_g, other.idle_g)
         return self
 
     def _add_source(self, source: str, active_s: float, idle_s: float,
-                    active_j: float, idle_j: float) -> None:
+                    active_j: float, idle_j: float,
+                    active_g: float = 0.0, idle_g: float = 0.0) -> None:
         d = self.by_source.setdefault(
             source, {"active_s": 0.0, "idle_s": 0.0,
-                     "active_j": 0.0, "idle_j": 0.0})
+                     "active_j": 0.0, "idle_j": 0.0,
+                     "active_g": 0.0, "idle_g": 0.0})
         d["active_s"] += active_s
         d["idle_s"] += idle_s
         d["active_j"] += active_j
         d["idle_j"] += idle_j
+        d["active_g"] += active_g
+        d["idle_g"] += idle_g
 
     # -- accounting -----------------------------------------------------------
     @property
@@ -178,11 +247,22 @@ class EnergyMeter:
         return self.active_j + self.idle_j
 
     @property
+    def total_g(self) -> float:
+        return self.active_g + self.idle_g
+
+    @property
     def energy_per_token_j(self) -> float:
         return self.total_j / max(self.total_tokens, 1)
 
+    @property
+    def g_per_token(self) -> float:
+        return self.total_g / max(self.total_tokens, 1)
+
     def energy_per_request_j(self, rid: int) -> float:
         return self.per_request_j.get(rid, 0.0)
+
+    def g_per_request(self, rid: int) -> float:
+        return self.per_request_g.get(rid, 0.0)
 
     def summary(self) -> dict:
         d = {
@@ -192,6 +272,11 @@ class EnergyMeter:
             "idle_j": round(self.idle_j, 6),
             "total_j": round(self.total_j, 6),
             "j_per_token": round(self.energy_per_token_j, 6),
+            "active_g": round(self.active_g, 6),
+            "idle_g": round(self.idle_g, 6),
+            "total_g": round(self.total_g, 6),
+            # grams/token sits at 1e-6..1e-5: 9 decimals keeps ~4 sig figs
+            "g_per_token": round(self.g_per_token, 9),
         }
         if self.by_source:
             d["by_source"] = {

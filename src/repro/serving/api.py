@@ -26,6 +26,17 @@ single public entry point to the serving stack:
     cartesian grid of validated spec variants (``benchmarks/bench_decisions``
     charts format x router from exactly this).
 
+As of PR 4 the *temporal* green decisions are spec data too: a
+:class:`~repro.carbon.signal.CarbonSpec` (plus named ``carbon_zones``) prices
+every metered joule in gCO2e at its drawing instant, a
+:class:`~repro.carbon.shift.DeferralSpec` holds deadline-carrying batch-class
+work (``SLOClass.deadline_s``) for low-carbon windows, each endpoint can
+declare its arrival stream as a
+:class:`~repro.workload.generators.WorkloadSpec` (``run_declared()`` serves
+exactly what the spec describes), and ``AutoscaleSpec.calendar`` pre-warms
+replicas ahead of forecast ramps.  ``benchmarks/bench_carbon`` sweeps
+signal x deferral x router from exactly these fields.
+
 Validation is eager and names the offending field: every constraint violation
 raises :class:`SpecError` with a ``endpoints[name].field`` style path.
 
@@ -44,6 +55,8 @@ import os
 import tempfile
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.carbon.shift import DeferralSpec
+from repro.carbon.signal import CarbonSpec
 from repro.configs import get_arch
 from repro.core.add import (
     Containerization,
@@ -60,6 +73,8 @@ from repro.serving.fleet import EndpointSpec as FleetEndpoint
 from repro.serving.request import Request, ServingMetrics
 from repro.serving.scheduler import POLICIES, make_policy
 from repro.serving.stepcache import StepTimeCache, calibrate, shape_bucket
+from repro.workload.calendar import TrafficCalendar
+from repro.workload.generators import WorkloadSpec
 
 
 class SpecError(ValueError):
@@ -73,6 +88,13 @@ class SpecError(ValueError):
 def _check(ok: bool, field: str, message: str) -> None:
     if not ok:
         raise SpecError(field, message)
+
+
+def _check_sub(spec, path: str) -> None:
+    """Surface a sub-spec's ``problems()`` (carbon/workload/deferral specs,
+    which live outside the serving layer) as SpecErrors with full paths."""
+    for field, message in spec.problems():
+        raise SpecError(f"{path}.{field}", message)
 
 
 def _construct(cls, kwargs: Mapping, path: str):
@@ -103,15 +125,23 @@ class SLOClass:
 
     ``slo_ms`` is a per-request TTFT budget — it steers both the fleet router
     (SLO-feasibility pre-filter) and adaptive batch sizing
-    (tightest-in-queue).  ``None`` means best-effort.
+    (tightest-in-queue).  ``deadline_s`` mints the *batch class* instead: a
+    relative completion deadline stamped on every request (absolute =
+    arrival + deadline_s), which makes the request deferrable — the carbon
+    shifter may hold it for a low-carbon window (``ServingSpec.deferral``).
+    ``None`` for both means best-effort, serve-on-arrival.
     """
 
     slo_ms: Optional[float] = None
+    deadline_s: Optional[float] = None
 
     def validate(self, path: str) -> None:
         if self.slo_ms is not None:
             _check(self.slo_ms > 0, f"{path}.slo_ms",
                    f"budget must be > 0 ms, got {self.slo_ms}")
+        if self.deadline_s is not None:
+            _check(self.deadline_s > 0, f"{path}.deadline_s",
+                   f"deadline must be > 0 s, got {self.deadline_s}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +163,16 @@ class AutoscaleSpec:
     window_s: float = 1.0
     cold_start_s: float = 0.25
     down_windows: int = 2
+    # traffic calendar: (t_s, expected requests/s) breakpoints.  The fleet
+    # autoscaler provisions for the calendar's peak across its cold-start
+    # horizon, pre-warming replicas ahead of predicted ramps; () = purely
+    # reactive (the PR-2 behavior)
+    calendar: Tuple[Tuple[float, float], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "calendar",
+            tuple((float(t), float(r)) for t, r in self.calendar))
 
     def validate(self, path: str) -> None:
         _check(self.min_replicas >= 0, f"{path}.min_replicas",
@@ -154,6 +194,11 @@ class AutoscaleSpec:
                f"must be >= 0, got {self.cold_start_s}")
         _check(self.down_windows >= 1, f"{path}.down_windows",
                f"must be >= 1, got {self.down_windows}")
+        ts = [t for t, _ in self.calendar]
+        _check(all(b > a for a, b in zip(ts, ts[1:])), f"{path}.calendar",
+               f"calendar times must be strictly increasing, got {ts}")
+        _check(all(r >= 0 for _, r in self.calendar), f"{path}.calendar",
+               "calendar rates must be >= 0")
 
     def initial_pool(self, rate_per_s: float, service_time_s: float) -> int:
         """Initial replica count: the pinned hint, else M/M/c sizing (the
@@ -197,6 +242,17 @@ class EndpointSpec:
     # server adapter turns this off when registered without a cache, so an
     # uncached endpoint really executes the model every dispatch)
     step_cache: bool = True
+    # carbon zones the endpoint's replicas cycle through (replica i sits in
+    # zones[i % len]; names must exist in ServingSpec.carbon_zones); () =
+    # every replica on the spec's default carbon signal
+    zones: Tuple[str, ...] = ()
+    # the endpoint's declared arrival stream: ``ServingSession.run_declared``
+    # generates and serves exactly this workload, so a benchmark grid can
+    # sweep traffic shape like any other decision field
+    workload: Optional[WorkloadSpec] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "zones", tuple(self.zones))
 
     @property
     def model_name(self) -> str:
@@ -247,6 +303,8 @@ class EndpointSpec:
         self.autoscale.validate(f"{path}.autoscale")
         for cls_name, cls in self.slo_classes.items():
             cls.validate(f"{path}.slo_classes[{cls_name}]")
+        if self.workload is not None:
+            _check_sub(self.workload, f"{path}.workload")
         if self.active_power_w is not None:
             _check(self.active_power_w > 0, f"{path}.active_power_w",
                    f"must be > 0, got {self.active_power_w}")
@@ -277,6 +335,14 @@ class ServingSpec:
     # hardware/power envelope (endpoint fields override)
     active_power_w: float = HOST_CPU_POWER_W
     idle_power_w: float = HOST_CPU_IDLE_POWER_W
+    # the default-zone grid carbon signal (every joule is billed in gCO2e
+    # through it) and any extra named zones endpoints may place replicas in
+    carbon: CarbonSpec = CarbonSpec()
+    carbon_zones: Mapping[str, CarbonSpec] = dataclasses.field(
+        default_factory=dict)
+    # temporal shifting of deadline-carrying (batch-class) requests; the
+    # default is disabled == serve-on-arrival (the pre-carbon behavior)
+    deferral: DeferralSpec = DeferralSpec()
 
     def __post_init__(self):
         if not isinstance(self.endpoints, tuple):
@@ -311,6 +377,18 @@ class ServingSpec:
                f"must be > 0, got {self.active_power_w}")
         _check(self.idle_power_w >= 0, "idle_power_w",
                f"must be >= 0, got {self.idle_power_w}")
+        _check_sub(self.carbon, "carbon")
+        for zone, cs in self.carbon_zones.items():
+            _check(bool(zone), "carbon_zones",
+                   "zone names must be non-empty ('' is the default zone)")
+            _check_sub(cs, f"carbon_zones[{zone}]")
+        _check_sub(self.deferral, "deferral")
+        for ep in self.endpoints:
+            for z in ep.zones:
+                _check(z == "" or z in self.carbon_zones,
+                       f"endpoints[{ep.name}].zones",
+                       f"unknown carbon zone {z!r}; "
+                       f"known: {sorted(self.carbon_zones)} (plus '')")
         # the shared-timeline knobs must agree (one fleet autoscaler)
         scaled = [ep for ep in self.endpoints if ep.autoscale.enabled]
         for field in ("window_s", "target_utilization", "down_windows"):
@@ -340,9 +418,20 @@ class ServingSpec:
             e["slo_classes"] = {
                 k: _construct(SLOClass, v, f"{path}.slo_classes[{k}]")
                 for k, v in e.get("slo_classes", {}).items()}
+            if e.get("workload") is not None:
+                e["workload"] = _construct(WorkloadSpec, e["workload"],
+                                           f"{path}.workload")
             eps.append(_construct(EndpointSpec, e, path))
         top = {k: v for k, v in d.items() if k != "endpoints"}
         top["endpoints"] = tuple(eps)
+        if top.get("carbon") is not None:
+            top["carbon"] = _construct(CarbonSpec, top["carbon"], "carbon")
+        top["carbon_zones"] = {
+            z: _construct(CarbonSpec, cs, f"carbon_zones[{z}]")
+            for z, cs in (top.get("carbon_zones") or {}).items()}
+        if top.get("deferral") is not None:
+            top["deferral"] = _construct(DeferralSpec, top["deferral"],
+                                         "deferral")
         return _construct(cls, top, "spec")
 
     @classmethod
@@ -464,6 +553,21 @@ class EndpointReport:
     cold_starts: int
     replica_timeline: List[Tuple[float, int]]
     j_by_replica: Dict[str, float]     # per-replica meter provenance
+    # carbon attribution: every metered joule priced at its drawing
+    # instant on the zone's intensity signal (conserved like joules);
+    # billed = measured + the TD1 container overhead at the endpoint's
+    # realized g/J ratio, mirroring j_measured vs j_billed
+    gco2_total: float                  # measured (meter grams)
+    gco2_active: float
+    gco2_idle: float
+    gco2_container_overhead: float
+    gco2_billed: float
+    gco2_per_request: float            # billed
+    gco2_per_token: float              # billed
+    gco2_by_replica: Dict[str, float]
+    # fraction of deadline-carrying responses that finished in time
+    # (None when the workload had no batch-class requests)
+    deadline_compliance: Optional[float]
     metrics: ServingMetrics            # full object, not serialized
 
     def to_dict(self) -> dict:
@@ -507,9 +611,14 @@ def _endpoint_report(name: str, decisions: Dict[str, object],
     overhead_j = measured * (energy_mult - 1.0)
     billed = measured + overhead_j
     by_replica = {}
+    g_by_replica = {}
     if m.meter is not None:
         by_replica = {src: round(d["active_j"] + d["idle_j"], 6)
                       for src, d in sorted(m.meter.by_source.items())}
+        g_by_replica = {
+            src: round(d.get("active_g", 0.0) + d.get("idle_g", 0.0), 9)
+            for src, d in sorted(m.meter.by_source.items())}
+    g_total = m.meter.total_g if m.meter is not None else 0.0
     return EndpointReport(
         name=name,
         decisions=decisions,
@@ -529,6 +638,15 @@ def _endpoint_report(name: str, decisions: Dict[str, object],
         cold_starts=stats.get("cold_starts", 0),
         replica_timeline=stats.get("replica_timeline", []),
         j_by_replica=by_replica,
+        gco2_total=g_total,
+        gco2_active=m.meter.active_g if m.meter else 0.0,
+        gco2_idle=m.meter.idle_g if m.meter else 0.0,
+        gco2_container_overhead=g_total * (energy_mult - 1.0),
+        gco2_billed=g_total * energy_mult,
+        gco2_per_request=g_total * energy_mult / max(len(m.responses), 1),
+        gco2_per_token=g_total * energy_mult / max(m.total_tokens, 1),
+        gco2_by_replica=g_by_replica,
+        deadline_compliance=m.deadline_compliance,
         metrics=m,
     )
 
@@ -681,7 +799,9 @@ class ServingSession:
                slo_class: Optional[str] = None,
                service_time_hint_s: Optional[float] = None) -> None:
         """Queue a workload on an endpoint.  ``slo_class`` stamps every
-        request that has no explicit budget with the class's ``slo_ms``."""
+        request that has no explicit budget with the class's ``slo_ms``
+        (TTFT) and/or relative ``deadline_s`` (batch-class completion
+        deadline — what makes a request deferrable)."""
         if name not in self._endpoints:
             raise SpecError("endpoints",
                             f"no endpoint named {name!r}; "
@@ -693,11 +813,20 @@ class ServingSession:
                     f"endpoints[{name}].slo_classes",
                     f"unknown SLO class {slo_class!r}; "
                     f"known: {sorted(ep.slo_classes)}")
-            budget = ep.slo_classes[slo_class].slo_ms
+            cls = ep.slo_classes[slo_class]
+
             # stamp COPIES: the caller's requests stay unowned, so the same
             # workload can be resubmitted under a different class
-            workload = [dataclasses.replace(r, slo_ms=budget)
-                        if r.slo_ms is None else r for r in workload]
+            def stamp(r: Request) -> Request:
+                slo = cls.slo_ms if r.slo_ms is None else r.slo_ms
+                ddl = r.deadline_s
+                if ddl is None and cls.deadline_s is not None:
+                    ddl = r.arrival_s + cls.deadline_s
+                if slo is r.slo_ms and ddl is r.deadline_s:
+                    return r
+                return dataclasses.replace(r, slo_ms=slo, deadline_s=ddl)
+
+            workload = [stamp(r) for r in workload]
         if service_time_hint_s is not None:
             self._hints[name] = service_time_hint_s
         self._workloads.setdefault(name, []).extend(workload)
@@ -760,6 +889,9 @@ class ServingSession:
             lo = hi = initial
         return FleetEndpoint(
             name=ep.name,
+            zones=ep.zones,
+            calendar=(TrafficCalendar(ep.autoscale.calendar)
+                      if ep.autoscale.calendar else None),
             engine=self.engine(ep.name),
             policy_factory=lambda ep=ep: make_policy(
                 ep.policy, max_batch=ep.max_batch,
@@ -801,8 +933,14 @@ class ServingSession:
             raise SpecError("workloads", "nothing submitted; submit() first")
         for name in self._workloads:
             self._slo_floor_check(name)
-        fleet = ReplicaFleet(router=self.spec.router,
-                             autoscaler=self._autoscaler())
+        fleet = ReplicaFleet(
+            router=self.spec.router,
+            autoscaler=self._autoscaler(),
+            carbon=self.spec.carbon.build(),
+            carbon_zones={z: cs.build()
+                          for z, cs in self.spec.carbon_zones.items()},
+            deferral=self.spec.deferral,
+        )
         for name, wl in self._workloads.items():
             fleet.add_endpoint(
                 self._fleet_endpoint(self._endpoints[name]["spec"], wl))
@@ -811,12 +949,14 @@ class ServingSession:
 
         reports: Dict[str, EndpointReport] = {}
         fleet_overhead_j = 0.0
+        fleet_overhead_g = 0.0
         for name, m in result.endpoints.items():
             ep: EndpointSpec = self._endpoints[name]["spec"]
             mult = td1.overhead(Containerization(ep.container)).energy_overhead
             rep = _endpoint_report(name, ep.decisions(), m, mult)
             reports[name] = rep
             fleet_overhead_j += rep.j_container_overhead
+            fleet_overhead_g += rep.gco2_container_overhead
         fm = result.fleet
         fleet_measured = fm.meter.total_j if fm.meter else fm.energy_j
         fleet_rep = _endpoint_report(
@@ -824,11 +964,18 @@ class ServingSession:
                       "endpoints": [e.name for e in self.spec.endpoints]},
             fm, 1.0)
         # the fleet bills the sum of its endpoints' container overheads
+        # (joules and grams alike; gco2_total stays the measured meter sum)
         fleet_rep.j_container_overhead = fleet_overhead_j
         fleet_rep.j_billed = fleet_measured + fleet_overhead_j
         fleet_rep.j_per_request = fleet_rep.j_billed / max(
             fleet_rep.n_requests, 1)
         fleet_rep.j_per_token = fleet_rep.j_billed / max(
+            fleet_rep.total_tokens, 1)
+        fleet_rep.gco2_container_overhead = fleet_overhead_g
+        fleet_rep.gco2_billed = fleet_rep.gco2_total + fleet_overhead_g
+        fleet_rep.gco2_per_request = fleet_rep.gco2_billed / max(
+            fleet_rep.n_requests, 1)
+        fleet_rep.gco2_per_token = fleet_rep.gco2_billed / max(
             fleet_rep.total_tokens, 1)
         return ServingReport(spec=self.spec, endpoints=reports,
                              fleet=fleet_rep, result=result)
@@ -839,3 +986,22 @@ class ServingSession:
         for name, wl in workloads.items():
             self.submit(name, wl)
         return self.run()
+
+    def declared_workloads(self) -> Dict[str, List[Request]]:
+        """Generate every endpoint's declared :class:`WorkloadSpec` stream
+        (vocab taken from the endpoint's arch) — the spec IS the workload."""
+        if self.spec is None:
+            raise SpecError("spec", "deploy(spec) before declared_workloads()")
+        out: Dict[str, List[Request]] = {}
+        for ep in self.spec.endpoints:
+            if ep.workload is not None:
+                out[ep.name] = ep.workload.build(
+                    get_arch(ep.arch).vocab_size)
+        if not out:
+            raise SpecError("endpoints[*].workload",
+                            "no endpoint declares a workload spec")
+        return out
+
+    def run_declared(self) -> ServingReport:
+        """serve() exactly the workloads the spec declares."""
+        return self.serve(self.declared_workloads())

@@ -42,6 +42,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.carbon.signal import CarbonSignal
 from repro.core.engines import Engine, token_landing_s
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
 from repro.energy.meter import EnergyMeter
@@ -92,12 +93,14 @@ class SchedulerCore:
     def __init__(self, engine: Engine, policy: SchedulingPolicy, *,
                  step_cache: Optional[StepTimeCache] = None,
                  active_power_w: float = HOST_CPU_POWER_W,
-                 idle_power_w: float = HOST_CPU_IDLE_POWER_W):
+                 idle_power_w: float = HOST_CPU_IDLE_POWER_W,
+                 carbon: Optional[CarbonSignal] = None):
         self.engine = engine
         self.policy = policy
         self.step_cache = step_cache
         self.active_power_w = active_power_w
         self.idle_power_w = idle_power_w
+        self.carbon = carbon
         self._reset([])
 
     def _reset(self, workload: List[Request]) -> None:
@@ -109,7 +112,8 @@ class SchedulerCore:
         self.responses: List[Response] = []
         self.total_tokens = 0
         self.meter = EnergyMeter(active_power_w=self.active_power_w,
-                                 idle_power_w=self.idle_power_w)
+                                 idle_power_w=self.idle_power_w,
+                                 carbon=self.carbon)
 
     # -- arrival queue --------------------------------------------------------
     @property
@@ -148,12 +152,12 @@ class SchedulerCore:
     def advance_to(self, t: float) -> None:
         """Idle until virtual time ``t`` (endpoint provisioned, not working)."""
         if t > self.clock:
-            self.meter.record_idle(t - self.clock)
+            self.meter.record_idle(t - self.clock, t_s=self.clock)
             self.clock = t
 
     def advance_active(self, dur_s: float, rids=(), tokens: int = 0) -> None:
         """Advance the clock through ``dur_s`` of compute billed to ``rids``."""
-        self.meter.record_active(dur_s, rids, tokens)
+        self.meter.record_active(dur_s, rids, tokens, t_s=self.clock)
         self.wall += dur_s
         self.clock += dur_s
 
@@ -218,7 +222,8 @@ class SchedulerCore:
         self.responses.append(
             Response(rid=req.rid, tokens=np.asarray(tokens, np.int32),
                      arrival_s=req.arrival_s, start_s=start_s,
-                     first_token_s=first_s, done_s=done_s)
+                     first_token_s=first_s, done_s=done_s,
+                     deadline_s=req.deadline_s)
         )
         self.total_tokens += len(tokens)
 

@@ -22,13 +22,33 @@ shared virtual timeline, across any number of named endpoints:
     queue and then stop accruing idle energy; scaled-up replicas pay a
     cold-start penalty (provisioned-and-drawing but not yet serving).
 
+As of PR 4 the fleet also trades **when**, not just where (the carbon /
+workload subsystem):
+
+  * every replica lives in a **carbon zone** (``EndpointSpec.zones`` cycles
+    an endpoint's replicas across zones, each zone a
+    :class:`~repro.carbon.signal.CarbonSignal`); its meter bills grams at
+    the zone's intensity at the drawing instant, and the ``carbon_aware``
+    router minimizes marginal **gCO2/token** — which differs from
+    ``greenest`` (marginal J/token) exactly when the candidate replicas sit
+    in zones of different current intensity;
+  * deadline-carrying batch-class requests are **deferred** by a
+    :class:`~repro.carbon.shift.TemporalShifter`: held at the fleet edge for
+    a planned low-carbon window and released (re-stamped to their release
+    instant) with enough slack to finish before their deadline;
+  * an endpoint with a :class:`~repro.workload.calendar.TrafficCalendar`
+    is **pre-warmed**: the autoscaler sizes for the forecast peak across
+    its cold-start horizon, so replicas are ready when a predicted ramp
+    arrives instead of cold-starting inside the crowd.
+
 Simulation semantics: arrivals are processed in windows.  All arrivals of a
 window are routed (and offered to their replica's core) before any core is
 drained, so intra-window batching is exact; each core is then drained only up
 to ``window_end - policy.admission_lookahead_s`` so a batch whose admission
 window is still open waits for the next routing round.  Everything is
 deterministic given the workload, and energy is conserved: the merged fleet
-meter decomposes exactly into its per-replica contributions (tested).
+meter decomposes exactly into its per-replica contributions — in joules AND
+in grams (tested).
 """
 
 from __future__ import annotations
@@ -37,11 +57,14 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.carbon.shift import DeferralSpec, TemporalShifter
+from repro.carbon.signal import CarbonSignal, ConstantSignal, J_PER_KWH
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
 from repro.energy.meter import EnergyMeter, estimate_j_per_token
 from repro.serving.core import SchedulerCore, SchedulingPolicy
 from repro.serving.request import Request, ServingMetrics
 from repro.serving.stepcache import StepTimeCache, shape_bucket
+from repro.workload.calendar import TrafficCalendar
 
 
 # -- replicas ------------------------------------------------------------------
@@ -57,10 +80,11 @@ class Replica:
     """
 
     def __init__(self, name: str, endpoint: str, core: SchedulerCore,
-                 created_s: float, ready_s: float):
+                 created_s: float, ready_s: float, zone: str = ""):
         self.name = name
         self.endpoint = endpoint
         self.core = core
+        self.zone = zone                   # carbon zone (gram billing)
         self.created_s = created_s
         self.ready_s = ready_s
         self.cold_start = ready_s > created_s
@@ -72,7 +96,7 @@ class Replica:
         if self.cold_start:
             # cold start: the replica draws idle power while it provisions;
             # its clock starts where it becomes able to serve
-            core.meter.record_idle(ready_s - created_s)
+            core.meter.record_idle(ready_s - created_s, t_s=created_s)
         core.clock = ready_s
 
     @property
@@ -173,6 +197,31 @@ class GreenestRouter(RoutingPolicy):
         return min(candidates, key=marginal)
 
 
+class CarbonAwareRouter(RoutingPolicy):
+    """Route by estimated marginal **gCO2/token**: the greenest-J marginal
+    cost multiplied by the candidate's zone intensity *right now*.
+
+    With every replica in one zone this degenerates to :class:`GreenestRouter`
+    (intensity is a common factor); with replicas spread across zones it
+    diverges exactly where the paper's placement discussion wants it to — a
+    slightly less batch-efficient replica on a solar-valley grid beats a
+    more efficient one on a coal peak.  Replicas with no measurement yet
+    fall back to (lowest-intensity, least-loaded).
+    """
+
+    name = "carbon_aware"
+
+    def choose(self, fleet, candidates, req, now):
+        def marginal(rep: Replica) -> Tuple:
+            mg = fleet.marginal_g_per_token(rep, req, now)
+            if mg is None:             # no measurement yet
+                return (1, fleet.zone_intensity(rep.zone, now),
+                        rep.backlog, rep.name)
+            return (0, mg, rep.backlog, rep.name)
+
+        return min(candidates, key=marginal)
+
+
 def req_endpoint(candidates: List[Replica]) -> str:
     return candidates[0].endpoint
 
@@ -187,6 +236,7 @@ ROUTERS: Dict[str, Callable[[], RoutingPolicy]] = {
     "least_loaded": LeastLoadedRouter,
     "warmest": WarmestRouter,
     "greenest": GreenestRouter,
+    "carbon_aware": CarbonAwareRouter,
 }
 
 
@@ -222,8 +272,12 @@ class Autoscaler:
     down_windows: int = 2
 
     def desired(self, arrivals: int, window_s: float, svc_s: float,
-                min_replicas: int, max_replicas: int) -> int:
-        rate = arrivals / max(window_s, 1e-9)
+                min_replicas: int, max_replicas: int,
+                forecast_rate_per_s: float = 0.0) -> int:
+        """Pool size for the observed window rate — lifted to the calendar
+        forecast when one predicts a higher rate inside the cold-start
+        horizon (the pre-warm path: replicas come up *before* the ramp)."""
+        rate = max(arrivals / max(window_s, 1e-9), forecast_rate_per_s)
         need = math.ceil(rate * svc_s / max(self.target_utilization, 1e-9))
         return int(max(min_replicas, min(max_replicas, max(need, 0))))
 
@@ -255,6 +309,12 @@ class EndpointSpec:
     cold_start_s: Optional[float] = None
     active_power_w: float = HOST_CPU_POWER_W
     idle_power_w: float = HOST_CPU_IDLE_POWER_W
+    # carbon zones this endpoint's replicas cycle through (replica i sits in
+    # zones[i % len]); () = every replica in the fleet's default zone
+    zones: Tuple[str, ...] = ()
+    # expected-traffic forecast: the autoscaler pre-warms for the calendar's
+    # peak rate across its cold-start horizon instead of reacting late
+    calendar: Optional[TrafficCalendar] = None
 
 
 @dataclasses.dataclass
@@ -267,9 +327,20 @@ class ReplicaFleet:
     """N scheduler cores, one shared virtual timeline, one energy story."""
 
     def __init__(self, router: str = "round_robin",
-                 autoscaler: Optional[Autoscaler] = None):
+                 autoscaler: Optional[Autoscaler] = None,
+                 carbon: Optional[CarbonSignal] = None,
+                 carbon_zones: Optional[Dict[str, CarbonSignal]] = None,
+                 deferral: Optional[DeferralSpec] = None):
         self.router = make_router(router)
         self.autoscaler = autoscaler
+        # "" is the default zone: the fleet-wide grid signal
+        self.carbon = carbon if carbon is not None else ConstantSignal()
+        self.carbon_zones = dict(carbon_zones or {})
+        self.shifter: Optional[TemporalShifter] = None
+        if deferral is not None and deferral.enabled:
+            # temporal shifting plans against the default-zone grid (the
+            # decision is WHEN to serve; the router still decides where)
+            self.shifter = TemporalShifter(self.carbon, deferral)
         self.specs: Dict[str, EndpointSpec] = {}
         self.replicas: List[Replica] = []
         self._counter: Dict[str, int] = {}
@@ -279,6 +350,13 @@ class ReplicaFleet:
         # [(t, {endpoint: serving replicas})] — sampled at window boundaries
         self.replica_timeline: List[Tuple[float, Dict[str, int]]] = []
         self.cold_starts = 0
+
+    # -- carbon zones ----------------------------------------------------------
+    def zone_signal(self, zone: str) -> CarbonSignal:
+        return self.carbon_zones.get(zone, self.carbon)
+
+    def zone_intensity(self, zone: str, t: float) -> float:
+        return self.zone_signal(zone).intensity(t)
 
     # -- pool management -------------------------------------------------------
     def add_endpoint(self, spec: EndpointSpec) -> None:
@@ -297,11 +375,14 @@ class ReplicaFleet:
             cache = StepTimeCache()
             if spec.warm_cache is not None:
                 cache.seed_from(spec.warm_cache)
+        zone = spec.zones[i % len(spec.zones)] if spec.zones else ""
         core = SchedulerCore(spec.engine, spec.policy_factory(),
                              step_cache=cache,
                              active_power_w=spec.active_power_w,
-                             idle_power_w=spec.idle_power_w)
-        rep = Replica(f"{spec.name}/r{i}", spec.name, core, created_s, ready_s)
+                             idle_power_w=spec.idle_power_w,
+                             carbon=self.zone_signal(zone))
+        rep = Replica(f"{spec.name}/r{i}", spec.name, core, created_s,
+                      ready_s, zone=zone)
         if rep.cold_start:
             self.cold_starts += 1
         self.replicas.append(rep)
@@ -350,6 +431,15 @@ class ReplicaFleet:
         return estimate_j_per_token(rep.core.active_power_w, prefill_s,
                                     decode_s, b, req.max_new_tokens)
 
+    def marginal_g_per_token(self, rep: Replica, req: Request,
+                             now: float) -> Optional[float]:
+        """Marginal gCO2/token of placing ``req`` on ``rep`` right now: the
+        marginal joule cost priced at the replica zone's current intensity."""
+        mj = self.marginal_j_per_token(rep, req)
+        if mj is None:
+            return None
+        return mj * self.zone_intensity(rep.zone, now) / J_PER_KWH
+
     def _slo_ok(self, rep: Replica, req: Request, now: float) -> bool:
         budget_s = req.slo_ms / 1e3 if req.slo_ms is not None \
             else self.specs[rep.endpoint].ttft_slo_s
@@ -396,6 +486,24 @@ class ReplicaFleet:
         return rep
 
     # -- the shared-timeline run ----------------------------------------------
+    def _defers(self, req: Request) -> bool:
+        return self.shifter is not None and req.deadline_s is not None
+
+    def _next_prewarm_s(self, after_s: float, window_s: float) -> Optional[float]:
+        """Earliest instant a calendar wants a pre-warm decision after
+        ``after_s``: a breakpoint's rate must be provisioned one cold-start
+        (+ one window) ahead, so idle-gap skipping must not jump past it."""
+        wake = None
+        for spec in self.specs.values():
+            if spec.calendar is None:
+                continue
+            lead = self.cold_start_s(spec) + window_s
+            for tp, rate in spec.calendar.points:
+                if rate > 0 and tp - lead > after_s:
+                    wake = tp - lead if wake is None else min(wake, tp - lead)
+                    break
+        return wake
+
     def run(self, workloads: Dict[str, List[Request]]) -> FleetResult:
         """Serve ``{endpoint: workload}`` on one virtual timeline."""
         for name in workloads:
@@ -411,25 +519,51 @@ class ReplicaFleet:
                 "fleet timeline (use synth_workload's rid0= offset)")
         events.sort(key=lambda e: (e[0], e[1], e[2].rid))
 
-        window_s = self.autoscaler.window_s if self.autoscaler else \
-            float("inf")
+        if self.autoscaler is not None:
+            window_s = self.autoscaler.window_s
+        elif self.shifter is not None:
+            window_s = self.shifter.spec.window_s   # release cadence
+        else:
+            window_s = float("inf")
         self.replica_timeline.append((0.0, self._serving_counts()))
         i = 0
         t_end = window_s
-        while i < len(events):
+        while i < len(events) or (self.shifter is not None
+                                  and self.shifter.pending):
             window_arrivals: Dict[str, int] = {}
             while i < len(events) and events[i][0] < t_end:
                 _, name, req = events[i]
-                self.route(name, req)
-                window_arrivals[name] = window_arrivals.get(name, 0) + 1
+                if self._defers(req):
+                    # batch-class: plan a low-carbon release instead of
+                    # serving on arrival (deadline pressure caps the hold)
+                    self.shifter.defer(name, req, self.service_time_s(name))
+                else:
+                    self.route(name, req)
+                    window_arrivals[name] = window_arrivals.get(name, 0) + 1
                 i += 1
+            if self.shifter is not None:
+                for name, req in self.shifter.release_due(t_end):
+                    self.route(name, req)
+                    window_arrivals[name] = window_arrivals.get(name, 0) + 1
             self._drain_window(t_end)
+            more = i < len(events) or (self.shifter is not None
+                                       and self.shifter.pending)
             self._observe_and_scale(t_end, window_arrivals, window_s,
-                                    more_events=i < len(events))
-            if i >= len(events):
+                                    more_events=more)
+            if not more:
                 break
-            next_end = (math.floor(events[i][0] / window_s) + 1) * window_s
-            if next_end > t_end + window_s:
+            # the next busy instant: an arrival, a planned release, or a
+            # calendar pre-warm decision — never skip past any of them
+            pending = []
+            if i < len(events):
+                pending.append(events[i][0])
+            if self.shifter is not None and self.shifter.pending:
+                pending.append(self.shifter.next_release_s())
+            prewarm = self._next_prewarm_s(t_end, window_s)
+            if prewarm is not None and prewarm < min(pending):
+                pending.append(max(prewarm, t_end))
+            next_end = (math.floor(min(pending) / window_s) + 1) * window_s
+            if next_end > t_end + window_s and self.autoscaler is not None:
                 # idle gap: run just enough empty windows for scale-down
                 # hysteresis to trigger (reclaiming replicas early in the
                 # gap), then jump straight to the next busy window
@@ -491,10 +625,17 @@ class ReplicaFleet:
             live = [r for r in pool if not r.draining]
             if not more_events:
                 continue                   # tail: just drain what exists
+            forecast = 0.0
+            if spec.calendar is not None:
+                # pre-warm: provision for the predicted peak across the
+                # cold-start horizon, so a calendar ramp finds replicas
+                # already warm instead of paying the cold start mid-crowd
+                horizon = t_end + self.cold_start_s(spec) + window_s
+                forecast = spec.calendar.peak_rate(t_end, horizon)
             desired = self.autoscaler.desired(
                 window_arrivals.get(name, 0), window_s,
                 self.service_time_s(name), spec.min_replicas,
-                spec.max_replicas)
+                spec.max_replicas, forecast_rate_per_s=forecast)
             if desired > len(live):
                 self._down_streak[name] = 0
                 need = desired - len(live)
@@ -550,7 +691,10 @@ class ReplicaFleet:
                 rep.stopped_s = fleet_end
             uptime = rep.stopped_s - rep.created_s
             meter = rep.core.meter
-            meter.record_idle(uptime - meter.active_s - meter.idle_s)
+            # the unaccounted residual is the provisioned tail after the
+            # replica's last piece of work — bill its grams there
+            meter.record_idle(uptime - meter.active_s - meter.idle_s,
+                              t_s=rep.core.clock)
 
         endpoints: Dict[str, ServingMetrics] = {}
         fleet_meter = EnergyMeter()
@@ -593,7 +737,7 @@ class ReplicaFleet:
                         for t, counts in self.replica_timeline]
             events = [e for e in self.scale_events
                       if e["endpoint"] == endpoint]
-        return {
+        stats = {
             "replicas_created": len(reps),
             "peak_replicas": max((n for _, n in timeline), default=len(reps)),
             "cold_starts": sum(1 for r in reps if r.cold_start),
@@ -603,3 +747,8 @@ class ReplicaFleet:
             "scale_events": events,
             "offered": {r.name: r.offered for r in reps},
         }
+        if any(r.zone for r in reps):
+            stats["zones"] = {r.name: r.zone for r in reps}
+        if self.shifter is not None:
+            stats["deferral"] = self.shifter.summary(endpoint)
+        return stats

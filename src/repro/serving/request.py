@@ -20,6 +20,11 @@ class Request:
     # sizes batches to the tightest budget visible in its window, and the
     # fleet router prefers replicas whose queue can still honor it
     slo_ms: Optional[float] = None
+    # batch-class currency: an absolute completion deadline (virtual clock).
+    # A deadline-carrying request is deferrable — the fleet's temporal
+    # shifter may hold it for a low-carbon window and release it with
+    # enough slack to finish in time (repro.carbon.shift)
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -30,6 +35,7 @@ class Response:
     start_s: float                     # compute start (virtual clock)
     first_token_s: float               # TTFT point
     done_s: float
+    deadline_s: Optional[float] = None   # copied from the request
 
     @property
     def latency_s(self) -> float:
@@ -42,6 +48,12 @@ class Response:
     @property
     def queue_s(self) -> float:
         return self.start_s - self.arrival_s
+
+    @property
+    def met_deadline(self) -> Optional[bool]:
+        if self.deadline_s is None:
+            return None
+        return self.done_s <= self.deadline_s + 1e-9
 
 
 @dataclasses.dataclass
@@ -89,6 +101,25 @@ class ServingMetrics:
     def energy_per_token_j(self) -> float:
         return self.energy_j / max(self.total_tokens, 1)
 
+    @property
+    def gco2_total(self) -> float:
+        """Grams CO2e from the meter (0.0 for meterless legacy metrics)."""
+        return self.meter.total_g if self.meter is not None else 0.0
+
+    @property
+    def gco2_per_token(self) -> float:
+        return self.gco2_total / max(self.total_tokens, 1)
+
+    @property
+    def deadline_compliance(self) -> Optional[float]:
+        """Fraction of deadline-carrying responses that finished in time
+        (None when the workload had no deadlines)."""
+        met = [r.met_deadline for r in self.responses
+               if r.deadline_s is not None]
+        if not met:
+            return None
+        return sum(met) / len(met)
+
     def summary(self) -> dict:
         d = {
             "n_requests": len(self.responses),
@@ -102,6 +133,11 @@ class ServingMetrics:
         if self.meter is not None:
             d["energy_active_j"] = round(self.meter.active_j, 6)
             d["energy_idle_j"] = round(self.meter.idle_j, 6)
+            d["gco2_total"] = round(self.meter.total_g, 6)
+            # grams/token sits at 1e-6..1e-5: 9 decimals keeps ~4 sig figs
+            d["gco2_per_token"] = round(self.gco2_per_token, 9)
+        if self.deadline_compliance is not None:
+            d["deadline_compliance"] = round(self.deadline_compliance, 6)
         if self.fleet is not None:
             d["fleet"] = {
                 "replicas_created": self.fleet.get("replicas_created"),
@@ -123,23 +159,19 @@ class ServingMetrics:
 def synth_workload(
     n: int, prompt_len: int, max_new: int, vocab: int, rate_per_s: float,
     seed: int = 0, rid0: int = 0, slo_ms: Optional[float] = None,
+    deadline_s: Optional[float] = None,
 ) -> List[Request]:
     """Poisson arrivals, uniform random prompts (deterministic given seed).
 
-    ``rid0`` offsets request ids so several endpoint workloads can share one
-    fleet timeline without rid collisions; ``slo_ms`` stamps every request
-    with a per-request TTFT budget.
+    Legacy alias for :func:`repro.workload.generators.poisson` (bit-
+    identical output for the same seed — the arrival-generator rewrite is
+    regression-tested against this contract).  ``rid0`` offsets request ids
+    so several endpoint workloads can share one fleet timeline without rid
+    collisions; ``slo_ms`` stamps a per-request TTFT budget, ``deadline_s``
+    a relative completion deadline (batch-class, deferrable work).
     """
-    rng = np.random.RandomState(seed)
-    gaps = rng.exponential(1.0 / rate_per_s, size=n)
-    t = np.cumsum(gaps) - gaps[0]
-    return [
-        Request(
-            rid=rid0 + i,
-            prompt=rng.randint(0, vocab, size=prompt_len).astype(np.int32),
-            max_new_tokens=max_new,
-            arrival_s=float(t[i]),
-            slo_ms=slo_ms,
-        )
-        for i in range(n)
-    ]
+    from repro.workload.generators import poisson  # local: avoids a cycle
+
+    return poisson(n, prompt_len, max_new, vocab, rate_per_s=rate_per_s,
+                   seed=seed, rid0=rid0, slo_ms=slo_ms,
+                   deadline_s=deadline_s)

@@ -1,0 +1,114 @@
+"""Workload-generator contract tests.
+
+  * the poisson generator is bit-identical to the legacy
+    ``synth_workload`` (benchmarks swapped construction paths; baselines
+    must not move);
+  * every generator is deterministic given its seed and stamps
+    rid/slo/deadline correctly;
+  * bursty crowds land on schedule, diurnal peaks carry more arrivals than
+    troughs, replay reproduces its input;
+  * WorkloadSpec.build dispatches to the right generator and validates.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.request import synth_workload
+from repro.workload.generators import (
+    WorkloadSpec,
+    bursty,
+    diurnal,
+    poisson,
+    replay,
+)
+
+
+def test_poisson_bit_identical_to_synth_workload():
+    for seed in (0, 3, 17):
+        legacy = synth_workload(200, 16, 8, 1000, rate_per_s=40.0, seed=seed,
+                                rid0=500, slo_ms=80.0)
+        new = poisson(200, 16, 8, 1000, rate_per_s=40.0, seed=seed,
+                      rid0=500, slo_ms=80.0)
+        assert len(legacy) == len(new)
+        for a, b in zip(legacy, new):
+            assert a.rid == b.rid
+            assert a.arrival_s == b.arrival_s
+            assert a.slo_ms == b.slo_ms
+            assert np.array_equal(a.prompt, b.prompt)
+
+
+def test_generators_deterministic_given_seed():
+    kwargs = dict(prompt_len=8, max_new=4, vocab=100)
+    for make in (
+        lambda s: poisson(50, rate_per_s=20.0, seed=s, **kwargs),
+        lambda s: diurnal(50, base_rate_per_s=5.0, peak_rate_per_s=50.0,
+                          period_s=10.0, seed=s, **kwargs),
+        lambda s: bursty(50, rate_per_s=5.0, burst_n=20, burst_every_s=5.0,
+                         burst_rate_per_s=200.0, seed=s, **kwargs),
+    ):
+        a, b = make(7), make(7)
+        assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+        assert all(np.array_equal(x.prompt, y.prompt)
+                   for x, y in zip(a, b))
+        c = make(8)
+        assert [r.arrival_s for r in a] != [r.arrival_s for r in c]
+
+
+def test_arrivals_sorted_zero_based_and_stamped():
+    wl = bursty(120, 8, 4, 100, rate_per_s=10.0, burst_n=40,
+                burst_every_s=6.0, burst_rate_per_s=300.0, phase_s=1.0,
+                seed=2, rid0=1000, slo_ms=50.0, deadline_s=9.0)
+    ts = [r.arrival_s for r in wl]
+    assert ts == sorted(ts) and ts[0] == 0.0
+    assert [r.rid for r in wl] == list(range(1000, 1120))
+    for r in wl:
+        assert r.slo_ms == 50.0
+        assert r.deadline_s == pytest.approx(r.arrival_s + 9.0)
+
+
+def test_bursty_crowds_land_on_schedule():
+    wl = bursty(300, 8, 4, 100, rate_per_s=2.0, burst_n=100,
+                burst_every_s=10.0, burst_rate_per_s=500.0, phase_s=3.0,
+                seed=4)
+    ts = np.asarray([r.arrival_s for r in wl])
+    # most arrivals cluster right after the crowd starts (3.0, 13.0, ...)
+    in_crowd = ((ts % 10.0 >= 3.0) & (ts % 10.0 <= 4.0)).mean()
+    assert in_crowd > 0.6
+
+
+def test_diurnal_peak_carries_more_than_trough():
+    wl = diurnal(2000, 8, 4, 100, base_rate_per_s=2.0, peak_rate_per_s=80.0,
+                 period_s=10.0, seed=6)
+    phase = np.asarray([r.arrival_s for r in wl]) % 10.0
+    # peak half-period (2.5..7.5, cosine profile) vs trough half
+    peak = ((phase > 2.5) & (phase < 7.5)).sum()
+    trough = len(wl) - peak
+    assert peak > 3 * trough
+
+
+def test_replay_reproduces_input_times():
+    wl = replay([4.0, 1.0, 2.5], 8, 4, 100, seed=1, rid0=7)
+    assert [r.arrival_s for r in wl] == [0.0, 1.5, 3.0]   # sorted, rebased
+    assert [r.rid for r in wl] == [7, 8, 9]
+
+
+def test_workload_spec_build_dispatch_and_validation():
+    vocab = 100
+    p = WorkloadSpec(kind="poisson", n=30, rate_per_s=10.0, seed=1)
+    assert [r.arrival_s for r in p.build(vocab)] == \
+        [r.arrival_s for r in poisson(30, 16, 16, vocab, 10.0, seed=1)]
+    t = WorkloadSpec(kind="trace", arrivals=(0.0, 1.0, 2.0))
+    assert len(t.build(vocab)) == 3
+    with pytest.raises(ValueError):
+        WorkloadSpec(kind="wat").build(vocab)
+    with pytest.raises(ValueError):
+        WorkloadSpec(kind="bursty", burst_n=0).build(vocab)
+    with pytest.raises(ValueError):
+        WorkloadSpec(kind="diurnal", rate_per_s=10.0,
+                     peak_rate_per_s=5.0).build(vocab)
+    with pytest.raises(ValueError):
+        WorkloadSpec(kind="trace").build(vocab)
+    # problems() reports relative field names (the spec layer's contract)
+    fields = [f for f, _ in WorkloadSpec(kind="bursty", burst_n=0,
+                                         rate_per_s=-1.0).problems()]
+    assert "rate_per_s" in fields and "burst_n" in fields
