@@ -11,8 +11,11 @@ request runs; this grid trades **when**.  Two endpoints share one timeline:
 
 Each cell is a validated :class:`repro.serving.api.ServingSpec` variant from
 :func:`repro.serving.api.sweep` over ``deferral.enabled x router``, run under
-two carbon worlds (a flat IEA-average grid and a compressed diurnal grid with
-phase-shifted zones), at 11k simulated requests per cell.  Reported per cell:
+three carbon worlds (a flat IEA-average grid; a compressed diurnal grid with
+phase-shifted zones; and a *recorded* 48h hourly intensity trace —
+``benchmarks/data/grid_intensity_48h.csv`` replayed through
+``TraceSignal.from_csv`` with one real day compressed to one virtual
+"day"), at 11k simulated requests per cell.  Reported per cell:
 J/token, gCO2 total + gCO2/token (billed at drawing time on the zone
 signals), chat p95 (the latency that must not break), batch deadline
 compliance (the contract deferral must keep), and the per-endpoint /
@@ -33,13 +36,14 @@ baseline).
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 
 from benchmarks.common import emit
 from repro.carbon.shift import DeferralSpec
-from repro.carbon.signal import CarbonSpec
+from repro.carbon.signal import CarbonSpec, TraceSignal
 from repro.configs import get_arch
 from repro.models import init_params
 from repro.serving.api import (
@@ -83,6 +87,32 @@ CONSTANT = dict(
         "coal": CarbonSpec(kind="constant"),
     },
 )
+
+# the recorded world: a checked-in 48h hourly intensity trace (deep midday
+# solar valleys, evening peaks) compressed so one real day spans one
+# virtual PERIOD_S — the diurnal story grounded in recorded-shape data
+TRACE_CSV = os.path.join(os.path.dirname(__file__), "data",
+                         "grid_intensity_48h.csv")
+REAL_DAY_S = 86_400.0
+
+
+def trace_world() -> dict:
+    with open(TRACE_CSV) as f:
+        sig = TraceSignal.from_csv(f.read())
+    scale = PERIOD_S / REAL_DAY_S
+    pts = tuple((t * scale, g) for t, g in sig.points)
+    # the "solar" zone rides the same recorded grid half a real day out of
+    # phase (its valley covers the default zone's peak); "coal" stays flat
+    shifted = tuple(
+        (t * scale, sig.intensity((t + REAL_DAY_S / 2) % (2 * REAL_DAY_S)))
+        for t, _ in sig.points)
+    return dict(
+        carbon=CarbonSpec(kind="trace", trace=pts),
+        carbon_zones={
+            "solar": CarbonSpec(kind="trace", trace=shifted),
+            "coal": CarbonSpec(kind="constant", g_per_kwh=820.0),
+        },
+    )
 
 GRID = {
     "deferral.enabled": [False, True],
@@ -136,7 +166,8 @@ def run():
     session = ServingSession()
 
     rows = []
-    for signal_name, world in (("constant", CONSTANT), ("diurnal", DIURNAL)):
+    for signal_name, world in (("constant", CONSTANT), ("diurnal", DIURNAL),
+                               ("trace", trace_world())):
         for assignment, spec in sweep(base_spec(world), GRID):
             session.deploy(spec, params={"m": params})
             t0 = time.perf_counter()

@@ -1,0 +1,212 @@
+"""Admission-layer grid: disaggregation x priority-mix x router.
+
+The spatial grids trade *where*, the carbon grid trades *when*; this grid
+trades **how a request is admitted**: unified pools vs prefill/decode
+disaggregation, FIFO vs a preemptive priority ladder, under mixed
+interactive + batch traffic.  Every cell is a validated
+:class:`repro.serving.api.ServingSpec` variant served by the session at a
+fixed provisioning budget (4 replicas: a unified pool of 4, or 2 prefill +
+2 decode), so the J/token differences are scheduling, not pool size.
+
+Modes per (interactive-share, router) cell:
+
+  * ``unified``          — one pool, priority queue, no preemption;
+  * ``unified_preempt``  — one pool, interactive prefills pause in-flight
+    lower-priority decode batches (pause/resume billed to ``preempt``);
+  * ``disagg_fast``      — prefill/decode pools over a fat datacenter link
+    (100 Gbps): phase pools consolidate batches, handoff is ~free;
+  * ``disagg_slow``      — the same pools over a thin, hungry link
+    (0.5 Gbps, 20 ms, 40 W): the KV handoff (``xfer`` bucket) eats the gain.
+
+The KV payload models a production 8B-class decoder (32 layers x 8 KV heads
+x 128 head-dim x 2 bytes ~ 128 KiB/token) while the smoke engine supplies
+measured step times — the handoff economics are the decision under test,
+not the smoke model's tiny cache.
+
+Reported per cell: J/token split by bucket (active/idle/preempt/xfer),
+interactive-class p95 TTFT (the latency that must not break — CI warns,
+non-blocking, when the best cell regresses >10% vs the checked-in
+baseline), batch p95 latency, gCO2/token, and handoff stats.  After the
+grid, two headline rows record the acceptance claims: a regime where
+disaggregated pools beat the unified pool on J/token at matched interactive
+p95 TTFT, and a regime where the KV-handoff cost inverts the result.
+
+``run()`` returns machine-readable rows; ``benchmarks/run.py`` folds them
+into ``BENCH_serving.json`` under ``disagg_grid``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serving.admission import DisaggSpec, PrioritySpec
+from repro.serving.api import (
+    AutoscaleSpec,
+    EndpointSpec,
+    ServingSession,
+    ServingSpec,
+)
+from repro.workload.generators import bursty, poisson
+
+ARCH = "minitron-4b-smoke"
+PROMPT_LEN = 16
+MAX_NEW = 6
+N = 4000                               # requests per cell
+RATE = 160.0                           # combined arrival rate (req/s)
+KV_BYTES_PER_TOKEN = 2 * 32 * 8 * 128 * 2   # 8B-class decoder, fp16 cache
+
+FAST_LINK = dict(link_gbps=100.0, link_latency_ms=0.05, link_power_w=8.0)
+SLOW_LINK = dict(link_gbps=0.5, link_latency_ms=20.0, link_power_w=40.0)
+
+MODES = ("unified", "unified_preempt", "disagg_fast", "disagg_slow")
+ROUTERS = ("round_robin", "greenest")
+SHARES = (0.25, 0.5)                   # interactive fraction of the mix
+
+
+def spec_for(mode: str, router: str) -> ServingSpec:
+    if mode == "disagg_fast":
+        disagg = DisaggSpec(enabled=True, prefill_replicas=2,
+                            decode_replicas=2,
+                            kv_bytes_per_token=KV_BYTES_PER_TOKEN,
+                            **FAST_LINK)
+    elif mode == "disagg_slow":
+        disagg = DisaggSpec(enabled=True, prefill_replicas=2,
+                            decode_replicas=2,
+                            kv_bytes_per_token=KV_BYTES_PER_TOKEN,
+                            **SLOW_LINK)
+    else:
+        disagg = DisaggSpec(enabled=False)
+    return ServingSpec(
+        endpoints=(EndpointSpec(
+            name="llm", arch=ARCH, model="m", format="rsm",
+            policy="dynamic_batch", max_batch=8, batch_timeout_ms=10.0,
+            max_seq=64,
+            # fixed provisioning budget: 4 unified replicas vs 2p + 2d
+            autoscale=AutoscaleSpec(enabled=False, replicas_hint=4),
+            disagg=disagg,
+        ),),
+        router=router,
+        priority=PrioritySpec(enabled=True,
+                              preempt=(mode == "unified_preempt"),
+                              pause_ms=2.0, resume_ms=2.0),
+    )
+
+
+def workloads(share: float, vocab: int):
+    """Interactive chat + batch bulk whose flash crowds collide with it."""
+    n_chat = int(N * share)
+    n_bulk = N - n_chat
+    chat = poisson(n_chat, PROMPT_LEN, MAX_NEW, vocab,
+                   rate_per_s=RATE * share, seed=71,
+                   slo_ms=100.0, priority="interactive")
+    bulk = bursty(n_bulk, PROMPT_LEN, MAX_NEW, vocab,
+                  rate_per_s=RATE * (1 - share) * 0.6,
+                  burst_n=max(n_bulk // 8, 1), burst_every_s=4.0,
+                  burst_rate_per_s=RATE * 4, seed=72, rid0=1_000_000,
+                  priority="batch")
+    return chat + bulk
+
+
+def run():
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+
+    rows = []
+    cells = {}
+    for share in SHARES:
+        wl = workloads(share, cfg.vocab_size)
+        for router in ROUTERS:
+            for mode in MODES:
+                spec = spec_for(mode, router).validate()
+                session.deploy(spec, params={"m": params})
+                t0 = time.perf_counter()
+                session.calibrate("llm", batch_sizes=range(1, 9),
+                                  prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+                cal_s = time.perf_counter() - t0
+                session.submit("llm", wl)
+                t0 = time.perf_counter()
+                report = session.run()
+                sim_s = time.perf_counter() - t0
+                ep = report.endpoints["llm"]
+                m = ep.metrics
+                # conservation: the four buckets decompose the meter total
+                err = abs(m.meter.total_j
+                          - (m.meter.active_j + m.meter.idle_j
+                             + m.meter.preempt_j + m.meter.xfer_j))
+                assert err < 1e-6, f"bucket conservation broke: {err}"
+                stats = m.fleet.get("handoffs", {}) if m.fleet else {}
+                row = {
+                    "mode": mode,
+                    "router": router,
+                    "interactive_share": share,
+                    "n_requests": ep.n_requests,
+                    "j_per_token": ep.j_per_token,
+                    "j_active": ep.j_active,
+                    "j_idle": ep.j_idle,
+                    "j_preempt": ep.j_preempt,
+                    "j_xfer": ep.j_xfer,
+                    "interactive_p95_ttft_s":
+                        ep.ttft_p95_by_class.get("interactive", 0.0),
+                    "batch_p95_latency_s":
+                        m.latency_percentile(95, priority="batch"),
+                    "p95_latency_s": ep.latency_p95_s,
+                    "gco2_per_token": ep.gco2_per_token,
+                    "handoffs": stats.get("count", 0),
+                    "kv_gbytes": stats.get("kv_bytes", 0) / 1e9,
+                    "xfer_s": stats.get("xfer_s", 0.0),
+                    "cal_s": cal_s,
+                    "sim_host_s": sim_s,
+                }
+                rows.append(row)
+                cells[(share, router, mode)] = row
+                emit(
+                    f"disagg_{mode}_{router}_mix{int(share * 100)}",
+                    row["interactive_p95_ttft_s"] * 1e6,
+                    f"J_tok={row['j_per_token']:.6f};"
+                    f"J_xfer={row['j_xfer']:.3f};"
+                    f"J_preempt={row['j_preempt']:.3f};"
+                    f"batch_p95={row['batch_p95_latency_s']:.4f};"
+                    f"n={row['n_requests']};sim_host_s={sim_s:.3f}",
+                )
+
+    # headline rows: the two regimes the grid exists to demonstrate
+    for share in SHARES:
+        for router in ROUTERS:
+            uni = cells[(share, router, "unified")]
+            fast = cells[(share, router, "disagg_fast")]
+            slow = cells[(share, router, "disagg_slow")]
+            matched = (fast["interactive_p95_ttft_s"]
+                       <= uni["interactive_p95_ttft_s"] * 1.10)
+            rows.append({
+                "kind": "headline",
+                "router": router,
+                "interactive_share": share,
+                "disagg_wins_j_per_token":
+                    fast["j_per_token"] < uni["j_per_token"] and matched,
+                "ttft_matched": matched,
+                "handoff_inverts_win":
+                    slow["j_per_token"] > uni["j_per_token"],
+                "unified_j_per_token": uni["j_per_token"],
+                "disagg_fast_j_per_token": fast["j_per_token"],
+                "disagg_slow_j_per_token": slow["j_per_token"],
+                "unified_interactive_p95_ttft_s":
+                    uni["interactive_p95_ttft_s"],
+                "disagg_fast_interactive_p95_ttft_s":
+                    fast["interactive_p95_ttft_s"],
+            })
+            emit(
+                f"disagg_headline_{router}_mix{int(share * 100)}",
+                fast["interactive_p95_ttft_s"] * 1e6,
+                f"disagg_wins={rows[-1]['disagg_wins_j_per_token']};"
+                f"inverted_by_handoff={rows[-1]['handoff_inverts_win']};"
+                f"uni={uni['j_per_token']:.6f};"
+                f"fast={fast['j_per_token']:.6f};"
+                f"slow={slow['j_per_token']:.6f}",
+            )
+    return rows

@@ -10,6 +10,7 @@ run (the CI bench job uploads it as an artifact).
   bench_fleet          - fleet layer: policy x router grid, 2-endpoint 5k run
   bench_decisions      - ServingSpec sweep: format x router grid (pure data)
   bench_carbon         - temporal grid: carbon signal x deferral x router
+  bench_disagg         - admission grid: disaggregation x priority-mix x router
   bench_formats        - Table 1, TD2 model-format row
   bench_codecs         - Table 1, TD4 communication-protocol row
   bench_adds           - Table 1 executed as GreenReports (all qualities)
@@ -47,6 +48,8 @@ def write_serving_json(path: str, results: dict) -> None:
         doc["decision_grid"] = results["bench_decisions"]
     if "bench_carbon" in results:
         doc["carbon_grid"] = results["bench_carbon"]
+    if "bench_disagg" in results:
+        doc["disagg_grid"] = results["bench_disagg"]
     if "bench_batching" in results:
         doc["batching"] = {
             name: m.summary() for name, m in results["bench_batching"].items()
@@ -63,6 +66,7 @@ def main(argv=None) -> None:
         bench_carbon,
         bench_codecs,
         bench_decisions,
+        bench_disagg,
         bench_fleet,
         bench_formats,
         bench_kernels,
@@ -72,7 +76,8 @@ def main(argv=None) -> None:
 
     modules = [bench_codecs, bench_formats, bench_kernels,
                bench_serving_infra, bench_batching, bench_fleet,
-               bench_decisions, bench_carbon, bench_adds, bench_roofline]
+               bench_decisions, bench_carbon, bench_disagg, bench_adds,
+               bench_roofline]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated module names (e.g. bench_fleet)")
@@ -98,7 +103,7 @@ def main(argv=None) -> None:
             failed.append((mod.__name__, e))
             traceback.print_exc()
     if results.keys() & {"bench_fleet", "bench_batching", "bench_decisions",
-                         "bench_carbon"}:
+                         "bench_carbon", "bench_disagg"}:
         write_serving_json(ns.serving_json, results)
     if failed:
         print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)

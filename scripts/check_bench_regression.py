@@ -5,7 +5,9 @@ Compares a freshly generated grid against the checked-in
 
   * the **greenest-router J/token** (decision grid, falling back to the
     fleet grid for old baselines);
-  * the **carbon-aware-router gCO2/token** (carbon grid).
+  * the **carbon-aware-router gCO2/token** (carbon grid);
+  * the **interactive-class p95 TTFT** (disagg grid) — the latency contract
+    the admission layer must not trade away while chasing J/token.
 
 A relative regression beyond ``--threshold`` emits a GitHub Actions
 ``::warning::`` annotation — loud on the PR, but never red (bench hosts are
@@ -23,13 +25,16 @@ import json
 import sys
 
 
-def _min_cell(doc: dict, grid: str, router: str, metric: str) -> float | None:
-    """Minimum ``metric`` among a grid's rows for ``router``; None (never a
-    crash) when the grid is absent or its rows predate the metric — this
-    script must stay green on schema drift, only ever warn."""
+def _min_cell(doc: dict, grid: str, router: str | None,
+              metric: str) -> float | None:
+    """Minimum ``metric`` among a grid's rows for ``router`` (None = every
+    row); None (never a crash) when the grid is absent or its rows predate
+    the metric — this script must stay green on schema drift, only ever
+    warn."""
     rows = doc.get(grid) or []
     try:
-        cells = [r.get(metric) for r in rows if r.get("router") == router]
+        cells = [r.get(metric) for r in rows
+                 if router is None or r.get("router") == router]
     except (AttributeError, TypeError):
         return None
     cells = [c for c in cells if isinstance(c, (int, float))]
@@ -49,6 +54,13 @@ def carbon_aware_g_per_token(doc: dict) -> float | None:
     """Best (minimum) gCO2/token among the carbon grid's carbon-aware-router
     cells (None for pre-carbon-grid baselines)."""
     return _min_cell(doc, "carbon_grid", "carbon_aware", "gco2_per_token")
+
+
+def interactive_p95_ttft(doc: dict) -> float | None:
+    """Best (minimum) interactive-class p95 TTFT among the disagg grid's
+    measurement rows, any router (None for pre-admission baselines;
+    headline rows carry no per-cell metric and fall out of the filter)."""
+    return _min_cell(doc, "disagg_grid", None, "interactive_p95_ttft_s")
 
 
 def check_metric(label: str, base: float | None, fresh: float | None,
@@ -97,6 +109,10 @@ def main(argv=None) -> int:
     check_metric("carbon-aware-router gCO2/token",
                  carbon_aware_g_per_token(base_doc),
                  carbon_aware_g_per_token(fresh_doc),
+                 ns.threshold, ns.baseline)
+    check_metric("interactive-class p95 TTFT",
+                 interactive_p95_ttft(base_doc),
+                 interactive_p95_ttft(fresh_doc),
                  ns.threshold, ns.baseline)
     return 0
 

@@ -1,0 +1,261 @@
+"""Chart the green-serving energy/latency frontier from BENCH_serving.json.
+
+Every serving PR has added a grid to ``BENCH_serving.json`` — fleet
+(policy x router), decisions (format x router), carbon (signal x deferral x
+router) and disagg (mode x priority-mix x router) — but the frontier the
+paper cares about (how much energy does a latency budget cost?) only shows
+up when the cells are drawn.  This script renders all four grids as one SVG
+of small multiples, one panel per grid, each an energy-vs-latency scatter:
+
+  * **fleet**     J/token  vs p95 latency,       colored by router;
+  * **decisions** J/token  vs p95 latency,       colored by router;
+  * **carbon**    gCO2/token vs chat p95 latency, colored by router;
+  * **disagg**    J/token  vs interactive p95 TTFT, colored by mode.
+
+Pure stdlib — the SVG is written by hand, no plotting dependency.  Colors
+follow the entity (router / mode), assigned in fixed order, with the
+baseline series (round_robin / unified) in neutral gray; the palette's
+pairwise CVD and normal-vision separation was validated offline (worst
+all-pairs ΔE: normal 17.6, CVD 9.2, OKLab x100).  Every point carries a
+direct label, so identity is never color-alone.
+
+  python scripts/plot_frontier.py                    # BENCH_frontier.svg
+  python scripts/plot_frontier.py --json BENCH_serving.json --out out.svg
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+# -- palette (validated offline; see module docstring) -------------------------
+SURFACE = "#fcfcfb"
+INK = "#0b0b0b"            # titles
+INK_2 = "#52514e"          # axis labels, legends
+INK_MUTED = "#8a8984"      # point labels
+GRIDLINE = "#e8e7e4"
+NEUTRAL = "#6b6a66"        # the baseline series (round_robin / unified)
+BLUE, ORANGE, AQUA = "#2a78d6", "#eb6834", "#1baf7a"
+
+PANEL_W, PANEL_H = 420, 300
+MARGIN = dict(l=64, r=16, t=44, b=40)
+GAP = 28
+
+
+def series_colors(keys):
+    """Fixed-order assignment: baseline key (if present) gets the neutral,
+    the rest take the categorical slots in order."""
+    baselines = {"round_robin", "unified"}
+    slots = [BLUE, AQUA, ORANGE]
+    out, i = {}, 0
+    for k in keys:
+        if k in baselines:
+            out[k] = NEUTRAL
+        else:
+            out[k] = slots[i % len(slots)]
+            i += 1
+    return out
+
+
+def nice_ticks(lo, hi, n=4):
+    if not (math.isfinite(lo) and math.isfinite(hi)) or hi <= lo:
+        return [lo, hi]
+    raw = (hi - lo) / n
+    mag = 10 ** math.floor(math.log10(raw))
+    step = min(s * mag for s in (1, 2, 2.5, 5, 10) if s * mag >= raw)
+    t0 = math.ceil(lo / step) * step
+    ticks = []
+    t = t0
+    while t <= hi + 1e-12:
+        ticks.append(round(t, 10))
+        t += step
+    return ticks or [lo, hi]
+
+
+def fmt(v):
+    if v == 0:
+        return "0"
+    if abs(v) >= 1000:
+        return f"{v:.0f}"
+    if abs(v) >= 1:
+        return f"{v:g}"
+    return f"{v:.4g}"
+
+
+def esc(s):
+    return (str(s).replace("&", "&amp;").replace("<", "&lt;")
+            .replace(">", "&gt;"))
+
+
+class Panel:
+    """One energy-vs-latency scatter: points = (x, y, series, label)."""
+
+    def __init__(self, title, x_label, y_label, points):
+        self.title = title
+        self.x_label = x_label
+        self.y_label = y_label
+        self.points = points
+
+    def svg(self, ox, oy):
+        pts = [p for p in self.points
+               if all(isinstance(p[i], (int, float)) for i in (0, 1))]
+        parts = [f'<g transform="translate({ox},{oy})">']
+        iw = PANEL_W - MARGIN["l"] - MARGIN["r"]
+        ih = PANEL_H - MARGIN["t"] - MARGIN["b"]
+        parts.append(
+            f'<text x="0" y="14" fill="{INK}" font-size="13" '
+            f'font-weight="600">{esc(self.title)}</text>')
+        if not pts:
+            parts.append(
+                f'<text x="{MARGIN["l"]}" y="{MARGIN["t"] + 20}" '
+                f'fill="{INK_MUTED}" font-size="11">no rows in '
+                'BENCH_serving.json — run benchmarks/run.py</text></g>')
+            return "\n".join(parts)
+        xs = [p[0] for p in pts]
+        ys = [p[1] for p in pts]
+        pad = lambda lo, hi: ((hi - lo) or max(abs(hi), 1e-9)) * 0.08
+        x0, x1 = min(xs), max(xs)
+        y0, y1 = min(ys), max(ys)
+        x0, x1 = max(0.0, x0 - pad(x0, x1)), x1 + pad(x0, x1)
+        y0, y1 = max(0.0, y0 - pad(y0, y1)), y1 + pad(y0, y1)
+        sx = lambda v: MARGIN["l"] + (v - x0) / (x1 - x0) * iw
+        sy = lambda v: MARGIN["t"] + ih - (v - y0) / (y1 - y0) * ih
+
+        # recessive grid + ticks
+        for tv in nice_ticks(y0, y1):
+            y = sy(tv)
+            parts.append(f'<line x1="{MARGIN["l"]}" y1="{y:.1f}" '
+                         f'x2="{MARGIN["l"] + iw}" y2="{y:.1f}" '
+                         f'stroke="{GRIDLINE}" stroke-width="1"/>')
+            parts.append(f'<text x="{MARGIN["l"] - 6}" y="{y + 3:.1f}" '
+                         f'fill="{INK_2}" font-size="9" '
+                         f'text-anchor="end">{fmt(tv)}</text>')
+        for tv in nice_ticks(x0, x1):
+            x = sx(tv)
+            parts.append(f'<line x1="{x:.1f}" y1="{MARGIN["t"]}" '
+                         f'x2="{x:.1f}" y2="{MARGIN["t"] + ih}" '
+                         f'stroke="{GRIDLINE}" stroke-width="1"/>')
+            parts.append(f'<text x="{x:.1f}" y="{MARGIN["t"] + ih + 14}" '
+                         f'fill="{INK_2}" font-size="9" '
+                         f'text-anchor="middle">{fmt(tv)}</text>')
+        # axis titles
+        parts.append(f'<text x="{MARGIN["l"] + iw / 2}" '
+                     f'y="{PANEL_H - 6}" fill="{INK_2}" font-size="10" '
+                     f'text-anchor="middle">{esc(self.x_label)}</text>')
+        parts.append(f'<text x="12" y="{MARGIN["t"] + ih / 2}" '
+                     f'fill="{INK_2}" font-size="10" text-anchor="middle" '
+                     f'transform="rotate(-90 12 {MARGIN["t"] + ih / 2})">'
+                     f'{esc(self.y_label)}</text>')
+
+        # legend: fixed series order, marker + ink-colored text
+        order = list(dict.fromkeys(p[2] for p in pts))
+        colors = series_colors(order)
+        lx = MARGIN["l"]
+        for s in order:
+            parts.append(f'<circle cx="{lx + 4}" cy="26" r="4" '
+                         f'fill="{colors[s]}"/>')
+            parts.append(f'<text x="{lx + 12}" y="29" fill="{INK_2}" '
+                         f'font-size="10">{esc(s)}</text>')
+            lx += 18 + 6.2 * len(str(s))
+
+        # marks: >=8px markers with a 2px surface ring; direct labels so
+        # identity is never color-alone (several slots sit under 3:1)
+        labeled = []
+        for x, y, s, label in sorted(pts, key=lambda p: (p[1], p[0])):
+            cx, cy = sx(x), sy(y)
+            parts.append(f'<circle cx="{cx:.1f}" cy="{cy:.1f}" r="4.5" '
+                         f'fill="{colors[s]}" stroke="{SURFACE}" '
+                         f'stroke-width="2"/>')
+            if label:
+                ly = cy + 3
+                # nudge colliding labels apart (same neighborhood)
+                while any(abs(ly - py) < 9 and cx + 7 < px + 60
+                          and px - 5 < cx + 7 for px, py in labeled):
+                    ly += 9
+                labeled.append((cx + 7, ly))
+                parts.append(f'<text x="{cx + 7:.1f}" y="{ly:.1f}" '
+                             f'fill="{INK_MUTED}" font-size="8">'
+                             f'{esc(label)}</text>')
+        parts.append("</g>")
+        return "\n".join(parts)
+
+
+def build_panels(doc):
+    fleet = [(r.get("p95_latency_s"), r.get("j_per_token"),
+              r.get("router", "?"), r.get("policy", ""))
+             for r in doc.get("fleet_grid") or []
+             if isinstance(r, dict)]
+    decisions = [(r.get("p95_latency_s"), r.get("j_per_token"),
+                  r.get("router", "?"), r.get("bulk_format", ""))
+                 for r in doc.get("decision_grid") or []
+                 if isinstance(r, dict)]
+    carbon = [(r.get("chat_p95_latency_s"), r.get("gco2_per_token"),
+               r.get("router", "?"),
+               f"{r.get('signal', '')}"
+               f"{'+defer' if r.get('deferral') else ''}")
+              for r in doc.get("carbon_grid") or []
+              if isinstance(r, dict)]
+    disagg = [(r.get("interactive_p95_ttft_s"), r.get("j_per_token"),
+               r.get("mode", "?"),
+               f"{r.get('router', '')}·{r.get('interactive_share', '')}")
+              for r in doc.get("disagg_grid") or []
+              if isinstance(r, dict) and r.get("kind") != "headline"]
+    return [
+        Panel("Fleet: policy x router", "p95 latency (s)", "J / token",
+              fleet),
+        Panel("Decisions: format x router", "p95 latency (s)", "J / token",
+              decisions),
+        Panel("Carbon: signal x deferral x router",
+              "chat p95 latency (s)", "gCO2e / token", carbon),
+        Panel("Admission: disaggregation x priority mix",
+              "interactive p95 TTFT (s)", "J / token", disagg),
+    ]
+
+
+def render(doc) -> str:
+    panels = build_panels(doc)
+    cols = 2
+    rows = (len(panels) + cols - 1) // cols
+    W = cols * PANEL_W + (cols + 1) * GAP
+    H = rows * PANEL_H + (rows + 1) * GAP + 24
+    out = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{W}" '
+        f'height="{H}" viewBox="0 0 {W} {H}" '
+        'font-family="system-ui, -apple-system, sans-serif">',
+        f'<rect width="{W}" height="{H}" fill="{SURFACE}"/>',
+        f'<text x="{GAP}" y="22" fill="{INK}" font-size="15" '
+        'font-weight="700">Green-serving frontier — every grid in '
+        'BENCH_serving.json</text>',
+    ]
+    for i, panel in enumerate(panels):
+        ox = GAP + (i % cols) * (PANEL_W + GAP)
+        oy = 24 + GAP + (i // cols) * (PANEL_H + GAP)
+        out.append(panel.svg(ox, oy))
+    out.append("</svg>")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--out", default="BENCH_frontier.svg")
+    ns = ap.parse_args(argv)
+    try:
+        with open(ns.json) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {ns.json}: {e}", file=sys.stderr)
+        return 1
+    svg = render(doc)
+    with open(ns.out, "w") as f:
+        f.write(svg)
+    n_pts = sum(len(p.points) for p in build_panels(doc))
+    print(f"# wrote {ns.out} ({n_pts} cells across 4 grids)",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,12 +43,19 @@ class DeferralSpec:
     sample step and the release cadence when the fleet has no autoscaler
     window of its own; ``margin_s + service_margin * measured_service_time``
     is backed off the deadline to absorb queueing at the release instant.
+
+    ``valley_tolerance`` keeps planning herd-safe on recorded traces: the
+    plan takes the *earliest* instant within that relative band of the
+    window minimum, so a long flat valley is entered at its start instead
+    of every deferrable request stampeding a marginally-deeper minimum at
+    the far edge of its slack (where a queueing herd breaks deadlines).
     """
 
     enabled: bool = False
     window_s: float = 0.25
     margin_s: float = 0.5
     service_margin: float = 4.0
+    valley_tolerance: float = 0.10
 
     def problems(self) -> Sequence[Tuple[str, str]]:
         out = []
@@ -59,6 +66,9 @@ class DeferralSpec:
         if self.service_margin < 0:
             out.append(("service_margin",
                         f"must be >= 0, got {self.service_margin}"))
+        if self.valley_tolerance < 0:
+            out.append(("valley_tolerance",
+                        f"must be >= 0, got {self.valley_tolerance}"))
         return out
 
 
@@ -90,7 +100,9 @@ class TemporalShifter:
             service_time_s, 0.0)
         latest = max(req.arrival_s, req.deadline_s - margin)
         return self.signal.lowest_window_t(req.arrival_s, latest,
-                                           self.spec.window_s)
+                                           self.spec.window_s,
+                                           tolerance=self.spec
+                                           .valley_tolerance)
 
     def defer(self, endpoint: str, req: Request,
               service_time_s: float) -> float:

@@ -62,21 +62,32 @@ class CarbonSignal:
         mid = 0.5 * (t0_s + t1_s)
         return energy_j / J_PER_KWH * self.intensity(mid)
 
-    def lowest_window_t(self, t0_s: float, t1_s: float,
-                        step_s: float) -> float:
-        """Earliest time in ``[t0_s, t1_s]`` with the minimum sampled
+    def lowest_window_t(self, t0_s: float, t1_s: float, step_s: float,
+                        tolerance: float = 0.0) -> float:
+        """Earliest time in ``[t0_s, t1_s]`` with (near-)minimum sampled
         intensity — the planning primitive for temporal shifting (defer
-        work into the valley instead of serving it on the peak)."""
+        work into the valley instead of serving it on the peak).
+
+        ``tolerance`` is a relative band above the window minimum: the
+        earliest sample within ``min * (1 + tolerance)`` wins.  A long flat
+        valley is then entered at its *start*, and a marginally-deeper
+        minimum at the far edge of the window (where deadline slack — and
+        queueing room — has run out) never outweighs the earlier,
+        nearly-as-clean instant.  ``tolerance=0`` is the strict minimum.
+        """
         if t1_s <= t0_s or step_s <= 0:
             return t0_s
-        best_t, best_i = t0_s, self.intensity(t0_s)
+        samples = [(t0_s, self.intensity(t0_s))]
         n = int(math.floor((t1_s - t0_s) / step_s))
         for k in range(1, n + 1):
             t = min(t0_s + k * step_s, t1_s)
-            i = self.intensity(t)
-            if i < best_i - 1e-12:
-                best_t, best_i = t, i
-        return best_t
+            samples.append((t, self.intensity(t)))
+        best_i = min(i for _, i in samples)
+        cut = best_i * (1.0 + max(tolerance, 0.0)) + 1e-12
+        for t, i in samples:
+            if i <= cut:
+                return t
+        return samples[0][0]
 
 
 @dataclasses.dataclass(frozen=True)

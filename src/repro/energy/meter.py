@@ -13,6 +13,16 @@ distinguishes the two power bins that matter for green serving decisions:
     arrivals, autoscaled replicas sitting warm); billed at the idle power and
     charged to the endpoint, not to any request.
 
+Two further buckets price the admission-layer tactics (PR 5) so their cost is
+visible instead of smeared into active/idle:
+
+  * **preempt** seconds — pause/resume overhead when a latency-critical
+    dispatch preempts an in-flight decode batch (the KV save/restore work);
+    billed at the active power, charged to the endpoint;
+  * **xfer** seconds — KV-cache handoff between disaggregated prefill and
+    decode pools; billed at the *link's* power (the joules are accumulated,
+    not derived from seconds, because the link power is not the replica's).
+
 Every joule is also billed in **grams of CO2e** through a
 :class:`repro.carbon.signal.CarbonSignal` — billed at the virtual time the
 energy was drawn (``t_s`` on every recording call), so the same joules cost
@@ -21,9 +31,11 @@ without an explicit signal uses the constant IEA-average signal, which
 reproduces the old static ``J -> g`` conversion exactly.
 
 Conservation invariants (tested): the per-request attribution always sums to
-the active energy, ``total_j == active_j + idle_j`` — and identically in
-grams: ``sum(per_request_g) == active_g`` and ``total_g ==
-active_g + idle_g``, preserved across :meth:`merge` / :func:`absorb_part`.
+the active energy, ``total_j == active_j + idle_j + preempt_j + xfer_j`` —
+and identically in grams: ``sum(per_request_g) == active_g`` and ``total_g ==
+active_g + idle_g + preempt_g + xfer_g``, preserved across :meth:`merge` /
+:func:`absorb_part` (a meter that never preempts or hands off has zero in
+both new buckets, reproducing the old two-bucket identities exactly).
 """
 
 from __future__ import annotations
@@ -87,6 +99,16 @@ class EnergyMeter:
     # preserve them absolutely across meters with different signals/zones
     active_g: float = 0.0
     idle_g: float = 0.0
+    # admission-layer buckets: preemption pause/resume overhead and KV-cache
+    # handoff transfers.  Joules are accumulated (xfer bills at the link's
+    # power, not this meter's), grams at the drawing instant like everything
+    # else; both survive merge/absorb verbatim
+    preempt_s: float = 0.0
+    preempt_j: float = 0.0
+    preempt_g: float = 0.0
+    xfer_s: float = 0.0
+    xfer_j: float = 0.0
+    xfer_g: float = 0.0
     total_tokens: int = 0
     per_request_j: Dict[int, float] = dataclasses.field(default_factory=dict)
     per_request_g: Dict[int, float] = dataclasses.field(default_factory=dict)
@@ -177,6 +199,33 @@ class EnergyMeter:
         self.idle_g += self._grams(dur_s * self.idle_power_w, t_s, dur_s)
         return dur_s * self.idle_power_w
 
+    def record_preempt(self, dur_s: float,
+                       t_s: Optional[float] = None) -> float:
+        """Bill pause/resume overhead of an in-replica preemption: the
+        engine is busy saving/restoring state, so the seconds draw active
+        power — but they belong to the *tactic*, not to any request."""
+        if dur_s <= 0:
+            return 0.0
+        j = dur_s * self.active_power_w
+        self.preempt_s += dur_s
+        self.preempt_j += j
+        self.preempt_g += self._grams(j, t_s, dur_s)
+        return j
+
+    def record_xfer(self, dur_s: float, power_w: float,
+                    t_s: Optional[float] = None) -> float:
+        """Bill a KV-cache handoff: ``dur_s`` on the link at the *link's*
+        power.  The transfer overlaps the replica's own timeline (the link
+        streams while the replica serves on), so these seconds are extra
+        energy, never replica busy-time."""
+        if dur_s <= 0:
+            return 0.0
+        j = dur_s * power_w
+        self.xfer_s += dur_s
+        self.xfer_j += j
+        self.xfer_g += self._grams(j, t_s, dur_s)
+        return j
+
     def merge(self, other: "EnergyMeter",
               source: Optional[str] = None) -> "EnergyMeter":
         """Fold ``other`` into this meter.
@@ -203,6 +252,14 @@ class EnergyMeter:
             self.idle_s += other.idle_s
         self.active_g += other.active_g
         self.idle_g += other.idle_g
+        # admission buckets carry over verbatim (joules AND grams were
+        # already priced at the contributor's own power/zone/time)
+        self.preempt_s += other.preempt_s
+        self.preempt_j += other.preempt_j
+        self.preempt_g += other.preempt_g
+        self.xfer_s += other.xfer_s
+        self.xfer_j += other.xfer_j
+        self.xfer_g += other.xfer_g
         self.total_tokens += other.total_tokens
         for rid, j in other.per_request_j.items():
             self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + j
@@ -212,26 +269,39 @@ class EnergyMeter:
             for src, d in other.by_source.items():
                 self._add_source(src, d["active_s"], d["idle_s"],
                                  d["active_j"], d["idle_j"],
-                                 d.get("active_g", 0.0), d.get("idle_g", 0.0))
+                                 d.get("active_g", 0.0), d.get("idle_g", 0.0),
+                                 d.get("preempt_j", 0.0),
+                                 d.get("preempt_g", 0.0),
+                                 d.get("xfer_j", 0.0), d.get("xfer_g", 0.0))
         elif source is not None:
             self._add_source(source, other.active_s, other.idle_s,
                              other.active_j, other.idle_j,
-                             other.active_g, other.idle_g)
+                             other.active_g, other.idle_g,
+                             other.preempt_j, other.preempt_g,
+                             other.xfer_j, other.xfer_g)
         return self
 
     def _add_source(self, source: str, active_s: float, idle_s: float,
                     active_j: float, idle_j: float,
-                    active_g: float = 0.0, idle_g: float = 0.0) -> None:
+                    active_g: float = 0.0, idle_g: float = 0.0,
+                    preempt_j: float = 0.0, preempt_g: float = 0.0,
+                    xfer_j: float = 0.0, xfer_g: float = 0.0) -> None:
         d = self.by_source.setdefault(
             source, {"active_s": 0.0, "idle_s": 0.0,
                      "active_j": 0.0, "idle_j": 0.0,
-                     "active_g": 0.0, "idle_g": 0.0})
+                     "active_g": 0.0, "idle_g": 0.0,
+                     "preempt_j": 0.0, "preempt_g": 0.0,
+                     "xfer_j": 0.0, "xfer_g": 0.0})
         d["active_s"] += active_s
         d["idle_s"] += idle_s
         d["active_j"] += active_j
         d["idle_j"] += idle_j
         d["active_g"] += active_g
         d["idle_g"] += idle_g
+        d["preempt_j"] += preempt_j
+        d["preempt_g"] += preempt_g
+        d["xfer_j"] += xfer_j
+        d["xfer_g"] += xfer_g
 
     # -- accounting -----------------------------------------------------------
     @property
@@ -244,11 +314,11 @@ class EnergyMeter:
 
     @property
     def total_j(self) -> float:
-        return self.active_j + self.idle_j
+        return self.active_j + self.idle_j + self.preempt_j + self.xfer_j
 
     @property
     def total_g(self) -> float:
-        return self.active_g + self.idle_g
+        return self.active_g + self.idle_g + self.preempt_g + self.xfer_g
 
     @property
     def energy_per_token_j(self) -> float:
@@ -278,6 +348,13 @@ class EnergyMeter:
             # grams/token sits at 1e-6..1e-5: 9 decimals keeps ~4 sig figs
             "g_per_token": round(self.g_per_token, 9),
         }
+        if self.preempt_s or self.xfer_s:
+            d["preempt_s"] = round(self.preempt_s, 6)
+            d["preempt_j"] = round(self.preempt_j, 6)
+            d["preempt_g"] = round(self.preempt_g, 9)
+            d["xfer_s"] = round(self.xfer_s, 6)
+            d["xfer_j"] = round(self.xfer_j, 6)
+            d["xfer_g"] = round(self.xfer_g, 9)
         if self.by_source:
             d["by_source"] = {
                 src: {k: round(v, 6) for k, v in split.items()}

@@ -37,6 +37,17 @@ exactly what the spec describes), and ``AutoscaleSpec.calendar`` pre-warms
 replicas ahead of forecast ramps.  ``benchmarks/bench_carbon`` sweeps
 signal x deferral x router from exactly these fields.
 
+As of PR 5 the *admission* decisions are spec data too: a
+:class:`~repro.serving.admission.priority.PrioritySpec` declares the
+interactive > standard > batch ladder (priority-ordered backlogs, in-replica
+preemption with pause/resume billed to the meter's ``preempt`` bucket),
+``SLOClass.priority`` names each class's rung, and each endpoint can declare
+a :class:`~repro.serving.admission.disagg.DisaggSpec` — separate prefill and
+decode replica pools with a modeled KV-cache handoff (``xfer`` bucket) —
+all sweepable (``priority.preempt``, ``endpoints.*.disagg.enabled``).
+``benchmarks/bench_disagg`` charts disaggregation x priority-mix x router
+from exactly these fields.
+
 Validation is eager and names the offending field: every constraint violation
 raises :class:`SpecError` with a ``endpoints[name].field`` style path.
 
@@ -68,10 +79,17 @@ from repro.core.add import (
 from repro.core.engines import CompiledEngine, EagerEngine, Engine
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
 from repro.serving import container as td1
+from repro.serving.admission.disagg import DisaggRuntime, DisaggSpec
+from repro.serving.admission.priority import PRIORITY_LEVELS, PrioritySpec
 from repro.serving.fleet import ROUTERS, Autoscaler, FleetResult, ReplicaFleet
 from repro.serving.fleet import EndpointSpec as FleetEndpoint
 from repro.serving.request import Request, ServingMetrics
-from repro.serving.scheduler import POLICIES, make_policy
+from repro.serving.scheduler import (
+    POLICIES,
+    DecodePhasePolicy,
+    PrefillPhasePolicy,
+    make_policy,
+)
 from repro.serving.stepcache import StepTimeCache, calibrate, shape_bucket
 from repro.workload.calendar import TrafficCalendar
 from repro.workload.generators import WorkloadSpec
@@ -130,10 +148,17 @@ class SLOClass:
     arrival + deadline_s), which makes the request deferrable — the carbon
     shifter may hold it for a low-carbon window (``ServingSpec.deferral``).
     ``None`` for both means best-effort, serve-on-arrival.
+
+    ``priority`` names the admission class every request submitted under
+    this SLO class belongs to (``interactive`` > ``standard`` > ``batch``):
+    under a :class:`~repro.serving.admission.priority.PrioritySpec` ladder,
+    backlogged queues serve urgent classes first and an interactive arrival
+    may preempt an in-flight lower-priority decode batch.
     """
 
     slo_ms: Optional[float] = None
     deadline_s: Optional[float] = None
+    priority: Optional[str] = None
 
     def validate(self, path: str) -> None:
         if self.slo_ms is not None:
@@ -142,6 +167,10 @@ class SLOClass:
         if self.deadline_s is not None:
             _check(self.deadline_s > 0, f"{path}.deadline_s",
                    f"deadline must be > 0 s, got {self.deadline_s}")
+        if self.priority is not None:
+            _check(self.priority in PRIORITY_LEVELS, f"{path}.priority",
+                   f"unknown priority class {self.priority!r}; "
+                   f"known: {sorted(PRIORITY_LEVELS)}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,6 +197,12 @@ class AutoscaleSpec:
     # horizon, pre-warming replicas ahead of predicted ramps; () = purely
     # reactive (the PR-2 behavior)
     calendar: Tuple[Tuple[float, float], ...] = ()
+    # carbon-biased scale-down: > 0 shrinks this endpoint's pool harder
+    # when the grid's current intensity runs above its trailing window
+    # mean — desired /= (1 + carbon_bias * (intensity/mean - 1)).  The
+    # traffic calendar pre-warms for *load*; this knob leans the same
+    # scaler against the *carbon* forecast (both share the virtual clock)
+    carbon_bias: float = 0.0
 
     def __post_init__(self):
         object.__setattr__(
@@ -194,6 +229,8 @@ class AutoscaleSpec:
                f"must be >= 0, got {self.cold_start_s}")
         _check(self.down_windows >= 1, f"{path}.down_windows",
                f"must be >= 1, got {self.down_windows}")
+        _check(self.carbon_bias >= 0, f"{path}.carbon_bias",
+               f"must be >= 0, got {self.carbon_bias}")
         ts = [t for t, _ in self.calendar]
         _check(all(b > a for a, b in zip(ts, ts[1:])), f"{path}.calendar",
                f"calendar times must be strictly increasing, got {ts}")
@@ -250,6 +287,10 @@ class EndpointSpec:
     # generates and serves exactly this workload, so a benchmark grid can
     # sweep traffic shape like any other decision field
     workload: Optional[WorkloadSpec] = None
+    # prefill/decode disaggregation (repro.serving.admission.disagg):
+    # enabled, the endpoint serves from fixed prefill+decode pools with a
+    # modeled KV handoff between them — sweepable like any decision field
+    disagg: DisaggSpec = DisaggSpec()
 
     def __post_init__(self):
         object.__setattr__(self, "zones", tuple(self.zones))
@@ -300,6 +341,21 @@ class EndpointSpec:
             _check(self.autoscale.max_replicas <= 1,
                    f"{path}.autoscale.max_replicas",
                    "autoscaling replicas are an SI4 (cloud) capability")
+        _check_sub(self.disagg, f"{path}.disagg")
+        if self.disagg.enabled:
+            _check(self.si == "si4_cloud", f"{path}.disagg.enabled",
+                   "prefill/decode disaggregation is an SI4 (cloud) "
+                   "capability (separate replica pools)")
+            _check(self.policy != "continuous_batch", f"{path}.policy",
+                   "continuous batching is an in-replica loop; "
+                   "disaggregated pools use windowed phase batching")
+            # the phase split IS the provisioning decision: the windowed
+            # autoscaler does not resize disaggregated pools, so a spec
+            # declaring both would be a silent no-op — reject it eagerly
+            _check(not self.autoscale.enabled, f"{path}.autoscale.enabled",
+                   "disaggregated pools are fixed-size "
+                   "(disagg.prefill_replicas/decode_replicas); set "
+                   "autoscale.enabled=False")
         self.autoscale.validate(f"{path}.autoscale")
         for cls_name, cls in self.slo_classes.items():
             cls.validate(f"{path}.slo_classes[{cls_name}]")
@@ -322,6 +378,7 @@ class EndpointSpec:
             "protocol": self.protocol,
             "autoscale": "windowed" if self.autoscale.enabled else "fixed",
             "max_batch": self.max_batch,
+            "disagg": "prefill/decode" if self.disagg.enabled else "unified",
         }
 
 
@@ -343,6 +400,9 @@ class ServingSpec:
     # temporal shifting of deadline-carrying (batch-class) requests; the
     # default is disabled == serve-on-arrival (the pre-carbon behavior)
     deferral: DeferralSpec = DeferralSpec()
+    # the admission ladder (interactive > standard > batch) and in-replica
+    # preemption contract, fleet-wide; disabled = FIFO, never preempt
+    priority: PrioritySpec = PrioritySpec()
 
     def __post_init__(self):
         if not isinstance(self.endpoints, tuple):
@@ -383,6 +443,7 @@ class ServingSpec:
                    "zone names must be non-empty ('' is the default zone)")
             _check_sub(cs, f"carbon_zones[{zone}]")
         _check_sub(self.deferral, "deferral")
+        _check_sub(self.priority, "priority")
         for ep in self.endpoints:
             for z in ep.zones:
                 _check(z == "" or z in self.carbon_zones,
@@ -421,6 +482,9 @@ class ServingSpec:
             if e.get("workload") is not None:
                 e["workload"] = _construct(WorkloadSpec, e["workload"],
                                            f"{path}.workload")
+            if e.get("disagg") is not None:
+                e["disagg"] = _construct(DisaggSpec, e["disagg"],
+                                         f"{path}.disagg")
             eps.append(_construct(EndpointSpec, e, path))
         top = {k: v for k, v in d.items() if k != "endpoints"}
         top["endpoints"] = tuple(eps)
@@ -432,6 +496,9 @@ class ServingSpec:
         if top.get("deferral") is not None:
             top["deferral"] = _construct(DeferralSpec, top["deferral"],
                                          "deferral")
+        if top.get("priority") is not None:
+            top["priority"] = _construct(PrioritySpec, top["priority"],
+                                         "priority")
         return _construct(cls, top, "spec")
 
     @classmethod
@@ -569,6 +636,15 @@ class EndpointReport:
     # (None when the workload had no batch-class requests)
     deadline_compliance: Optional[float]
     metrics: ServingMetrics            # full object, not serialized
+    # admission-layer attribution (PR 5): preemption pause/resume overhead
+    # and KV-handoff transfer energy (zero outside those tactics)
+    j_preempt: float = 0.0
+    j_xfer: float = 0.0
+    gco2_preempt: float = 0.0
+    gco2_xfer: float = 0.0
+    # per-priority-class p95 TTFT ({} when the workload is classless)
+    ttft_p95_by_class: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def to_dict(self) -> dict:
         # field-by-field, NOT dataclasses.asdict: asdict would deep-copy
@@ -613,10 +689,15 @@ def _endpoint_report(name: str, decisions: Dict[str, object],
     by_replica = {}
     g_by_replica = {}
     if m.meter is not None:
-        by_replica = {src: round(d["active_j"] + d["idle_j"], 6)
-                      for src, d in sorted(m.meter.by_source.items())}
+        # all four buckets, so the per-replica provenance sums to the
+        # endpoint total even under preemption / KV handoffs
+        by_replica = {
+            src: round(d["active_j"] + d["idle_j"]
+                       + d.get("preempt_j", 0.0) + d.get("xfer_j", 0.0), 6)
+            for src, d in sorted(m.meter.by_source.items())}
         g_by_replica = {
-            src: round(d.get("active_g", 0.0) + d.get("idle_g", 0.0), 9)
+            src: round(d.get("active_g", 0.0) + d.get("idle_g", 0.0)
+                       + d.get("preempt_g", 0.0) + d.get("xfer_g", 0.0), 9)
             for src, d in sorted(m.meter.by_source.items())}
     g_total = m.meter.total_g if m.meter is not None else 0.0
     return EndpointReport(
@@ -648,6 +729,12 @@ def _endpoint_report(name: str, decisions: Dict[str, object],
         gco2_by_replica=g_by_replica,
         deadline_compliance=m.deadline_compliance,
         metrics=m,
+        j_preempt=m.meter.preempt_j if m.meter else 0.0,
+        j_xfer=m.meter.xfer_j if m.meter else 0.0,
+        gco2_preempt=m.meter.preempt_g if m.meter else 0.0,
+        gco2_xfer=m.meter.xfer_g if m.meter else 0.0,
+        ttft_p95_by_class={c: m.ttft_percentile(95, c)
+                           for c in m.priority_classes()},
     )
 
 
@@ -806,6 +893,12 @@ class ServingSession:
             raise SpecError("endpoints",
                             f"no endpoint named {name!r}; "
                             f"known: {sorted(self._endpoints)}")
+        for r in workload:
+            if r.priority is not None and r.priority not in PRIORITY_LEVELS:
+                raise SpecError(
+                    f"workloads[{name}]",
+                    f"request {r.rid} names unknown priority class "
+                    f"{r.priority!r}; known: {sorted(PRIORITY_LEVELS)}")
         ep: EndpointSpec = self._endpoints[name]["spec"]
         if slo_class is not None:
             if slo_class not in ep.slo_classes:
@@ -822,9 +915,12 @@ class ServingSession:
                 ddl = r.deadline_s
                 if ddl is None and cls.deadline_s is not None:
                     ddl = r.arrival_s + cls.deadline_s
-                if slo is r.slo_ms and ddl is r.deadline_s:
+                pr = cls.priority if r.priority is None else r.priority
+                if slo is r.slo_ms and ddl is r.deadline_s \
+                        and pr is r.priority:
                     return r
-                return dataclasses.replace(r, slo_ms=slo, deadline_s=ddl)
+                return dataclasses.replace(r, slo_ms=slo, deadline_s=ddl,
+                                           priority=pr)
 
             workload = [stamp(r) for r in workload]
         if service_time_hint_s is not None:
@@ -887,6 +983,17 @@ class ServingSession:
             # a frozen endpoint keeps its initial pool even when it shares
             # the timeline (and hence the fleet autoscaler) with scaled ones
             lo = hi = initial
+        disagg_rt = None
+        if ep.disagg.enabled:
+            # the phase pools batch with the endpoint's own (max_batch,
+            # timeout) rhythm; the KV payload defaults to f(seq_len, arch)
+            disagg_rt = DisaggRuntime.from_spec(
+                ep.disagg, get_arch(ep.arch),
+                prefill_policy_factory=lambda ep=ep: PrefillPhasePolicy(
+                    ep.max_batch, ep.batch_timeout_ms),
+                decode_policy_factory=lambda ep=ep: DecodePhasePolicy(
+                    ep.max_batch, ep.batch_timeout_ms),
+            )
         return FleetEndpoint(
             name=ep.name,
             zones=ep.zones,
@@ -912,6 +1019,9 @@ class ServingSession:
                             else self.spec.active_power_w),
             idle_power_w=(ep.idle_power_w if ep.idle_power_w is not None
                           else self.spec.idle_power_w),
+            admission=self.spec.priority.build(),
+            disagg=disagg_rt,
+            carbon_bias=ep.autoscale.carbon_bias,
         )
 
     def _autoscaler(self) -> Optional[Autoscaler]:

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import bisect
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -46,6 +46,7 @@ from repro.carbon.signal import CarbonSignal
 from repro.core.engines import Engine, token_landing_s
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
 from repro.energy.meter import EnergyMeter
+from repro.serving.admission.priority import AdmissionControl, priority_level
 from repro.serving.request import Request, Response, ServingMetrics
 from repro.serving.stepcache import StepTimeCache, shape_bucket, synth_tokens
 
@@ -94,13 +95,16 @@ class SchedulerCore:
                  step_cache: Optional[StepTimeCache] = None,
                  active_power_w: float = HOST_CPU_POWER_W,
                  idle_power_w: float = HOST_CPU_IDLE_POWER_W,
-                 carbon: Optional[CarbonSignal] = None):
+                 carbon: Optional[CarbonSignal] = None,
+                 admission: Optional[AdmissionControl] = None):
         self.engine = engine
         self.policy = policy
         self.step_cache = step_cache
         self.active_power_w = active_power_w
         self.idle_power_w = idle_power_w
         self.carbon = carbon
+        # priority ladder / preemption contract; None = FIFO, never preempt
+        self.admission = admission
         self._reset([])
 
     def _reset(self, workload: List[Request]) -> None:
@@ -132,6 +136,76 @@ class SchedulerCore:
 
     def has_pending(self) -> bool:
         return self._head < len(self.pending)
+
+    # -- priority-ordered admission (repro.serving.admission) -----------------
+    def _best_visible(self, t: float) -> Optional[int]:
+        """Index of the most urgent pending arrival visible by ``t``
+        ((level, arrival, rid) order), or None if nothing has arrived."""
+        best = None
+        top = None          # arrival of the first top-rung request seen
+        for idx in range(self._head, len(self.pending)):
+            r = self.pending[idx]
+            if r.arrival_s > t + 1e-12:
+                break
+            if top is not None and r.arrival_s > top + 1e-12:
+                # arrival-sorted scan: a top-rung request was found and the
+                # exact-tie window has closed — nothing later can beat it.
+                # Stops the scan going quadratic over a congested backlog
+                break
+            key = (priority_level(r.priority), r.arrival_s, r.rid)
+            if best is None or key < best[0]:
+                best = (key, idx)
+            if key[0] == 0 and top is None:
+                top = r.arrival_s
+        return None if best is None else best[1]
+
+    def peek_next(self, visible_t: Optional[float] = None) -> Optional[Request]:
+        """The request :meth:`pop_next` would return, without removing it."""
+        nxt = self.peek()
+        if self.admission is None or nxt is None:
+            return nxt
+        t = visible_t if visible_t is not None \
+            else max(self.clock, nxt.arrival_s)
+        i = self._best_visible(t)
+        return nxt if i is None else self.pending[i]
+
+    def pop_next(self, visible_t: Optional[float] = None) -> Request:
+        """FIFO pop — unless an admission ladder is configured, in which
+        case the most urgent request among those arrived by ``visible_t``
+        (default: the head arrival's instant) is popped first.  With no
+        backlog this degenerates to FIFO, so enabling priorities on an
+        uncongested queue changes nothing."""
+        if self.admission is None:
+            return self.pop()
+        nxt = self.peek()
+        t = visible_t if visible_t is not None \
+            else max(self.clock, nxt.arrival_s)
+        i = self._best_visible(t)
+        if i is None:
+            return self.pop()
+        return self.pending.pop(i)
+
+    def _pop_preemptor(self, level: int, before_s: float) -> Optional[Request]:
+        """Remove and return the earliest pending arrival strictly more
+        urgent than ``level`` arriving strictly before ``before_s``."""
+        best = None
+        for idx in range(self._head, len(self.pending)):
+            r = self.pending[idx]
+            if r.arrival_s >= before_s:
+                break
+            if best is not None and r.arrival_s > best[0][0] + 1e-12:
+                # arrival-sorted scan: past the first preemptor's exact-tie
+                # window nothing can arrive earlier — stop
+                break
+            lv = priority_level(r.priority)
+            if lv >= level:
+                continue
+            key = (r.arrival_s, lv, r.rid)
+            if best is None or key < best[0]:
+                best = (key, idx)
+        if best is None:
+            return None
+        return self.pending.pop(best[1])
 
     def pending_within(self, t: float) -> List[Request]:
         """Queued-but-unpopped arrivals with ``arrival_s <= t`` (for SLO-aware
@@ -179,28 +253,62 @@ class SchedulerCore:
         return payload, result
 
     # -- the shared admit -> generate -> retire path --------------------------
-    def execute_generate(self, batch: List[Request], start_s: float) -> None:
-        """Dispatch ``batch`` as one uniform engine call at ``start_s``.
+    def _timed_generate(self, batch: List[Request]):
+        """Measure-or-replay one uniform generate for ``batch``; returns
+        ``(prefill_s, decode_s, result_or_None, max_new)``.
 
-        Records a Response per request with its own retirement time (the step
-        where its n-th token lands) and bills batch energy segment-wise so
-        early-retiring requests do not pay for the longest request's tail.
+        Pads to the power-of-two bucket the cache key names, so the
+        compiled executable (and its measured duration) is shared across
+        lengths.  This is the ONE home of the ``("generate", B, sb,
+        max_new)`` key convention: the disaggregated phase dispatches must
+        price against exactly the entries the unified path replays.
         """
-        self.advance_to(start_s)
-        # pad to the power-of-two bucket the cache key names, so the compiled
-        # executable (and its measured duration) is shared across lengths
         sb = shape_bucket(max(len(r.prompt) for r in batch))
         prompts = pad_prompts([r.prompt for r in batch], width=sb)
-        B = prompts.shape[0]
         max_new = max(r.max_new_tokens for r in batch)
-        key = ("generate", B, sb, max_new)
+        key = ("generate", prompts.shape[0], sb, max_new)
 
         def thunk():
             res = self.engine.generate(prompts, max_new)
             return (res.prefill_s, res.decode_s), res
 
         (prefill_s, decode_s), res = self.timed(key, thunk)
-        first_s = start_s + prefill_s
+        return prefill_s, decode_s, res, max_new
+
+    def execute_generate(self, batch: List[Request], start_s: float,
+                         _depth: int = 0) -> None:
+        """Dispatch ``batch`` as one uniform engine call at ``start_s``.
+
+        Records a Response per request with its own retirement time (the step
+        where its n-th token lands) and bills batch energy segment-wise so
+        early-retiring requests do not pay for the longest request's tail.
+
+        Under a preemptive admission ladder, a strictly-more-urgent pending
+        arrival landing inside this dispatch's decode window *pauses* it:
+        the core bills a pause overhead (``preempt`` bucket), runs the
+        urgent request as its own dispatch on the same clock, bills a resume
+        overhead, and every token of this batch landing after the pause
+        point is pushed late by exactly the interruption.  The prefill is
+        atomic (it is the unit preemption protects), and joule/gram
+        conservation holds across pauses because the batch's compute is
+        billed segment-wise at each segment's own wall instant.
+        """
+        self.advance_to(start_s)
+        prefill_s, decode_s, res, max_new = self._timed_generate(batch)
+        total = prefill_s + decode_s
+        intr = self._run_preemptions(batch, start_s, prefill_s, total, _depth)
+
+        def to_wall(c: float) -> float:
+            """Wall instant the compute offset ``c`` of this batch lands
+            (tokens landing exactly at a pause point land before it)."""
+            w = start_s + c
+            for ci, di in intr:
+                if c > ci + 1e-12:
+                    w += di
+            return w
+
+        first_s = to_wall(prefill_s)
+        done_c = {}                      # rid -> landing compute offset
         done_by_rid = {}
         n_tokens = 0
         for bi, req in enumerate(batch):
@@ -209,13 +317,160 @@ class SchedulerCore:
                 toks = np.asarray(res.tokens[bi, :n])
             else:
                 toks = synth_tokens(req.prompt, n, self.vocab)
-            done = start_s + token_landing_s(prefill_s, decode_s, max_new, n)
+            c = token_landing_s(prefill_s, decode_s, max_new, n)
+            done_c[req.rid] = c
+            done = to_wall(c)
             done_by_rid[req.rid] = done
             self.record_response(req, toks, start_s, first_s, done)
             n_tokens += n
-        self.meter.record_active_shared(start_s, done_by_rid, tokens=n_tokens)
+        if intr:
+            self._bill_preempted(start_s, done_c, intr, n_tokens)
+        else:
+            self.meter.record_active_shared(start_s, done_by_rid,
+                                            tokens=n_tokens)
         self.wall += prefill_s + decode_s
-        self.clock = start_s + prefill_s + decode_s
+        self.clock = start_s + total + sum(d for _, d in intr)
+
+    def _run_preemptions(self, batch: List[Request], start_s: float,
+                         prefill_s: float, total: float,
+                         depth: int) -> List[Tuple[float, float]]:
+        """Serve every pending strictly-more-urgent arrival landing inside
+        this dispatch; returns the inserted interruptions as
+        ``[(compute_offset_s, duration_s), ...]`` in pause order."""
+        adm = self.admission
+        if adm is None or not adm.preempt or depth >= 2 \
+                or total - prefill_s <= 1e-12:
+            return []
+        level = min(priority_level(r.priority) for r in batch)
+        if level <= 0:
+            return []                  # interactive work is never preempted
+        intr: List[Tuple[float, float]] = []
+        resume_w = start_s             # wall instant compute (re)starts
+        consumed = 0.0                 # compute consumed at resume_w
+        while len(intr) < adm.max_preemptions:
+            end_w = start_s + total + sum(d for _, d in intr)
+            pre = self._pop_preemptor(level, end_w)
+            if pre is None:
+                break
+            # pause once the preemptor has arrived — but never inside the
+            # prefill and never before the previous resume point
+            if pre.arrival_s <= resume_w:
+                pause_c = consumed
+            else:
+                pause_c = consumed + (pre.arrival_s - resume_w)
+            pause_c = min(max(pause_c, prefill_s), total)
+            pause_w = resume_w + max(pause_c - consumed, 0.0)
+            self.meter.record_preempt(adm.pause_s, t_s=pause_w)
+            sub_start = pause_w + adm.pause_s
+            # one pause absorbs the whole urgent backlog: every other
+            # more-urgent request already waiting at the pause instant
+            # rides the preempting dispatch (up to the policy's batch
+            # budget), so a flash crowd costs one interruption, not one
+            # per arrival
+            cap = getattr(self.policy, "max_batch", None) \
+                or getattr(self.policy, "num_slots", None) or 1
+            urgent = [pre]
+            while len(urgent) < cap:
+                extra_pre = self._pop_preemptor(level, sub_start)
+                if extra_pre is None:
+                    break
+                urgent.append(extra_pre)
+            # the machine is busy through the pause: move the clock without
+            # billing the gap idle (the batch's own segments cover the rest)
+            self.clock = max(self.clock, sub_start)
+            self.execute_generate(urgent, sub_start, _depth=depth + 1)
+            sub_end = self.clock
+            self.meter.record_preempt(adm.resume_s, t_s=sub_end)
+            dur = (sub_end + adm.resume_s) - pause_w
+            intr.append((pause_c, dur))
+            resume_w = pause_w + dur
+            consumed = pause_c
+        return intr
+
+    def _bill_preempted(self, start_s: float, done_c: Dict[int, float],
+                        intr: List[Tuple[float, float]],
+                        tokens: int) -> None:
+        """Segment-wise active billing for a preempted dispatch: the batch's
+        compute is cut at every retirement and pause offset; each segment is
+        billed at its own (shifted) wall instant and split across the
+        requests still resident — the preemption-aware sibling of
+        :meth:`EnergyMeter.record_active_shared`."""
+        total = max(done_c.values())
+        cuts = sorted(set(list(done_c.values())
+                          + [c for c, _ in intr] + [total]))
+
+        def gaps_before(c: float) -> float:
+            return sum(d for ci, d in intr if ci <= c + 1e-12)
+
+        t = 0.0
+        first = True
+        for c in cuts:
+            seg = c - t
+            if seg <= 1e-15:
+                t = c
+                continue
+            resident = [rid for rid, dc in done_c.items() if dc > t + 1e-12]
+            self.meter.record_active(seg, rids=resident,
+                                     tokens=tokens if first else 0,
+                                     t_s=start_s + t + gaps_before(t))
+            first = False
+            t = c
+        for rid in done_c:               # zero-compute requests: J = g = 0
+            self.meter.per_request_j.setdefault(rid, 0.0)
+            self.meter.per_request_g.setdefault(rid, 0.0)
+
+    # -- disaggregated phase dispatches (repro.serving.admission.disagg) ------
+    def execute_prefill(self, batch: List[Request], start_s: float) -> None:
+        """Prefill-pool dispatch: run only the prompt pass of ``batch``.
+
+        Produces each request's token 1 — the TTFT token — and retires the
+        prefill leg at the prefill's end; the decode pool (fed by the
+        fleet's KV handoff) owns tokens 2..n.  Billed as ``prefill_s`` of
+        active compute shared uniformly by the batch.
+        """
+        self.advance_to(start_s)
+        prefill_s, _decode_s, res, _max_new = self._timed_generate(batch)
+        end = start_s + prefill_s
+        rids = [r.rid for r in batch]
+        for bi, req in enumerate(batch):
+            if res is not None:
+                tok0 = np.asarray(res.tokens[bi, :1])
+            else:
+                tok0 = synth_tokens(req.prompt, 1, self.vocab)
+            self.record_response(req, tok0, start_s, end, end)
+        self.meter.record_active(prefill_s, rids=rids, tokens=len(batch),
+                                 t_s=start_s)
+        self.wall += prefill_s
+        self.clock = end
+
+    def execute_decode(self, batch: List[Request], start_s: float) -> None:
+        """Decode-pool dispatch: tokens 2..n of each request in ``batch``.
+
+        The decode duration comes from the same measured ``generate`` entry
+        the unified path replays, so a disaggregated run spends exactly the
+        compute a unified run would — what changes is where each phase runs
+        and what the KV handoff adds on top.
+        """
+        self.advance_to(start_s)
+        _prefill_s, decode_s, res, max_new = self._timed_generate(batch)
+        step = decode_s / max(max_new - 1, 1)
+        done_by_rid = {}
+        n_tokens = 0
+        for bi, req in enumerate(batch):
+            n = min(req.max_new_tokens, max_new)
+            if res is not None:
+                toks = np.asarray(res.tokens[bi, 1:n])
+            else:
+                toks = synth_tokens(req.prompt, n, self.vocab)[1:]
+            done = start_s + max(n - 1, 0) * step
+            done_by_rid[req.rid] = done
+            # first_token_s is the prefill leg's business; the fleet stitches
+            self.record_response(req, toks, start_s, start_s, done)
+            n_tokens += len(toks)
+        self.meter.record_active_shared(start_s, done_by_rid, tokens=n_tokens)
+        end = max(done_by_rid.values(), default=start_s)
+        self.wall += end - start_s
+        self.clock = end
 
     def record_response(self, req: Request, tokens, start_s: float,
                         first_s: float, done_s: float) -> None:
@@ -223,7 +478,7 @@ class SchedulerCore:
             Response(rid=req.rid, tokens=np.asarray(tokens, np.int32),
                      arrival_s=req.arrival_s, start_s=start_s,
                      first_token_s=first_s, done_s=done_s,
-                     deadline_s=req.deadline_s)
+                     deadline_s=req.deadline_s, priority=req.priority)
         )
         self.total_tokens += len(tokens)
 

@@ -41,6 +41,27 @@ workload subsystem):
     its cold-start horizon, so replicas are ready when a predicted ramp
     arrives instead of cold-starting inside the crowd.
 
+As of PR 5 the fleet also owns the admission layer's *where-by-phase*
+decision (the :mod:`repro.serving.admission` subsystem):
+
+  * an endpoint with a :class:`~repro.serving.admission.disagg.DisaggRuntime`
+    is **disaggregated**: its pool splits into fixed-size prefill and decode
+    pools (``name/p*`` / ``name/d*`` replicas), a request's prompt phase is
+    routed among prefill replicas, and each completed prefill mints a
+    *decode-leg* arrival for the decode pool after a modeled **KV handoff**
+    (``kv_bytes(seq_len)`` across the declared link, billed as ``xfer``
+    seconds/joules/grams on the sending replica's meter); the final response
+    stitches the two legs back together (arrival + TTFT from the prefill
+    leg, completion from the decode leg);
+  * endpoints carrying an :class:`~repro.serving.admission.priority.
+    AdmissionControl` serve backlogged queues most-urgent-first, and an
+    interactive arrival may preempt an in-flight lower-priority decode batch
+    *inside* its replica (pause/resume billed to the ``preempt`` bucket);
+  * ``carbon_bias`` shrinks an endpoint's pool harder when the grid's
+    current intensity sits above its trailing window mean — the carbon-aware
+    sibling of the utilization target (both signals share the virtual
+    clock).
+
 Simulation semantics: arrivals are processed in windows.  All arrivals of a
 window are routed (and offered to their replica's core) before any core is
 drained, so intra-window batching is exact; each core is then drained only up
@@ -54,15 +75,21 @@ in grams (tested).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
+from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.carbon.shift import DeferralSpec, TemporalShifter
 from repro.carbon.signal import CarbonSignal, ConstantSignal, J_PER_KWH
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
 from repro.energy.meter import EnergyMeter, estimate_j_per_token
+from repro.serving.admission.disagg import DisaggRuntime
+from repro.serving.admission.priority import AdmissionControl
 from repro.serving.core import SchedulerCore, SchedulingPolicy
-from repro.serving.request import Request, ServingMetrics
+from repro.serving.request import Request, Response, ServingMetrics
 from repro.serving.stepcache import StepTimeCache, shape_bucket
 from repro.workload.calendar import TrafficCalendar
 
@@ -80,11 +107,13 @@ class Replica:
     """
 
     def __init__(self, name: str, endpoint: str, core: SchedulerCore,
-                 created_s: float, ready_s: float, zone: str = ""):
+                 created_s: float, ready_s: float, zone: str = "",
+                 role: str = ""):
         self.name = name
         self.endpoint = endpoint
         self.core = core
         self.zone = zone                   # carbon zone (gram billing)
+        self.role = role                   # "" unified | "prefill" | "decode"
         self.created_s = created_s
         self.ready_s = ready_s
         self.cold_start = ready_s > created_s
@@ -315,6 +344,15 @@ class EndpointSpec:
     # expected-traffic forecast: the autoscaler pre-warms for the calendar's
     # peak rate across its cold-start horizon instead of reacting late
     calendar: Optional[TrafficCalendar] = None
+    # admission layer (PR 5): priority ladder + preemption contract shared
+    # by every core of this endpoint; None = FIFO, never preempt
+    admission: Optional[AdmissionControl] = None
+    # prefill/decode disaggregation: fixed prefill+decode pools with a
+    # modeled KV handoff; None = one unified pool running both phases
+    disagg: Optional[DisaggRuntime] = None
+    # carbon-biased scale-down: shrink the pool harder when the default
+    # grid's intensity runs above its trailing window mean (0 = off)
+    carbon_bias: float = 0.0
 
 
 @dataclasses.dataclass
@@ -343,13 +381,22 @@ class ReplicaFleet:
             self.shifter = TemporalShifter(self.carbon, deferral)
         self.specs: Dict[str, EndpointSpec] = {}
         self.replicas: List[Replica] = []
-        self._counter: Dict[str, int] = {}
+        self._counter: Dict[Tuple[str, str], int] = {}  # (endpoint, role)
         self._svc_obs: Dict[str, Tuple[float, int]] = {}  # (active_s, n_resp)
         self._down_streak: Dict[str, int] = {}  # consecutive low windows
         self.scale_events: List[dict] = []
         # [(t, {endpoint: serving replicas})] — sampled at window boundaries
         self.replica_timeline: List[Tuple[float, Dict[str, int]]] = []
         self.cold_starts = 0
+        # disaggregation state: originals awaiting their decode leg, the
+        # handoff queue (ready_s, rid, endpoint, decode-leg request), the
+        # per-prefill-replica completion cursor, and the handoff log
+        self._disagg_orig: Dict[int, Request] = {}
+        self._handoff: List[Tuple[float, int, str, Request]] = []
+        self._prefill_seen: Dict[str, int] = {}
+        self.handoff_events: List[dict] = []
+        # trailing default-grid intensity samples for carbon-biased scaling
+        self._intensity_hist: deque = deque(maxlen=64)
 
     # -- carbon zones ----------------------------------------------------------
     def zone_signal(self, zone: str) -> CarbonSignal:
@@ -363,33 +410,50 @@ class ReplicaFleet:
         if spec.name in self.specs:
             raise ValueError(f"endpoint {spec.name!r} already registered")
         self.specs[spec.name] = spec
+        if spec.disagg is not None:
+            # disaggregated pools are fixed-size: the phase split IS the
+            # provisioning decision, the windowed autoscaler skips them
+            for _ in range(spec.disagg.prefill_replicas):
+                self._spawn(spec, created_s=0.0, ready_s=0.0, role="prefill")
+            for _ in range(spec.disagg.decode_replicas):
+                self._spawn(spec, created_s=0.0, ready_s=0.0, role="decode")
+            return
         for _ in range(max(spec.initial_replicas, spec.min_replicas)):
             self._spawn(spec, created_s=0.0, ready_s=0.0)
 
     def _spawn(self, spec: EndpointSpec, created_s: float,
-               ready_s: float) -> Replica:
-        i = self._counter.get(spec.name, 0)
-        self._counter[spec.name] = i + 1
+               ready_s: float, role: str = "") -> Replica:
+        i = self._counter.get((spec.name, role), 0)
+        self._counter[(spec.name, role)] = i + 1
         cache: Optional[StepTimeCache] = None
         if spec.use_step_cache:
             cache = StepTimeCache()
             if spec.warm_cache is not None:
                 cache.seed_from(spec.warm_cache)
         zone = spec.zones[i % len(spec.zones)] if spec.zones else ""
-        core = SchedulerCore(spec.engine, spec.policy_factory(),
+        if role == "prefill":
+            factory, prefix = spec.disagg.prefill_policy_factory, "p"
+        elif role == "decode":
+            factory, prefix = spec.disagg.decode_policy_factory, "d"
+        else:
+            factory, prefix = spec.policy_factory, "r"
+        core = SchedulerCore(spec.engine, factory(),
                              step_cache=cache,
                              active_power_w=spec.active_power_w,
                              idle_power_w=spec.idle_power_w,
-                             carbon=self.zone_signal(zone))
-        rep = Replica(f"{spec.name}/r{i}", spec.name, core, created_s,
-                      ready_s, zone=zone)
+                             carbon=self.zone_signal(zone),
+                             admission=spec.admission)
+        rep = Replica(f"{spec.name}/{prefix}{i}", spec.name, core, created_s,
+                      ready_s, zone=zone, role=role)
         if rep.cold_start:
             self.cold_starts += 1
         self.replicas.append(rep)
         return rep
 
-    def endpoint_replicas(self, name: str) -> List[Replica]:
-        return [r for r in self.replicas if r.endpoint == name]
+    def endpoint_replicas(self, name: str,
+                          role: Optional[str] = None) -> List[Replica]:
+        return [r for r in self.replicas if r.endpoint == name
+                and (role is None or r.role == role)]
 
     def cold_start_s(self, spec: EndpointSpec) -> float:
         """Scale-up provisioning penalty for this endpoint: the spec's own
@@ -455,18 +519,28 @@ class ReplicaFleet:
     # -- routing ---------------------------------------------------------------
     def route(self, name: str, req: Request) -> Replica:
         t = req.arrival_s
-        pool = [r for r in self.endpoint_replicas(name) if r.serving(t)]
+        spec = self.specs[name]
+        role: Optional[str] = None
+        if spec.disagg is not None:
+            # phase-aware routing: the prompt phase goes to the prefill
+            # pool; the decode leg (minted by the KV handoff) to the decode
+            # pool.  The original is parked until its handoff fires.
+            role = "decode" if req.phase == "decode" else "prefill"
+            if req.phase != "decode":
+                self._disagg_orig[req.rid] = req
+        pool = [r for r in self.endpoint_replicas(name, role)
+                if r.serving(t)]
         if not pool:
             # every serving replica is still cold: queue on the one that
             # becomes ready first (arrival waits out the cold start)
-            pool = [r for r in self.endpoint_replicas(name)
+            pool = [r for r in self.endpoint_replicas(name, role)
                     if r.stopped_s is None and not r.draining]
             pool.sort(key=lambda r: (r.ready_s, r.name))
             pool = pool[:1]
         if not pool:
             # prefer reviving a draining replica — still provisioned and
             # warm, so cancelling its drain is free — before cold-starting
-            draining = [r for r in self.endpoint_replicas(name)
+            draining = [r for r in self.endpoint_replicas(name, role)
                         if r.stopped_s is None and r.draining]
             if draining:
                 rep = min(draining, key=lambda r: (r.backlog, r.name))
@@ -476,14 +550,60 @@ class ReplicaFleet:
             # scale-from-zero (min_replicas=0 and the pool was reclaimed):
             # the arrival itself provisions a replica and waits out its
             # cold start — the serverless corner of the SI4 trade-off
-            cold = self.cold_start_s(self.specs[name])
-            pool = [self._spawn(self.specs[name], created_s=t,
-                                ready_s=t + cold)]
+            cold = self.cold_start_s(spec)
+            pool = [self._spawn(spec, created_s=t, ready_s=t + cold,
+                                role=role or "")]
         ok = [r for r in pool if self._slo_ok(r, req, t)]
         rep = self.router.choose(self, ok or pool, req, t)
         rep.offered += 1
         rep.core.offer(req)
         return rep
+
+    # -- KV handoffs (prefill pool -> decode pool) -----------------------------
+    def _collect_handoffs(self) -> None:
+        """Turn newly completed prefills into decode-pool arrivals.
+
+        Each completed prefill leg ships its KV cache across the endpoint's
+        link: the transfer time (latency + kv_bytes/bandwidth) delays the
+        decode leg's arrival, and its seconds/joules/grams are billed to the
+        *sending* replica's meter under the ``xfer`` bucket (the link draws
+        power in parallel with the replica's own timeline)."""
+        for rep in self.replicas:
+            if rep.role != "prefill":
+                continue
+            seen = self._prefill_seen.get(rep.name, 0)
+            fresh = rep.core.responses[seen:]
+            self._prefill_seen[rep.name] = seen + len(fresh)
+            d = self.specs[rep.endpoint].disagg
+            for resp in fresh:
+                req = self._disagg_orig.pop(resp.rid, None)
+                if req is None:
+                    continue
+                if req.max_new_tokens <= 1:
+                    continue           # prefill produced the only token
+                kv = d.kv_bytes(len(req.prompt))
+                xfer_s = d.transfer_s(kv)
+                rep.core.meter.record_xfer(xfer_s, d.power_w,
+                                           t_s=resp.done_s)
+                ready = resp.done_s + xfer_s
+                leg = dataclasses.replace(req, arrival_s=ready,
+                                          phase="decode", kv_bytes=kv)
+                heapq.heappush(self._handoff,
+                               (ready, req.rid, rep.endpoint, leg))
+                self.handoff_events.append({
+                    "rid": req.rid, "endpoint": rep.endpoint,
+                    "from": rep.name, "kv_bytes": kv,
+                    "xfer_s": xfer_s, "ready_s": ready,
+                })
+
+    def _release_handoffs(self, before_s: float) -> int:
+        """Route every decode leg whose KV landed before ``before_s``."""
+        n = 0
+        while self._handoff and self._handoff[0][0] < before_s:
+            _, _, name, leg = heapq.heappop(self._handoff)
+            self.route(name, leg)
+            n += 1
+        return n
 
     # -- the shared-timeline run ----------------------------------------------
     def _defers(self, req: Request) -> bool:
@@ -528,8 +648,8 @@ class ReplicaFleet:
         self.replica_timeline.append((0.0, self._serving_counts()))
         i = 0
         t_end = window_s
-        while i < len(events) or (self.shifter is not None
-                                  and self.shifter.pending):
+        while i < len(events) or self._handoff \
+                or (self.shifter is not None and self.shifter.pending):
             window_arrivals: Dict[str, int] = {}
             while i < len(events) and events[i][0] < t_end:
                 _, name, req = events[i]
@@ -545,20 +665,25 @@ class ReplicaFleet:
                 for name, req in self.shifter.release_due(t_end):
                     self.route(name, req)
                     window_arrivals[name] = window_arrivals.get(name, 0) + 1
+            self._release_handoffs(t_end)
             self._drain_window(t_end)
-            more = i < len(events) or (self.shifter is not None
-                                       and self.shifter.pending)
+            # completed prefills mint decode-pool arrivals for next window
+            self._collect_handoffs()
+            more = i < len(events) or self._handoff \
+                or (self.shifter is not None and self.shifter.pending)
             self._observe_and_scale(t_end, window_arrivals, window_s,
                                     more_events=more)
             if not more:
                 break
-            # the next busy instant: an arrival, a planned release, or a
-            # calendar pre-warm decision — never skip past any of them
+            # the next busy instant: an arrival, a planned release, a due
+            # KV handoff, or a calendar pre-warm — never skip past any
             pending = []
             if i < len(events):
                 pending.append(events[i][0])
             if self.shifter is not None and self.shifter.pending:
                 pending.append(self.shifter.next_release_s())
+            if self._handoff:
+                pending.append(self._handoff[0][0])
             prewarm = self._next_prewarm_s(t_end, window_s)
             if prewarm is not None and prewarm < min(pending):
                 pending.append(max(prewarm, t_end))
@@ -574,12 +699,20 @@ class ReplicaFleet:
                     self._observe_and_scale(t_empty, {}, window_s,
                                             more_events=True)
             t_end = max(next_end, t_end + window_s)
-        # drain everything that is still in flight to completion
+        # drain everything still in flight to completion; disaggregated
+        # prefills keep minting decode-pool arrivals, so iterate until the
+        # handoff queue runs dry
+        while True:
+            for rep in self.replicas:
+                if rep.stopped_s is None:
+                    rep.core.drain_until()
+            self._collect_handoffs()
+            if not self._handoff:
+                break
+            self._release_handoffs(float("inf"))
         for rep in self.replicas:
-            if rep.stopped_s is None:
-                rep.core.drain_until()
-                if rep.draining:
-                    self._stop(rep)
+            if rep.stopped_s is None and rep.draining:
+                self._stop(rep)
         return self._finalize()
 
     def _drain_window(self, t_end: float) -> None:
@@ -614,6 +747,13 @@ class ReplicaFleet:
                            window_s: float, more_events: bool) -> None:
         if self.autoscaler is None:
             return
+        # carbon-biased scale-down: compare the default grid's intensity at
+        # this boundary against its trailing mean (both live on the shared
+        # virtual clock, so "now vs. the recent past" is well defined)
+        intensity = self.carbon.intensity(t_end)
+        self._intensity_hist.append(intensity)
+        mean_intensity = (sum(self._intensity_hist)
+                          / len(self._intensity_hist))
         for name, spec in self.specs.items():
             pool = [r for r in self.endpoint_replicas(name)
                     if r.stopped_s is None]
@@ -625,6 +765,8 @@ class ReplicaFleet:
             live = [r for r in pool if not r.draining]
             if not more_events:
                 continue                   # tail: just drain what exists
+            if spec.disagg is not None:
+                continue                   # disaggregated pools are fixed
             forecast = 0.0
             if spec.calendar is not None:
                 # pre-warm: provision for the predicted peak across the
@@ -636,6 +778,15 @@ class ReplicaFleet:
                 window_arrivals.get(name, 0), window_s,
                 self.service_time_s(name), spec.min_replicas,
                 spec.max_replicas, forecast_rate_per_s=forecast)
+            if spec.carbon_bias > 0 and mean_intensity > 0 \
+                    and intensity > mean_intensity:
+                # the grid is dirtier than it has recently been: accept a
+                # higher utilization target for now and shrink harder — the
+                # joules this window defers land in cleaner air
+                over = intensity / mean_intensity - 1.0
+                desired = max(spec.min_replicas,
+                              math.ceil(desired
+                                        / (1.0 + spec.carbon_bias * over)))
             if desired > len(live):
                 self._down_streak[name] = 0
                 need = desired - len(live)
@@ -692,8 +843,12 @@ class ReplicaFleet:
             uptime = rep.stopped_s - rep.created_s
             meter = rep.core.meter
             # the unaccounted residual is the provisioned tail after the
-            # replica's last piece of work — bill its grams there
-            meter.record_idle(uptime - meter.active_s - meter.idle_s,
+            # replica's last piece of work — bill its grams there.  Preempt
+            # seconds occupied the replica (pause/resume work), so they
+            # count against uptime; xfer seconds do not (the link streams
+            # in parallel with the replica's own timeline)
+            meter.record_idle(uptime - meter.active_s - meter.idle_s
+                              - meter.preempt_s,
                               t_s=rep.core.clock)
 
         endpoints: Dict[str, ServingMetrics] = {}
@@ -703,13 +858,16 @@ class ReplicaFleet:
             reps = self.endpoint_replicas(name)
             meter = EnergyMeter()
             responses, wall, tokens = [], 0.0, 0
-            for rep in reps:
-                m = rep.core.finish()
-                responses.extend(m.responses)
+            finished = [(rep, rep.core.finish()) for rep in reps]
+            for rep, m in finished:
                 wall += m.wall_compute_s
                 tokens += m.total_tokens
                 meter.merge(m.meter, source=rep.name)
                 fleet_meter.merge(m.meter, source=rep.name)
+            if self.specs[name].disagg is not None:
+                responses = self._stitch_disagg(finished)
+            else:
+                responses = [r for _, m in finished for r in m.responses]
             responses.sort(key=lambda r: r.rid)
             stats = self._stats(reps, endpoint=name)
             endpoints[name] = ServingMetrics(
@@ -724,6 +882,35 @@ class ReplicaFleet:
                                all_tokens, meter=fleet_meter,
                                fleet=fleet_stats)
         return FleetResult(endpoints=endpoints, fleet=fleet)
+
+    @staticmethod
+    def _stitch_disagg(finished: List[Tuple[Replica, ServingMetrics]]
+                       ) -> List[Response]:
+        """Rejoin each request's prefill and decode legs into one response:
+        arrival/start/TTFT come from the prefill leg (that is where the
+        first token was produced), completion and the remaining tokens from
+        the decode leg.  A request whose prefill produced its only token
+        has no decode leg and passes through unchanged."""
+        pre: Dict[int, Response] = {}
+        dec: Dict[int, Response] = {}
+        for rep, m in finished:
+            side = pre if rep.role == "prefill" else dec
+            for r in m.responses:
+                side[r.rid] = r
+        out = []
+        for rid, p in pre.items():
+            q = dec.get(rid)
+            if q is None:
+                out.append(p)
+                continue
+            toks = np.concatenate([p.tokens, q.tokens]) if len(q.tokens) \
+                else p.tokens
+            out.append(Response(
+                rid=rid, tokens=toks, arrival_s=p.arrival_s,
+                start_s=p.start_s, first_token_s=p.first_token_s,
+                done_s=q.done_s, deadline_s=p.deadline_s,
+                priority=p.priority))
+        return out
 
     def _stats(self, reps: List[Replica],
                endpoint: Optional[str] = None) -> dict:
@@ -751,4 +938,12 @@ class ReplicaFleet:
             stats["zones"] = {r.name: r.zone for r in reps}
         if self.shifter is not None:
             stats["deferral"] = self.shifter.summary(endpoint)
+        handoffs = [e for e in self.handoff_events
+                    if endpoint is None or e["endpoint"] == endpoint]
+        if handoffs:
+            stats["handoffs"] = {
+                "count": len(handoffs),
+                "kv_bytes": sum(e["kv_bytes"] for e in handoffs),
+                "xfer_s": sum(e["xfer_s"] for e in handoffs),
+            }
         return stats

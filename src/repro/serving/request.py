@@ -25,6 +25,18 @@ class Request:
     # shifter may hold it for a low-carbon window and release it with
     # enough slack to finish in time (repro.carbon.shift)
     deadline_s: Optional[float] = None
+    # admission priority class ("interactive" | "standard" | "batch";
+    # None = standard): under a PrioritySpec ladder, backlogged queues pop
+    # urgent work first and an interactive arrival may preempt an in-flight
+    # lower-priority decode batch (repro.serving.admission)
+    priority: Optional[str] = None
+    # two-phase lifecycle state for disaggregated serving: "full" is the
+    # unified world; the fleet re-stamps the decode-pool leg to "decode"
+    # after the prefill pool hands the KV cache off
+    phase: str = "full"
+    # KV-cache payload this request's handoff moved (stamped by the fleet
+    # on the decode leg; 0 for unified serving)
+    kv_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -36,6 +48,7 @@ class Response:
     first_token_s: float               # TTFT point
     done_s: float
     deadline_s: Optional[float] = None   # copied from the request
+    priority: Optional[str] = None       # copied from the request
 
     @property
     def latency_s(self) -> float:
@@ -74,12 +87,34 @@ class ServingMetrics:
         )
         return self.total_tokens / max(span, 1e-9)
 
-    def latency_percentile(self, p: float) -> float:
-        lats = sorted(r.latency_s for r in self.responses)
-        if not lats:
+    @staticmethod
+    def _percentile(vals: List[float], p: float) -> float:
+        vals = sorted(vals)
+        if not vals:
             return 0.0
-        i = min(int(p / 100 * len(lats)), len(lats) - 1)
-        return lats[i]
+        i = min(int(p / 100 * len(vals)), len(vals) - 1)
+        return vals[i]
+
+    def latency_percentile(self, p: float,
+                           priority: Optional[str] = None) -> float:
+        """End-to-end latency percentile, optionally restricted to one
+        priority class."""
+        return self._percentile([r.latency_s for r in self.responses
+                                 if priority is None
+                                 or r.priority == priority], p)
+
+    def ttft_percentile(self, p: float,
+                        priority: Optional[str] = None) -> float:
+        """TTFT percentile, optionally restricted to one priority class —
+        the admission layer's headline is the *interactive* p95 TTFT."""
+        return self._percentile([r.ttft_s for r in self.responses
+                                 if priority is None
+                                 or r.priority == priority], p)
+
+    def priority_classes(self) -> List[str]:
+        """Priority classes present among the responses (sorted)."""
+        return sorted({r.priority for r in self.responses
+                       if r.priority is not None})
 
     @property
     def mean_latency_s(self) -> float:
@@ -138,6 +173,10 @@ class ServingMetrics:
             d["gco2_per_token"] = round(self.gco2_per_token, 9)
         if self.deadline_compliance is not None:
             d["deadline_compliance"] = round(self.deadline_compliance, 6)
+        classes = self.priority_classes()
+        if classes:
+            d["ttft_p95_by_class"] = {
+                c: round(self.ttft_percentile(95, c), 6) for c in classes}
         if self.fleet is not None:
             d["fleet"] = {
                 "replicas_created": self.fleet.get("replicas_created"),

@@ -49,12 +49,19 @@ class RealTimePolicy(SchedulingPolicy):
     name = "realtime"
 
     def step(self, core: SchedulerCore) -> None:
-        req = core.pop()
+        req = core.pop_next()          # priority-ordered under backlog
         core.execute_generate([req], max(core.now, req.arrival_s))
 
 
 class DynamicBatchPolicy(SchedulingPolicy):
-    """Accumulate requests up to (max_batch, timeout) and run them together."""
+    """Accumulate requests up to (max_batch, timeout) and run them together.
+
+    Admission is priority-aware when the core carries an admission ladder:
+    the window head and its fill are popped most-urgent-first among the
+    arrivals visible inside the window (FIFO within a class, and plain FIFO
+    with no ladder).  Dispatches go through :meth:`_dispatch`, which the
+    disaggregated phase policies override to run only their phase.
+    """
 
     name = "dynamic_batch"
 
@@ -64,8 +71,12 @@ class DynamicBatchPolicy(SchedulingPolicy):
         # an admission window stays open for timeout_s past its head arrival
         self.admission_lookahead_s = self.timeout_s
 
+    def _dispatch(self, core: SchedulerCore, batch: List[Request],
+                  start_s: float) -> None:
+        core.execute_generate(batch, start_s)
+
     def _admit(self, core: SchedulerCore, max_batch: int) -> List[Request]:
-        head = core.pop()
+        head = core.pop_next()
         open_t = max(core.now, head.arrival_s)
         close_t = open_t + self.timeout_s
         batch = [head]
@@ -74,10 +85,12 @@ class DynamicBatchPolicy(SchedulingPolicy):
             and len(batch) < max_batch
             and core.peek().arrival_s <= close_t
         ):
-            batch.append(core.pop())
+            batch.append(core.pop_next(close_t))
+        # priority pops can reorder the fill, so the dispatch floor is the
+        # latest arrival in the batch, not the last-popped one
         start = max(open_t if len(batch) == max_batch else close_t,
-                    batch[-1].arrival_s)
-        core.execute_generate(batch, start)
+                    max(r.arrival_s for r in batch))
+        self._dispatch(core, batch, start)
         return batch
 
     def step(self, core: SchedulerCore) -> None:
@@ -164,7 +177,7 @@ class AdaptiveBatchPolicy(DynamicBatchPolicy):
         return best[1]
 
     def step(self, core: SchedulerCore) -> None:
-        head = core.peek()
+        head = core.peek_next()        # the request _admit will pop first
         b = self._choose(core, head)
         self.chosen.append(b)
         # feed EVERY admitted arrival into the rate estimate (one sample per
@@ -225,7 +238,7 @@ class ContinuousBatchPolicy(SchedulingPolicy):
             nxt = core.peek()
             if nxt is None or nxt.arrival_s > core.now:
                 return
-            req = core.pop()
+            req = core.pop_next(core.now)   # most urgent arrived request
             # bucket prompt length to a power of two so the compiled prefill
             # executable (and its measured duration) is reused across requests
             S = len(req.prompt)
@@ -297,6 +310,32 @@ class ContinuousBatchPolicy(SchedulingPolicy):
                     self.slot_start[s], self.slot_ttft[s], core.now,
                 )
                 self.slot_req[s] = None
+
+
+# -- disaggregated phase policies (repro.serving.admission.disagg) -------------
+
+
+class PrefillPhasePolicy(DynamicBatchPolicy):
+    """Prefill-pool batching: same (max_batch, timeout) windowing as dynamic
+    batching, but the dispatch runs only the prompt pass — the decode pool
+    owns the rest of each request after the KV handoff."""
+
+    name = "prefill_phase"
+
+    def _dispatch(self, core: SchedulerCore, batch: List[Request],
+                  start_s: float) -> None:
+        core.execute_prefill(batch, start_s)
+
+
+class DecodePhasePolicy(DynamicBatchPolicy):
+    """Decode-pool batching: windows over handed-off requests, dispatching
+    only the decode steps (tokens 2..n)."""
+
+    name = "decode_phase"
+
+    def _dispatch(self, core: SchedulerCore, batch: List[Request],
+                  start_s: float) -> None:
+        core.execute_decode(batch, start_s)
 
 
 # -- legacy scheduler shells (constructor-compatible) --------------------------

@@ -37,7 +37,8 @@ from repro.serving.request import Request
 
 def _requests(times: np.ndarray, rng: np.random.RandomState, prompt_len: int,
               max_new: int, vocab: int, rid0: int, slo_ms: Optional[float],
-              deadline_s: Optional[float]) -> List[Request]:
+              deadline_s: Optional[float],
+              priority: Optional[str] = None) -> List[Request]:
     """Stamp prompts/ids/budgets onto computed arrival instants.  Prompts
     are drawn AFTER all arrival times, one randint per request in arrival
     order — the exact RNG call sequence the legacy generator used, so seeds
@@ -51,6 +52,7 @@ def _requests(times: np.ndarray, rng: np.random.RandomState, prompt_len: int,
             slo_ms=slo_ms,
             deadline_s=(float(t) + deadline_s
                         if deadline_s is not None else None),
+            priority=priority,
         )
         for i, t in enumerate(times)
     ]
@@ -59,20 +61,22 @@ def _requests(times: np.ndarray, rng: np.random.RandomState, prompt_len: int,
 def poisson(n: int, prompt_len: int, max_new: int, vocab: int,
             rate_per_s: float, seed: int = 0, rid0: int = 0,
             slo_ms: Optional[float] = None,
-            deadline_s: Optional[float] = None) -> List[Request]:
+            deadline_s: Optional[float] = None,
+            priority: Optional[str] = None) -> List[Request]:
     """Homogeneous Poisson arrivals starting at t=0."""
     rng = np.random.RandomState(seed)
     gaps = rng.exponential(1.0 / rate_per_s, size=n)
     t = np.cumsum(gaps) - gaps[0]
     return _requests(t, rng, prompt_len, max_new, vocab, rid0, slo_ms,
-                     deadline_s)
+                     deadline_s, priority)
 
 
 def diurnal(n: int, prompt_len: int, max_new: int, vocab: int,
             base_rate_per_s: float, peak_rate_per_s: float,
             period_s: float = 60.0, phase_s: float = 0.0, seed: int = 0,
             rid0: int = 0, slo_ms: Optional[float] = None,
-            deadline_s: Optional[float] = None) -> List[Request]:
+            deadline_s: Optional[float] = None,
+            priority: Optional[str] = None) -> List[Request]:
     """Inhomogeneous Poisson arrivals with a raised-cosine daily profile.
 
     ``rate(t)`` swings between ``base_rate_per_s`` (the trough, at
@@ -97,14 +101,15 @@ def diurnal(n: int, prompt_len: int, max_new: int, vocab: int,
     t0 = times[0]
     arr = np.asarray(times) - t0
     return _requests(arr, rng, prompt_len, max_new, vocab, rid0, slo_ms,
-                     deadline_s)
+                     deadline_s, priority)
 
 
 def bursty(n: int, prompt_len: int, max_new: int, vocab: int,
            rate_per_s: float, burst_n: int, burst_every_s: float,
            burst_rate_per_s: float, phase_s: float = 0.0, seed: int = 0,
            rid0: int = 0, slo_ms: Optional[float] = None,
-           deadline_s: Optional[float] = None) -> List[Request]:
+           deadline_s: Optional[float] = None,
+           priority: Optional[str] = None) -> List[Request]:
     """Background Poisson stream + periodic flash crowds.
 
     Every ``burst_every_s`` (first crowd at ``phase_s``) a flash crowd of
@@ -125,20 +130,21 @@ def bursty(n: int, prompt_len: int, max_new: int, vocab: int,
         crowds.append(start + np.cumsum(gaps) - gaps[0])
     times = np.sort(np.concatenate([bg] + crowds))[:n]
     return _requests(times, rng, prompt_len, max_new, vocab, rid0, slo_ms,
-                     deadline_s)
+                     deadline_s, priority)
 
 
 def replay(arrivals: Sequence[float], prompt_len: int, max_new: int,
            vocab: int, seed: int = 0, rid0: int = 0,
            slo_ms: Optional[float] = None,
-           deadline_s: Optional[float] = None) -> List[Request]:
+           deadline_s: Optional[float] = None,
+           priority: Optional[str] = None) -> List[Request]:
     """Replay recorded arrival instants verbatim (sorted, zero-based)."""
     arr = np.sort(np.asarray([float(t) for t in arrivals]))
     if arr.size:
         arr = arr - arr[0]
     rng = np.random.RandomState(seed)
     return _requests(arr, rng, prompt_len, max_new, vocab, rid0, slo_ms,
-                     deadline_s)
+                     deadline_s, priority)
 
 
 # -- the declarative form ------------------------------------------------------
@@ -168,6 +174,9 @@ class WorkloadSpec:
     rid0: int = 0
     slo_ms: Optional[float] = None
     deadline_s: Optional[float] = None
+    # admission priority class stamped on every request (None = standard);
+    # the ladder vocabulary lives in repro.serving.admission.priority
+    priority: Optional[str] = None
     # diurnal
     peak_rate_per_s: float = 0.0
     period_s: float = 60.0
@@ -203,6 +212,13 @@ class WorkloadSpec:
             out.append(("slo_ms", f"must be > 0 ms, got {self.slo_ms}"))
         if self.deadline_s is not None and self.deadline_s <= 0:
             out.append(("deadline_s", f"must be > 0 s, got {self.deadline_s}"))
+        if self.priority is not None:
+            from repro.serving.admission.priority import PRIORITY_LEVELS
+
+            if self.priority not in PRIORITY_LEVELS:
+                out.append(("priority",
+                            f"unknown priority class {self.priority!r}; "
+                            f"known: {sorted(PRIORITY_LEVELS)}"))
         if self.kind == "diurnal":
             if self.rate_per_s <= 0:
                 out.append(("rate_per_s",
@@ -233,7 +249,7 @@ class WorkloadSpec:
         common = dict(prompt_len=self.prompt_len,
                       max_new=self.max_new_tokens, vocab=vocab,
                       seed=self.seed, rid0=self.rid0, slo_ms=self.slo_ms,
-                      deadline_s=self.deadline_s)
+                      deadline_s=self.deadline_s, priority=self.priority)
         if self.kind == "poisson":
             return poisson(self.n, rate_per_s=self.rate_per_s, **common)
         if self.kind == "diurnal":

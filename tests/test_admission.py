@@ -1,0 +1,510 @@
+"""Admission subsystem contract tests: priority classes, in-replica
+preemption, prefill/decode disaggregation, carbon-biased scale-down.
+
+The load-bearing invariants of the admission layer (PR 5):
+
+  * the priority ladder reorders only *backlogged* queues (FIFO within a
+    class; a ladder on an uncongested queue, or no ladder at all, is the
+    pre-admission behavior bit for bit);
+  * preemption really trades: the interactive TTFT drops, the preempted
+    batch finishes late by exactly the interruption, and the pause/resume
+    work is visible in the meter's ``preempt`` bucket;
+  * joules AND grams conserve across pauses — per-request attribution sums
+    to active, total = active + idle + preempt + xfer, and the fleet total
+    decomposes into its per-replica sources — for every policy x router
+    combo under the bursty flash-crowd workload, deterministically;
+  * disaggregated endpoints serve every request exactly once (two legs
+    stitched back into one response), the KV handoff is billed to ``xfer``
+    on the sending replica, and a slower link costs strictly more;
+  * ``AutoscaleSpec.carbon_bias`` shrinks pools harder on dirty windows
+    without dropping work;
+  * PrioritySpec / DisaggSpec round-trip through ServingSpec JSON, validate
+    eagerly with field paths, and sweep like any other decision field.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.carbon.signal import DiurnalSignal
+from repro.core.engines import GenerationResult
+from repro.serving.admission import (
+    AdmissionControl,
+    DisaggRuntime,
+    DisaggSpec,
+    PrioritySpec,
+    kv_cache_bytes,
+    priority_level,
+)
+from repro.serving.api import (
+    AutoscaleSpec,
+    EndpointSpec,
+    ServingSession,
+    ServingSpec,
+    SLOClass,
+    SpecError,
+    sweep,
+)
+from repro.serving.core import SchedulerCore
+from repro.serving.fleet import Autoscaler, ReplicaFleet
+from repro.serving.fleet import EndpointSpec as FleetEndpoint
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.scheduler import (
+    POLICIES,
+    DecodePhasePolicy,
+    DynamicBatchPolicy,
+    PrefillPhasePolicy,
+    RealTimePolicy,
+    make_policy,
+)
+from repro.workload.generators import bursty, poisson
+
+ROUTERS = ("round_robin", "least_loaded", "warmest", "greenest",
+           "carbon_aware")
+
+
+class FakeEngine:
+    """Deterministic timings, no model — admission mechanics only."""
+
+    def __init__(self, prefill_s=0.01, step_s=0.005):
+        self.prefill_s = prefill_s
+        self.step_s = step_s
+        self.cfg = type("Cfg", (), {"vocab_size": 1000})()
+
+    def generate(self, tokens, max_new):
+        B = tokens.shape[0]
+        return GenerationResult(
+            tokens=np.ones((B, max_new), np.int32),
+            prefill_s=self.prefill_s,
+            decode_s=self.step_s * (max_new - 1),
+            n_steps=max_new,
+        )
+
+
+def req(rid, arrival_s=0.0, priority=None, max_new=8, prompt_len=8):
+    return Request(rid=rid, prompt=np.arange(prompt_len, dtype=np.int32),
+                   max_new_tokens=max_new, arrival_s=arrival_s,
+                   priority=priority)
+
+
+def assert_conserved_jg(m: ServingMetrics, rel=1e-6):
+    """The PR-5 conservation contract: four buckets, both units."""
+    meter = m.meter
+    assert meter.total_j == pytest.approx(
+        meter.active_j + meter.idle_j + meter.preempt_j + meter.xfer_j,
+        rel=rel)
+    assert meter.total_g == pytest.approx(
+        meter.active_g + meter.idle_g + meter.preempt_g + meter.xfer_g,
+        rel=rel)
+    assert sum(meter.per_request_j.values()) == pytest.approx(
+        meter.active_j, rel=rel)
+    assert sum(meter.per_request_g.values()) == pytest.approx(
+        meter.active_g, rel=rel)
+    if meter.by_source:
+        by_j = sum(d["active_j"] + d["idle_j"] + d["preempt_j"] + d["xfer_j"]
+                   for d in meter.by_source.values())
+        by_g = sum(d["active_g"] + d["idle_g"] + d["preempt_g"] + d["xfer_g"]
+                   for d in meter.by_source.values())
+        assert by_j == pytest.approx(meter.total_j, rel=rel)
+        assert by_g == pytest.approx(meter.total_g, rel=rel)
+
+
+# -- the ladder ----------------------------------------------------------------
+
+
+def test_priority_levels_order():
+    assert priority_level("interactive") < priority_level("standard")
+    assert priority_level("standard") < priority_level("batch")
+    assert priority_level(None) == priority_level("standard")
+    with pytest.raises(ValueError, match="unknown priority class"):
+        priority_level("vip")
+
+
+def test_backlog_pops_most_urgent_first():
+    adm = AdmissionControl(preempt=False)
+    core = SchedulerCore(FakeEngine(), RealTimePolicy(), admission=adm)
+    wl = [req(0, 0.0, "batch"), req(1, 0.0, "standard"),
+          req(2, 0.0, "interactive")]
+    m = core.run(wl)
+    order = sorted(m.responses, key=lambda r: r.done_s)
+    assert [r.rid for r in order] == [2, 1, 0]
+
+
+def test_fifo_without_ladder_and_without_backlog():
+    # no ladder: strict FIFO even with priorities stamped
+    core = SchedulerCore(FakeEngine(), RealTimePolicy())
+    wl = [req(0, 0.0, "batch"), req(1, 0.0, "interactive")]
+    order = sorted(core.run(wl).responses, key=lambda r: r.done_s)
+    assert [r.rid for r in order] == [0, 1]
+    # ladder but no backlog (arrivals far apart): FIFO again
+    adm = AdmissionControl(preempt=False)
+    core = SchedulerCore(FakeEngine(), RealTimePolicy(), admission=adm)
+    wl = [req(0, 0.0, "batch"), req(1, 10.0, "interactive")]
+    order = sorted(core.run(wl).responses, key=lambda r: r.done_s)
+    assert [r.rid for r in order] == [0, 1]
+
+
+# -- preemption ----------------------------------------------------------------
+
+
+def preempt_workload():
+    # a long batch dispatch at t=0; an interactive request lands mid-decode
+    return [req(0, 0.0, "batch", max_new=12),
+            req(1, 0.04, "interactive", max_new=4)]
+
+
+def run_core(admission):
+    core = SchedulerCore(FakeEngine(),
+                         DynamicBatchPolicy(max_batch=1, timeout_ms=0.0),
+                         admission=admission)
+    m = core.run(preempt_workload())
+    return core, {r.rid: r for r in m.responses}, m
+
+
+def test_preemption_trades_ttft_for_batch_delay_and_bills_preempt():
+    _, fifo, _ = run_core(AdmissionControl(preempt=False))
+    adm = AdmissionControl(preempt=True, pause_s=0.002, resume_s=0.002)
+    core, pre, m = run_core(adm)
+    # the interactive request jumps the in-flight decode
+    assert pre[1].ttft_s < fifo[1].ttft_s
+    # the preempted batch pays exactly the interruption: pause + the
+    # urgent dispatch + resume
+    urgent = core.step_cache  # unused; duration comes from the fake engine
+    intr = adm.pause_s + (0.01 + 0.005 * 3) + adm.resume_s
+    assert pre[0].done_s == pytest.approx(fifo[0].done_s + intr)
+    # pause/resume work is visible in the preempt bucket
+    assert core.meter.preempt_s == pytest.approx(adm.pause_s + adm.resume_s)
+    assert core.meter.preempt_j > 0
+    assert_conserved_jg(m)
+
+
+def test_preemption_never_pauses_prefill():
+    # the interactive request arrives DURING the batch's prefill: the pause
+    # lands exactly at the prefill boundary, so the batch's first token is
+    # unshifted
+    adm = AdmissionControl(preempt=True, pause_s=0.001, resume_s=0.001)
+    core = SchedulerCore(FakeEngine(prefill_s=0.05),
+                         DynamicBatchPolicy(max_batch=1, timeout_ms=0.0),
+                         admission=adm)
+    wl = [req(0, 0.0, "batch", max_new=8), req(1, 0.01, "interactive",
+                                               max_new=2)]
+    m = core.run(wl)
+    by = {r.rid: r for r in m.responses}
+    assert by[0].first_token_s == pytest.approx(0.05)
+    # and the urgent dispatch starts right after prefill + pause
+    assert by[1].start_s == pytest.approx(0.05 + adm.pause_s)
+    assert_conserved_jg(m)
+
+
+def test_interactive_work_is_never_preempted():
+    adm = AdmissionControl(preempt=True)
+    core = SchedulerCore(FakeEngine(),
+                         DynamicBatchPolicy(max_batch=1, timeout_ms=0.0),
+                         admission=adm)
+    wl = [req(0, 0.0, "interactive", max_new=12),
+          req(1, 0.02, "interactive", max_new=2)]
+    m = core.run(wl)
+    assert core.meter.preempt_s == 0.0
+    by = {r.rid: r for r in m.responses}
+    assert by[1].start_s >= by[0].done_s  # plain FIFO, no pause
+
+
+def test_max_preemptions_caps_interruptions():
+    adm = AdmissionControl(preempt=True, max_preemptions=1)
+    core = SchedulerCore(FakeEngine(),
+                         DynamicBatchPolicy(max_batch=1, timeout_ms=0.0),
+                         admission=adm)
+    wl = [req(0, 0.0, "batch", max_new=12),
+          req(1, 0.02, "interactive", max_new=2),
+          req(2, 0.03, "interactive", max_new=2)]
+    core.run(wl)
+    # one pause+resume only; the second urgent request waits its turn
+    assert core.meter.preempt_s == pytest.approx(
+        adm.pause_s + adm.resume_s)
+
+
+# -- conservation + determinism across the whole grid (satellite) --------------
+
+
+def _mixed_flash_crowd(n=160):
+    """Interactive chat + batch bulk whose flash crowds collide with it."""
+    chat = poisson(n // 2, 8, 4, 1000, rate_per_s=300.0, seed=7,
+                   priority="interactive", slo_ms=100.0)
+    bulk = bursty(n // 2, 8, 6, 1000, rate_per_s=60.0, burst_n=40,
+                  burst_every_s=0.5, burst_rate_per_s=800.0, seed=8,
+                  rid0=10_000, priority="batch")
+    return {"chat": chat, "bulk": bulk}
+
+
+def _grid_fleet(router, policy):
+    adm = AdmissionControl(preempt=True, pause_s=0.001, resume_s=0.001)
+    fleet = ReplicaFleet(router=router,
+                         autoscaler=Autoscaler(window_s=0.25,
+                                               cold_start_s=0.05))
+    for name in ("chat", "bulk"):
+        fleet.add_endpoint(FleetEndpoint(
+            name=name,
+            engine=FakeEngine(),
+            policy_factory=lambda policy=policy: make_policy(
+                policy, max_batch=8, timeout_ms=10.0),
+            min_replicas=1, max_replicas=3, initial_replicas=2,
+            admission=adm,
+        ))
+    return fleet
+
+
+@pytest.mark.parametrize("router", ROUTERS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_preemption_conserves_and_is_deterministic(policy, router):
+    if policy == "continuous_batch":
+        # slot admission needs a real KV cache; the fake engine exercises
+        # the priority queue through the other three policies, and the
+        # continuous path admits per-request (nothing batched to preempt)
+        pytest.skip("continuous_batch needs a real engine KV cache")
+    runs = []
+    for _ in range(2):
+        fleet = _grid_fleet(router, policy)
+        res = fleet.run(_mixed_flash_crowd())
+        assert len(res.fleet.responses) == 160
+        assert_conserved_jg(res.fleet)
+        for m in res.endpoints.values():
+            assert_conserved_jg(m)
+        runs.append(res)
+    a, b = runs
+    assert [r.rid for r in a.fleet.responses] == \
+        [r.rid for r in b.fleet.responses]
+    assert [r.done_s for r in a.fleet.responses] == pytest.approx(
+        [r.done_s for r in b.fleet.responses])
+    assert a.fleet.meter.total_j == pytest.approx(b.fleet.meter.total_j)
+    assert a.fleet.meter.total_g == pytest.approx(b.fleet.meter.total_g)
+
+
+# -- disaggregation ------------------------------------------------------------
+
+
+def _disagg_runtime(link_gbps=10.0, latency_ms=0.2, power_w=15.0,
+                    kv_per_tok=50_000.0, pools=(2, 2)):
+    return DisaggRuntime.from_spec(
+        DisaggSpec(enabled=True, prefill_replicas=pools[0],
+                   decode_replicas=pools[1], link_gbps=link_gbps,
+                   link_latency_ms=latency_ms, link_power_w=power_w,
+                   kv_bytes_per_token=kv_per_tok),
+        cfg=None,
+        prefill_policy_factory=lambda: PrefillPhasePolicy(8, 5.0),
+        decode_policy_factory=lambda: DecodePhasePolicy(8, 5.0),
+    )
+
+
+def _disagg_fleet(runtime, router="round_robin"):
+    fleet = ReplicaFleet(router=router)
+    fleet.add_endpoint(FleetEndpoint(
+        name="llm", engine=FakeEngine(),
+        policy_factory=lambda: DynamicBatchPolicy(8, 5.0),
+        disagg=runtime,
+    ))
+    return fleet
+
+
+def test_disagg_serves_all_and_stitches_legs():
+    wl = poisson(80, 8, 6, 1000, rate_per_s=200.0, seed=3)
+    fleet = _disagg_fleet(_disagg_runtime())
+    res = fleet.run({"llm": wl})
+    m = res.endpoints["llm"]
+    assert {r.rid for r in m.responses} == {r.rid for r in wl}
+    assert m.total_tokens == 80 * 6
+    for r in m.responses:
+        assert len(r.tokens) == 6        # both legs stitched
+        assert r.arrival_s <= r.first_token_s <= r.done_s
+    # every request with a decode phase paid exactly one handoff
+    assert m.fleet["handoffs"]["count"] == 80
+    assert m.meter.xfer_j > 0
+    assert_conserved_jg(m)
+    assert_conserved_jg(res.fleet)
+    # prefill pool replicas never decode, decode replicas never prefill
+    roles = {r.name: r.role for r in fleet.replicas}
+    assert roles == {"llm/p0": "prefill", "llm/p1": "prefill",
+                     "llm/d0": "decode", "llm/d1": "decode"}
+
+
+def test_disagg_slower_link_costs_strictly_more():
+    wl = poisson(60, 8, 6, 1000, rate_per_s=200.0, seed=4)
+    fast = _disagg_fleet(_disagg_runtime(link_gbps=100.0, latency_ms=0.05))
+    slow = _disagg_fleet(_disagg_runtime(link_gbps=0.5, latency_ms=5.0,
+                                         power_w=40.0))
+    mf = fast.run({"llm": wl}).endpoints["llm"]
+    ms = slow.run({"llm": wl}).endpoints["llm"]
+    assert ms.meter.xfer_j > mf.meter.xfer_j
+    assert ms.meter.xfer_s > mf.meter.xfer_s
+    # the slow link delays decode starts, so completion drifts later
+    assert ms.latency_percentile(95) > mf.latency_percentile(95)
+    # TTFT comes from the prefill leg and does not depend on the link
+    assert ms.mean_ttft_s == pytest.approx(mf.mean_ttft_s)
+
+
+def test_disagg_determinism():
+    wl = poisson(50, 8, 6, 1000, rate_per_s=150.0, seed=5)
+    a = _disagg_fleet(_disagg_runtime()).run({"llm": wl})
+    b = _disagg_fleet(_disagg_runtime()).run({"llm": wl})
+    assert [r.done_s for r in a.fleet.responses] == pytest.approx(
+        [r.done_s for r in b.fleet.responses])
+    assert a.fleet.meter.total_j == pytest.approx(b.fleet.meter.total_j)
+
+
+def test_kv_cache_bytes_scales_with_arch_and_seq():
+    cfg = type("Cfg", (), {"num_layers": 4, "num_kv_heads": 2,
+                           "num_heads": 8, "head_dim": 16})()
+    assert kv_cache_bytes(cfg, 1) == 2 * 4 * 2 * 16 * 2
+    assert kv_cache_bytes(cfg, 10) == 10 * kv_cache_bytes(cfg, 1)
+    assert kv_cache_bytes(cfg, 10, dtype_bytes=4) == \
+        2 * kv_cache_bytes(cfg, 10)
+
+
+# -- carbon-biased scale-down --------------------------------------------------
+
+
+def _bias_fleet(bias):
+    sig = DiurnalSignal(base_g_per_kwh=450.0, amplitude_g_per_kwh=400.0,
+                        period_s=4.0)
+    fleet = ReplicaFleet(router="round_robin",
+                         autoscaler=Autoscaler(window_s=0.25,
+                                               cold_start_s=0.05,
+                                               down_windows=1),
+                         carbon=sig)
+    fleet.add_endpoint(FleetEndpoint(
+        name="chat", engine=FakeEngine(),
+        policy_factory=lambda: DynamicBatchPolicy(8, 10.0),
+        min_replicas=1, max_replicas=6, initial_replicas=4,
+        carbon_bias=bias,
+    ))
+    return fleet
+
+
+def test_carbon_bias_shrinks_replica_seconds_without_drops():
+    wl = {"chat": poisson(400, 8, 4, 1000, rate_per_s=150.0, seed=9)}
+    plain = _bias_fleet(0.0).run(dict(wl))
+    biased = _bias_fleet(3.0).run(dict(wl))
+    assert len(plain.fleet.responses) == 400
+    assert len(biased.fleet.responses) == 400
+    rs_plain = plain.fleet.fleet["replica_seconds"]
+    rs_biased = biased.fleet.fleet["replica_seconds"]
+    assert rs_biased <= rs_plain
+    assert_conserved_jg(biased.fleet)
+
+
+# -- spec layer ----------------------------------------------------------------
+
+
+def base_spec(**kw):
+    defaults = dict(
+        endpoints=(EndpointSpec(
+            name="llm", arch="minitron-4b-smoke", model="m",
+            policy="dynamic_batch", max_batch=4,
+            # frozen pool: disagg.enabled sweeps require autoscale off
+            autoscale=AutoscaleSpec(enabled=False, replicas_hint=2),
+            slo_classes={"chat": SLOClass(slo_ms=100.0,
+                                          priority="interactive"),
+                         "bulk": SLOClass(priority="batch")},
+        ),),
+    )
+    defaults.update(kw)
+    return ServingSpec(**defaults)
+
+
+def test_priority_and_disagg_round_trip_json():
+    spec = base_spec(priority=PrioritySpec(enabled=True, preempt=True,
+                                           pause_ms=1.5))
+    spec = dataclasses.replace(
+        spec,
+        endpoints=(dataclasses.replace(
+            spec.endpoints[0],
+            disagg=DisaggSpec(enabled=True, prefill_replicas=2,
+                              decode_replicas=3, link_gbps=10.0)),))
+    spec.validate()
+    back = ServingSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.priority.pause_ms == 1.5
+    assert back.endpoints[0].disagg.decode_replicas == 3
+    assert back.endpoints[0].slo_classes["chat"].priority == "interactive"
+
+
+@pytest.mark.parametrize("mutate, path_frag", [
+    (lambda s: dataclasses.replace(s, priority=PrioritySpec(pause_ms=-1)),
+     "priority.pause_ms"),
+    (lambda s: dataclasses.replace(
+        s, endpoints=(dataclasses.replace(
+            s.endpoints[0],
+            disagg=DisaggSpec(enabled=True, link_gbps=0.0)),)),
+     "disagg.link_gbps"),
+    (lambda s: dataclasses.replace(
+        s, endpoints=(dataclasses.replace(
+            s.endpoints[0], si="si2_runtime",
+            autoscale=AutoscaleSpec(max_replicas=1),
+            disagg=DisaggSpec(enabled=True)),)),
+     "disagg.enabled"),
+    (lambda s: dataclasses.replace(
+        s, endpoints=(dataclasses.replace(
+            s.endpoints[0],
+            slo_classes={"x": SLOClass(priority="vip")}),)),
+     "slo_classes[x].priority"),
+    (lambda s: dataclasses.replace(
+        s, endpoints=(dataclasses.replace(
+            s.endpoints[0],
+            autoscale=AutoscaleSpec(carbon_bias=-0.5)),)),
+     "autoscale.carbon_bias"),
+])
+def test_validation_names_the_offending_field(mutate, path_frag):
+    with pytest.raises(SpecError) as e:
+        mutate(base_spec()).validate()
+    assert path_frag in e.value.field
+
+
+def test_disagg_rejects_continuous_batch():
+    spec = base_spec()
+    spec = dataclasses.replace(
+        spec, endpoints=(dataclasses.replace(
+            spec.endpoints[0], policy="continuous_batch",
+            disagg=DisaggSpec(enabled=True)),))
+    with pytest.raises(SpecError) as e:
+        spec.validate()
+    assert "policy" in e.value.field
+
+
+def test_admission_fields_are_sweepable():
+    cells = sweep(base_spec(), {
+        "priority.enabled": [False, True],
+        "priority.preempt": [False, True],
+        "endpoints.llm.disagg.enabled": [False, True],
+    })
+    assert len(cells) == 8
+    assigns = {tuple(a.values()) for a, _ in cells}
+    assert (True, True, True) in assigns
+
+
+def test_session_stamps_priority_and_serves_disagg():
+    """End-to-end through the declarative facade with an injected engine:
+    SLO classes stamp priorities, the fleet splits phase pools, and the
+    report carries the admission attribution."""
+    spec = base_spec(priority=PrioritySpec(enabled=True))
+    spec = dataclasses.replace(
+        spec, endpoints=(dataclasses.replace(
+            spec.endpoints[0],
+            disagg=DisaggSpec(enabled=True, prefill_replicas=2,
+                              decode_replicas=2, link_gbps=1.0,
+                              link_latency_ms=1.0, link_power_w=20.0),
+            autoscale=AutoscaleSpec(enabled=False, replicas_hint=2)),))
+    session = ServingSession()
+    session.deploy(spec, engines={"llm": FakeEngine()})
+    session.submit("llm", poisson(40, 8, 6, 1000, rate_per_s=100.0, seed=11),
+                   slo_class="chat")
+    session.submit("llm", poisson(40, 8, 6, 1000, rate_per_s=60.0, seed=12,
+                                  rid0=5_000),
+                   slo_class="bulk")
+    report = session.run()
+    ep = report.endpoints["llm"]
+    assert ep.n_requests == 80
+    assert ep.decisions["disagg"] == "prefill/decode"
+    assert ep.j_xfer > 0
+    assert set(ep.ttft_p95_by_class) == {"interactive", "batch"}
+    # conservation through the report's meter
+    assert_conserved_jg(ep.metrics)
