@@ -1,7 +1,7 @@
-"""Non-blocking green-serving regression check for CI.
+"""Green-serving regression check for CI.
 
 Compares a freshly generated grid against the checked-in
-``BENCH_serving.json`` baseline on two trajectories:
+``BENCH_serving.json`` baseline on three trajectories:
 
   * the **greenest-router J/token** (decision grid, falling back to the
     fleet grid for old baselines);
@@ -10,9 +10,14 @@ Compares a freshly generated grid against the checked-in
     the admission layer must not trade away while chasing J/token.
 
 A relative regression beyond ``--threshold`` emits a GitHub Actions
-``::warning::`` annotation — loud on the PR, but never red (bench hosts are
-noisy; the blocking signal is the test suite, the trajectory signal is this
-file).
+``::warning::`` annotation — loud on the PR, but not red (bench hosts are
+noisy; the CI job wrapping this script runs with ``continue-on-error``).
+
+Structural problems are NOT noise and exit non-zero: an unreadable or
+malformed bench document exits 2, and a fresh document that *lost* a grid
+the baseline has (schema drift, a silently skipped benchmark) exits 1.  A
+baseline that predates a grid only warns — old baselines are expected to
+grow new grids over time.
 
   python scripts/check_bench_regression.py \\
       --baseline BENCH_serving.json --fresh BENCH_decisions_fresh.json
@@ -28,9 +33,7 @@ import sys
 def _min_cell(doc: dict, grid: str, router: str | None,
               metric: str) -> float | None:
     """Minimum ``metric`` among a grid's rows for ``router`` (None = every
-    row); None (never a crash) when the grid is absent or its rows predate
-    the metric — this script must stay green on schema drift, only ever
-    warn."""
+    row); None when the grid is absent or its rows predate the metric."""
     rows = doc.get(grid) or []
     try:
         cells = [r.get(metric) for r in rows
@@ -64,12 +67,21 @@ def interactive_p95_ttft(doc: dict) -> float | None:
 
 
 def check_metric(label: str, base: float | None, fresh: float | None,
-                 threshold: float, baseline_path: str) -> None:
+                 threshold: float, baseline_path: str,
+                 fresh_path: str) -> int:
+    """0 = compared (or baseline predates the metric); 1 = the fresh doc
+    lost a grid the baseline has."""
+    if base is not None and base > 0 and fresh is None:
+        print(f"::error file={fresh_path},title=green-serving bench "
+              f"malformed::fresh document has no comparable {label} rows "
+              f"but the baseline does (baseline={base}); the grid went "
+              "missing, not green")
+        return 1
     if base is None or fresh is None or base <= 0:
         if base is not None or fresh is not None:
             print(f"::warning file={baseline_path}::no comparable "
                   f"{label} rows (baseline={base}, fresh={fresh})")
-        return
+        return 0
     rel = (fresh - base) / base
     msg = (f"{label}: baseline={base:.8f} fresh={fresh:.8f} ({rel:+.1%})")
     if rel > threshold:
@@ -77,6 +89,7 @@ def check_metric(label: str, base: float | None, fresh: float | None,
               f"regression::{msg} exceeds the {threshold:.0%} budget")
     else:
         print(f"# ok: {msg}")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -89,32 +102,42 @@ def main(argv=None) -> int:
     ns = ap.parse_args(argv)
 
     def read(path: str) -> dict | None:
+        """A parsed bench document, or None after an ::error annotation —
+        an unreadable/truncated/mis-shaped file means the bench step
+        failed upstream, and pretending otherwise hides it."""
         try:
             with open(path) as f:
-                return json.load(f)
+                doc = json.load(f)
         except (OSError, ValueError) as e:
-            print(f"::warning file={path}::bench file unreadable ({e}); "
-                  "skipping regression check")
+            print(f"::error file={path},title=green-serving bench "
+                  f"malformed::bench file unreadable ({e})")
             return None
+        if not isinstance(doc, dict):
+            print(f"::error file={path},title=green-serving bench "
+                  f"malformed::expected a JSON object of grids, got "
+                  f"{type(doc).__name__}")
+            return None
+        return doc
 
     base_doc = read(ns.baseline)
     fresh_doc = read(ns.fresh)
     if base_doc is None or fresh_doc is None:
-        return 0
+        return 2
 
-    check_metric("greenest-router J/token",
-                 greenest_j_per_token(base_doc),
-                 greenest_j_per_token(fresh_doc),
-                 ns.threshold, ns.baseline)
-    check_metric("carbon-aware-router gCO2/token",
-                 carbon_aware_g_per_token(base_doc),
-                 carbon_aware_g_per_token(fresh_doc),
-                 ns.threshold, ns.baseline)
-    check_metric("interactive-class p95 TTFT",
-                 interactive_p95_ttft(base_doc),
-                 interactive_p95_ttft(fresh_doc),
-                 ns.threshold, ns.baseline)
-    return 0
+    status = 0
+    status |= check_metric("greenest-router J/token",
+                           greenest_j_per_token(base_doc),
+                           greenest_j_per_token(fresh_doc),
+                           ns.threshold, ns.baseline, ns.fresh)
+    status |= check_metric("carbon-aware-router gCO2/token",
+                           carbon_aware_g_per_token(base_doc),
+                           carbon_aware_g_per_token(fresh_doc),
+                           ns.threshold, ns.baseline, ns.fresh)
+    status |= check_metric("interactive-class p95 TTFT",
+                           interactive_p95_ttft(base_doc),
+                           interactive_p95_ttft(fresh_doc),
+                           ns.threshold, ns.baseline, ns.fresh)
+    return status
 
 
 if __name__ == "__main__":

@@ -102,5 +102,12 @@ def carbon_g(energy_j: float, signal: Optional[CarbonSignal] = None,
 
 
 def measured_energy_j(wall_s: float, power_w: float) -> float:
-    """Host-side: joules from measured wall time and an assumed package power."""
-    return wall_s * power_w
+    """Host-side: joules from measured wall time and an assumed package power.
+
+    Delegates to the meter module's :func:`~repro.energy.meter.measured_j` —
+    the one sanctioned wall x power conversion (simlint R1) — so billing
+    arithmetic has a single home.
+    """
+    from repro.energy.meter import measured_j
+
+    return measured_j(wall_s, power_w)

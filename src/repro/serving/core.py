@@ -37,7 +37,6 @@ Two entry modes share one event loop:
 from __future__ import annotations
 
 import bisect
-import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -45,7 +44,7 @@ import numpy as np
 from repro.carbon.signal import CarbonSignal
 from repro.core.engines import Engine, token_landing_s
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
-from repro.energy.meter import EnergyMeter
+from repro.energy.sanitize import new_meter
 from repro.serving.admission.priority import AdmissionControl, priority_level
 from repro.serving.request import Request, Response, ServingMetrics
 from repro.serving.stepcache import StepTimeCache, shape_bucket, synth_tokens
@@ -115,9 +114,12 @@ class SchedulerCore:
         self.wall = 0.0
         self.responses: List[Response] = []
         self.total_tokens = 0
-        self.meter = EnergyMeter(active_power_w=self.active_power_w,
-                                 idle_power_w=self.idle_power_w,
-                                 carbon=self.carbon)
+        # new_meter returns the conservation-auditing wrapper when
+        # REPRO_SANITIZE=1 (see repro.energy.sanitize), the plain meter
+        # otherwise
+        self.meter = new_meter(active_power_w=self.active_power_w,
+                               idle_power_w=self.idle_power_w,
+                               carbon=self.carbon)
 
     # -- arrival queue --------------------------------------------------------
     @property
@@ -228,6 +230,16 @@ class SchedulerCore:
         if t > self.clock:
             self.meter.record_idle(t - self.clock, t_s=self.clock)
             self.clock = t
+
+    def provision(self, created_s: float, ready_s: float) -> None:
+        """Cold-start bootstrap: the replica is provisioned (drawing idle
+        power) from ``created_s`` and able to serve from ``ready_s``; the
+        clock lands on the ready instant.  This is the one sanctioned way
+        to start a core's timeline mid-run — a bare ``core.clock = t``
+        elsewhere would skip the provisioning bill (simlint R4)."""
+        if ready_s > created_s:
+            self.meter.record_idle(ready_s - created_s, t_s=created_s)
+        self.clock = ready_s
 
     def advance_active(self, dur_s: float, rids=(), tokens: int = 0) -> None:
         """Advance the clock through ``dur_s`` of compute billed to ``rids``."""

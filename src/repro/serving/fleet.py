@@ -85,7 +85,8 @@ import numpy as np
 from repro.carbon.shift import DeferralSpec, TemporalShifter
 from repro.carbon.signal import CarbonSignal, ConstantSignal, J_PER_KWH
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
-from repro.energy.meter import EnergyMeter, estimate_j_per_token
+from repro.energy.meter import estimate_j_per_token
+from repro.energy.sanitize import new_meter
 from repro.serving.admission.disagg import DisaggRuntime
 from repro.serving.admission.priority import AdmissionControl
 from repro.serving.core import SchedulerCore, SchedulingPolicy
@@ -122,11 +123,9 @@ class Replica:
         self.stopped_s: Optional[float] = None
         self.offered = 0
         core.begin()
-        if self.cold_start:
-            # cold start: the replica draws idle power while it provisions;
-            # its clock starts where it becomes able to serve
-            core.meter.record_idle(ready_s - created_s, t_s=created_s)
-        core.clock = ready_s
+        # cold start: the replica draws idle power while it provisions; its
+        # clock starts where it becomes able to serve
+        core.provision(created_s, ready_s)
 
     @property
     def backlog(self) -> int:
@@ -852,11 +851,11 @@ class ReplicaFleet:
                               t_s=rep.core.clock)
 
         endpoints: Dict[str, ServingMetrics] = {}
-        fleet_meter = EnergyMeter()
+        fleet_meter = new_meter()
         all_resp, all_wall, all_tokens = [], 0.0, 0
         for name in self.specs:
             reps = self.endpoint_replicas(name)
-            meter = EnergyMeter()
+            meter = new_meter()
             responses, wall, tokens = [], 0.0, 0
             finished = [(rep, rep.core.finish()) for rep in reps]
             for rep, m in finished:

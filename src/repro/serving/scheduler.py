@@ -247,11 +247,15 @@ class ContinuousBatchPolicy(SchedulingPolicy):
             prompt[:S] = req.prompt
 
             def thunk():
-                t0 = time.perf_counter()
+                # sanctioned measurement closure: a step-cache MISS really
+                # executes the engine, and the measured duration is what the
+                # virtual clock replays from then on
+                t0 = time.perf_counter()          # simlint: allow(wall-clock)
                 logits, sub = core.engine.prefill_one(prompt[None, :])
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
                 tok.block_until_ready()
-                return (time.perf_counter() - t0,), (tok, sub)
+                dt = time.perf_counter() - t0     # simlint: allow(wall-clock)
+                return (dt,), (tok, sub)
 
             (dt,), out = core.timed(("prefill1", bucket), thunk)
             start = core.now
@@ -279,11 +283,13 @@ class ContinuousBatchPolicy(SchedulingPolicy):
             return
 
         def thunk():
-            t0 = time.perf_counter()
+            # sanctioned measurement closure (see the prefill thunk above)
+            t0 = time.perf_counter()              # simlint: allow(wall-clock)
             logits, kv = core.engine.decode_batch(self.kv, self.cur_tok)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             tok.block_until_ready()
-            return (time.perf_counter() - t0,), (tok, kv)
+            dt = time.perf_counter() - t0         # simlint: allow(wall-clock)
+            return (dt,), (tok, kv)
 
         (dt,), out = core.timed(("decode", self.num_slots), thunk)
         rids = [r.rid for r in self.slot_req if r is not None]

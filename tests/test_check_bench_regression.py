@@ -1,0 +1,155 @@
+"""The bench regression checker must fail loudly on broken documents.
+
+The original script swallowed unreadable/truncated ``BENCH_serving.json``
+files with a ``::warning`` and exited 0 — a bench step that crashed halfway
+looked exactly like a clean run.  These tests pin the hardened contract:
+
+  * unreadable / truncated / mis-shaped JSON -> exit 2 with an ``::error``;
+  * a fresh document that lost a grid the baseline has -> exit 1;
+  * a baseline that merely predates a grid -> warning only, exit 0;
+  * regressions within the threshold -> exit 0.
+"""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+_SCRIPT = Path(__file__).resolve().parent.parent / "scripts" / \
+    "check_bench_regression.py"
+_spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                               _SCRIPT)
+cbr = importlib.util.module_from_spec(_spec)
+sys.modules.setdefault("check_bench_regression", cbr)
+_spec.loader.exec_module(cbr)
+
+
+def _doc():
+    return {
+        "decision_grid": [
+            {"router": "greenest", "j_per_token": 0.20},
+            {"router": "round_robin", "j_per_token": 0.30},
+        ],
+        "carbon_grid": [
+            {"router": "carbon_aware", "gco2_per_token": 1.5e-5},
+        ],
+        "disagg_grid": [
+            {"router": "round_robin", "interactive_p95_ttft_s": 0.02},
+        ],
+    }
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    if isinstance(payload, str):
+        p.write_text(payload)
+    else:
+        p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def _run(baseline, fresh, threshold=0.10):
+    return cbr.main(["--baseline", baseline, "--fresh", fresh,
+                     "--threshold", str(threshold)])
+
+
+def test_identical_docs_pass(tmp_path):
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", _doc())
+    assert _run(base, fresh) == 0
+
+
+def test_within_threshold_passes(tmp_path, capsys):
+    doc = _doc()
+    doc["decision_grid"][0]["j_per_token"] = 0.21  # +5%
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "::error" not in out
+
+
+def test_regression_warns_but_passes(tmp_path, capsys):
+    doc = _doc()
+    doc["decision_grid"][0]["j_per_token"] = 0.30  # +50%
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    assert "::warning" in capsys.readouterr().out
+
+
+def test_missing_fresh_file_exits_2(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _doc())
+    assert _run(base, str(tmp_path / "no_such.json")) == 2
+    assert "::error" in capsys.readouterr().out
+
+
+def test_truncated_fresh_file_exits_2(tmp_path, capsys):
+    """The satellite fixture: a bench run that died mid-write."""
+    base = _write(tmp_path, "base.json", _doc())
+    full = json.dumps(_doc())
+    fresh = _write(tmp_path, "fresh.json", full[:len(full) // 2])
+    assert _run(base, fresh) == 2
+    assert "::error" in capsys.readouterr().out
+
+
+def test_truncated_baseline_exits_2(tmp_path, capsys):
+    fresh = _write(tmp_path, "fresh.json", _doc())
+    base = _write(tmp_path, "base.json", '{"decision_grid": [')
+    assert _run(base, fresh) == 2
+    assert "::error" in capsys.readouterr().out
+
+
+def test_non_object_document_exits_2(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", [1, 2, 3])
+    assert _run(base, fresh) == 2
+    assert "::error" in capsys.readouterr().out
+
+
+def test_fresh_lost_a_grid_exits_1(tmp_path, capsys):
+    doc = _doc()
+    del doc["carbon_grid"]
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 1
+    assert "carbon-aware" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("grid", ["decision_grid", "carbon_grid",
+                                  "disagg_grid"])
+def test_each_grid_loss_is_detected(tmp_path, grid):
+    doc = _doc()
+    del doc[grid]
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 1
+
+
+def test_old_baseline_missing_grid_only_warns(tmp_path, capsys):
+    """Baselines predating a grid must not fail new bench runs."""
+    old = _doc()
+    del old["disagg_grid"]
+    base = _write(tmp_path, "base.json", old)
+    fresh = _write(tmp_path, "fresh.json", _doc())
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "::warning" in out and "::error" not in out
+
+
+def test_fleet_grid_fallback_still_compares(tmp_path):
+    """Pre-decision-grid baselines fall back to the fleet grid."""
+    old = _doc()
+    old["fleet_grid"] = old.pop("decision_grid")
+    base = _write(tmp_path, "base.json", old)
+    fresh = _write(tmp_path, "fresh.json", _doc())
+    assert _run(base, fresh) == 0
+
+
+def test_checked_in_baseline_is_self_consistent():
+    """The repo's own BENCH_serving.json must stay parseable and comparable
+    with itself — the shape the CI job depends on."""
+    repo_baseline = _SCRIPT.parent.parent / "BENCH_serving.json"
+    assert _run(str(repo_baseline), str(repo_baseline)) == 0

@@ -1,0 +1,218 @@
+"""Runtime conservation sanitizer: ``REPRO_SANITIZE=1`` audits every meter.
+
+Three layers:
+
+  * meter-level — a :class:`SanitizedEnergyMeter` re-derives each billing
+    event's deltas and the global joule/gram conservation identities, and
+    detects out-of-band mutation (a mis-billed segment) between events;
+  * mutation — breaking the underlying meter's arithmetic (under-billing a
+    segment) raises :class:`ConservationError` whose message names the
+    offending event with its arguments, which is the debuggability the
+    sanitizer exists for;
+  * grid — the policy x router x disagg serving grid runs green under the
+    sanitizer, bit-identically to the unsanitized run.
+
+The grid reuses the flash-crowd fixtures from ``test_admission`` so the
+sanitizer sees the exact traffic the conservation contract was written
+against (preemption, handoffs, autoscaling cold starts).
+"""
+
+import pytest
+
+from repro.energy.meter import EnergyMeter
+from repro.energy.sanitize import (
+    ConservationError,
+    SanitizedEnergyMeter,
+    new_meter,
+    sanitize_enabled,
+)
+
+from test_admission import (
+    ROUTERS,
+    _disagg_fleet,
+    _disagg_runtime,
+    _grid_fleet,
+    _mixed_flash_crowd,
+    assert_conserved_jg,
+)
+
+POLICIES_GRID = ("realtime", "dynamic_batch", "adaptive_batch")
+
+
+# -- the factory ---------------------------------------------------------------
+
+
+def test_new_meter_respects_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    assert type(new_meter()) is EnergyMeter
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+    assert type(new_meter()) is SanitizedEnergyMeter
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+
+
+# -- meter-level auditing ------------------------------------------------------
+
+
+def _meter(**kw):
+    kw.setdefault("active_power_w", 100.0)
+    kw.setdefault("idle_power_w", 20.0)
+    return SanitizedEnergyMeter(**kw)
+
+
+def test_clean_event_sequence_passes_and_matches_plain_meter():
+    plain = EnergyMeter(active_power_w=100.0, idle_power_w=20.0)
+    sane = _meter()
+    for m in (plain, sane):
+        m.record_active(0.5, rids=[1, 2], tokens=10, t_s=0.0)
+        m.record_idle(0.25, t_s=0.5)
+        m.record_preempt(0.01, t_s=0.75)
+        m.record_xfer(0.02, 15.0, t_s=0.76)
+        m.record_active_shared(1.0, {3: 1.2, 4: 1.4}, tokens=4)
+    assert sane.total_j == plain.total_j
+    assert sane.total_g == plain.total_g
+    assert sane.per_request_j == plain.per_request_j
+    assert sane.summary() == plain.summary()
+
+
+def test_tamper_between_events_is_named(monkeypatch):
+    m = _meter()
+    m.record_active(0.5, rids=[7], t_s=0.0)
+    m.active_s += 0.1               # a mis-billed segment, out of band
+    with pytest.raises(ConservationError) as ei:
+        m.record_idle(0.1, t_s=0.5)
+    msg = str(ei.value)
+    assert "active_s" in msg                      # which field drifted
+    assert "record_idle(dur_s=0.1" in msg         # at which event
+    assert "outside the meter API" in msg
+
+
+def test_tampered_attribution_is_caught():
+    m = _meter()
+    m.record_active(0.5, rids=[7], t_s=0.0)
+    m.per_request_j[7] *= 2.0
+    with pytest.raises(ConservationError, match="sum_req_j"):
+        m.record_idle(0.1, t_s=0.5)
+
+
+def test_negative_duration_is_rejected():
+    m = _meter()
+    with pytest.raises(ConservationError, match="negative duration"):
+        m.record_active(-0.5, t_s=0.0)
+    # float residue from `uptime - billed` subtractions is not an error
+    m.record_idle(-1e-9, t_s=0.0)
+
+
+def test_unattributed_active_is_tracked_not_lost():
+    m = _meter()
+    m.record_active(0.5, rids=[], t_s=0.0)        # no attribution
+    m.record_active(0.25, rids=[1], t_s=0.5)      # attributed
+    assert m.per_request_j == {1: pytest.approx(25.0)}
+    assert m.active_j == pytest.approx(75.0)      # nothing vanished
+
+
+def test_merge_conserves_and_folds_plain_meters():
+    agg = _meter()
+    part = EnergyMeter(active_power_w=50.0, idle_power_w=5.0)
+    part.record_active(1.0, rids=[1], t_s=0.0)
+    part.record_idle(2.0, t_s=1.0)
+    part.record_xfer(0.1, 8.0, t_s=3.0)
+    pre_j, pre_g = agg.total_j, agg.total_g
+    agg.merge(part, source="r0")
+    assert agg.total_j == pytest.approx(pre_j + part.total_j)
+    assert agg.total_g == pytest.approx(pre_g + part.total_g)
+    # and the aggregate still passes its own audit on the next event
+    agg.record_idle(0.1, t_s=3.1)
+
+
+def test_sanitizer_summary_is_bit_identical_to_plain(monkeypatch):
+    """Turning the sanitizer on must never change results, only check
+    them — the whole point of an observer."""
+    def drive(meter_cls):
+        m = meter_cls(active_power_w=80.0, idle_power_w=10.0)
+        for i in range(50):
+            m.record_active(0.01 * (i % 7 + 1), rids=[i], tokens=3,
+                            t_s=0.1 * i)
+            m.record_idle(0.005, t_s=0.1 * i + 0.05)
+        return m.summary()
+    assert drive(SanitizedEnergyMeter) == drive(EnergyMeter)
+
+
+# -- mutation: a mis-billed segment names its event ----------------------------
+
+
+def test_underbilled_active_segment_names_event(monkeypatch):
+    orig = EnergyMeter.record_active
+
+    def underbilled(self, dur_s, rids=(), tokens=0, t_s=None):
+        return orig(self, dur_s * 0.5, rids, tokens, t_s)
+
+    monkeypatch.setattr(EnergyMeter, "record_active", underbilled)
+    m = _meter()
+    with pytest.raises(ConservationError) as ei:
+        m.record_active(0.01, rids=[1], t_s=0.0)
+    msg = str(ei.value)
+    assert "record_active(dur_s=0.01, rids=[1]" in msg
+    assert "active_s moved by" in msg
+
+
+def test_misbilled_segment_in_grid_run_names_event(monkeypatch):
+    """End-to-end: one broken billing site inside a full serving run is
+    caught at its first event, with the event context in the error."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    orig = EnergyMeter.record_idle
+
+    def underbilled(self, dur_s, t_s=None):
+        return orig(self, dur_s * 0.5, t_s)
+
+    monkeypatch.setattr(EnergyMeter, "record_idle", underbilled)
+    fleet = _grid_fleet("round_robin", "dynamic_batch")
+    with pytest.raises(ConservationError) as ei:
+        fleet.run(_mixed_flash_crowd(80))
+    msg = str(ei.value)
+    assert "record_idle(dur_s=" in msg
+    assert "idle_s moved by" in msg
+
+
+# -- the serving grid under the sanitizer --------------------------------------
+
+
+@pytest.mark.parametrize("router", ROUTERS)
+@pytest.mark.parametrize("policy", POLICIES_GRID)
+def test_grid_runs_green_under_sanitizer(monkeypatch, policy, router):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    fleet = _grid_fleet(router, policy)
+    res = fleet.run(_mixed_flash_crowd(80))
+    assert len(res.fleet.responses) == 80
+    assert isinstance(res.fleet.meter, SanitizedEnergyMeter)
+    assert_conserved_jg(res.fleet)
+
+
+def test_disagg_runs_green_under_sanitizer(monkeypatch):
+    from repro.workload.generators import poisson
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    wl = poisson(60, 8, 6, 1000, rate_per_s=200.0, seed=3)
+    fleet = _disagg_fleet(_disagg_runtime())
+    res = fleet.run({"llm": wl})
+    m = res.endpoints["llm"]
+    assert {r.rid for r in m.responses} == {r.rid for r in wl}
+    assert m.meter.xfer_j > 0                    # the handoffs were audited
+    assert isinstance(m.meter, SanitizedEnergyMeter)
+    assert_conserved_jg(m)
+    assert_conserved_jg(res.fleet)
+
+
+def test_sanitized_run_is_bit_identical_to_plain(monkeypatch):
+    """REPRO_SANITIZE must be a pure observer of the simulation."""
+    def run(env):
+        if env:
+            monkeypatch.setenv("REPRO_SANITIZE", "1")
+        else:
+            monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+        fleet = _grid_fleet("least_loaded", "dynamic_batch")
+        m = fleet.run(_mixed_flash_crowd(80)).fleet
+        return (m.meter.total_j, m.meter.total_g,
+                sorted((r.rid, r.done_s) for r in m.responses))
+    assert run(True) == run(False)

@@ -1,0 +1,239 @@
+"""simlint: the static invariant analyzer must keep the repo clean AND
+catch reintroduced violations.
+
+Three layers of coverage:
+
+  * unit — each rule fires on a minimal synthetic blob via ``lint_source``
+    and stays quiet on the sanctioned spelling;
+  * repo — the real tree lints clean with an EMPTY baseline (the CI
+    acceptance bar);
+  * mutation — copying the tree, reintroducing ``wall * power`` in
+    ``serving/fleet.py`` or ``time.time()`` in ``serving/core.py``, and
+    running the CLI must exit non-zero and name the file, line and rule.
+"""
+
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint_paths, lint_source
+from repro.analysis.engine import classify
+
+REPO = Path(__file__).resolve().parent.parent
+
+# synthetic paths that classify() maps into each scope
+SIM = "src/repro/serving/synthetic.py"
+DRIVER = "benchmarks/synthetic.py"
+
+
+def _rules(src, path=SIM, scope=None):
+    return [(f.rule, f.line) for f in lint_source(src, path, scope=scope)]
+
+
+# ---------------------------------------------------------------- unit: R1
+def test_billed_time_flags_inline_wall_times_power():
+    src = "def bill(wall_s, power_w):\n    return wall_s * power_w\n"
+    assert ("billed-time", 2) in _rules(src)
+
+
+def test_billed_time_allows_meter_module():
+    src = "def bill(wall_s, power_w):\n    return wall_s * power_w\n"
+    assert lint_source(src, "src/repro/energy/meter.py") == []
+
+
+def test_billed_time_ignores_rates_and_composites():
+    # a rate (req per second) times a power-free factor is not billing;
+    # neither is a composite term that already mixes both on one side
+    src = ("def ok(rate_per_s, n, energy_w_s):\n"
+           "    a = rate_per_s * n\n"
+           "    b = energy_w_s * n\n"
+           "    return a + b\n")
+    assert _rules(src) == []
+
+
+def test_billed_time_applies_in_driver_scope():
+    src = "e = elapsed_s * gpu_power_w\n"
+    assert ("billed-time", 1) in _rules(src, path=DRIVER)
+
+
+# ---------------------------------------------------------------- unit: R2
+def test_wall_clock_flags_time_calls():
+    src = "import time\nnow = time.time()\n"
+    assert ("wall-clock", 2) in _rules(src)
+
+
+def test_wall_clock_flags_perf_counter_from_import():
+    src = "from time import perf_counter\nt0 = perf_counter()\n"
+    assert ("wall-clock", 2) in _rules(src)
+
+
+def test_wall_clock_flags_datetime_now():
+    src = "import datetime\nd = datetime.datetime.now()\n"
+    assert ("wall-clock", 2) in _rules(src)
+
+
+def test_wall_clock_not_enforced_in_driver_scope():
+    # benchmarks legitimately time themselves with the host clock
+    src = "import time\nnow = time.time()\n"
+    assert _rules(src, path=DRIVER) == []
+
+
+def test_pragma_suppresses_same_line():
+    src = "import time\nt0 = time.perf_counter()  # simlint: allow(wall-clock)\n"
+    assert _rules(src) == []
+
+
+def test_pragma_suppresses_preceding_line():
+    src = ("import time\n"
+           "# simlint: allow(wall-clock)\n"
+           "t0 = time.perf_counter()\n")
+    assert _rules(src) == []
+
+
+def test_pragma_wrong_rule_does_not_suppress():
+    src = "import time\nt0 = time.perf_counter()  # simlint: allow(id-key)\n"
+    assert ("wall-clock", 2) in _rules(src)
+
+
+def test_unseeded_numpy_random_flagged_jax_random_not():
+    src = ("import numpy as np\n"
+           "import jax\n"
+           "a = np.random.rand(3)\n"
+           "b = jax.random.normal(jax.random.PRNGKey(0), (3,))\n")
+    found = _rules(src)
+    assert ("unseeded-random", 3) in found
+    assert all(line != 4 for _, line in found)
+
+
+def test_zero_arg_rng_ctor_flagged_seeded_not():
+    src = ("import numpy as np\n"
+           "bad = np.random.default_rng()\n"
+           "good = np.random.default_rng(1234)\n")
+    found = _rules(src)
+    assert ("unseeded-random", 2) in found
+    assert all(line != 3 for _, line in found)
+
+
+def test_set_iteration_flagged_sorted_not():
+    src = ("for x in {3, 1, 2}:\n"
+           "    pass\n"
+           "for y in sorted({3, 1, 2}):\n"
+           "    pass\n")
+    found = _rules(src)
+    assert ("set-iteration", 1) in found
+    assert all(line != 3 for _, line in found)
+
+
+def test_id_key_flagged():
+    src = "cache = {}\ncache[id(obj)] = 1\n"
+    assert ("id-key", 2) in _rules(src)
+
+
+# ---------------------------------------------------------------- unit: R4
+def test_clock_write_outside_core_flagged():
+    src = "def f(core):\n    core.clock = 10.0\n"
+    assert ("clock-causality", 2) in _rules(src, path=SIM)
+
+
+def test_clock_write_inside_core_allowed():
+    src = "class C:\n    def advance(self, t):\n        self.clock = t\n"
+    assert lint_source(src, "src/repro/serving/core.py") == []
+
+
+def test_billing_event_without_timestamp_flagged():
+    src = "def f(m, d):\n    m.record_active(d)\n"
+    found = _rules(src, path=SIM)
+    assert ("clock-causality", 2) in found
+    ok = "def g(m, d, t):\n    m.record_active(d, t_s=t)\n"
+    assert _rules(ok, path=SIM) == []
+
+
+# ----------------------------------------------------------------- scoping
+def test_out_of_scope_paths_are_not_linted():
+    assert classify("src/repro/models/transformer.py") is None
+    src = "import time\nnow = time.time()\n"
+    assert lint_source(src, "src/repro/models/transformer.py") == []
+
+
+# -------------------------------------------------------------- repo clean
+def test_repo_lints_clean_with_empty_baseline():
+    paths = [str(REPO / "src" / "repro"), str(REPO / "benchmarks"),
+             str(REPO / "scripts")]
+    findings, scanned = lint_paths([p for p in paths if os.path.isdir(p)])
+    assert scanned > 20
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# ---------------------------------------------------------------- CLI + mutation
+def _run_cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=cwd or str(REPO))
+
+
+def test_cli_strict_clean_repo_exits_0():
+    res = _run_cli("--strict", "src/repro", "benchmarks", "scripts")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_missing_path_exits_2():
+    res = _run_cli("--strict", "no/such/dir")
+    assert res.returncode == 2
+
+
+@pytest.fixture()
+def mutated_tree(tmp_path):
+    """A copy of src/repro with room to reintroduce violations."""
+    dst = tmp_path / "repro"
+    shutil.copytree(REPO / "src" / "repro", dst,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    return dst
+
+
+def test_mutated_fleet_inline_billing_fails_strict(mutated_tree):
+    fleet = mutated_tree / "serving" / "fleet.py"
+    src = fleet.read_text()
+    fleet.write_text(src + "\n\ndef _leak(wall_s, power_w):\n"
+                           "    return wall_s * power_w\n")
+    bad_line = src.count("\n") + 4
+    res = _run_cli("--strict", str(mutated_tree))
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "billed-time" in res.stdout
+    assert f"fleet.py:{bad_line}" in res.stdout
+
+
+def test_mutated_core_wall_clock_fails_strict(mutated_tree):
+    core = mutated_tree / "serving" / "core.py"
+    src = core.read_text()
+    core.write_text(src + "\n\nimport time\n\ndef _leak_now():\n"
+                          "    return time.time()\n")
+    bad_line = src.count("\n") + 6
+    res = _run_cli("--strict", str(mutated_tree))
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "wall-clock" in res.stdout
+    assert f"core.py:{bad_line}" in res.stdout
+
+
+def test_mutation_without_strict_reports_but_exits_0(mutated_tree):
+    core = mutated_tree / "serving" / "core.py"
+    core.write_text(core.read_text() + "\nimport time\nx = time.time()\n")
+    res = _run_cli(str(mutated_tree))
+    assert res.returncode == 0
+    assert "wall-clock" in res.stdout
+
+
+def test_baseline_suppresses_known_finding(mutated_tree, tmp_path):
+    core = mutated_tree / "serving" / "core.py"
+    core.write_text(core.read_text() + "\nimport time\nx = time.time()\n")
+    baseline = tmp_path / "baseline.json"
+    res = _run_cli("--write-baseline", str(baseline), str(mutated_tree))
+    assert res.returncode == 0
+    res = _run_cli("--strict", "--baseline", str(baseline),
+                   str(mutated_tree))
+    assert res.returncode == 0, res.stdout + res.stderr

@@ -1,0 +1,300 @@
+"""R3's dynamic twin: every ServingSpec field must round-trip and sweep.
+
+The static analyzer (``repro.analysis``, rule ``spec-roundtrip``) checks the
+serialization code *mentions* every field; this suite checks the semantics:
+for EVERY dataclass field of every spec class, a non-default value survives
+``to_json -> from_json`` bit-identically and is reachable through
+``with_override``/``sweep`` (the benchmark grids' only way of varying a
+design decision).
+
+The ``ALTERNATES`` table below must name every field of every spec class —
+``test_alternates_table_is_complete`` fails the moment someone adds a field
+without deciding how it serializes and sweeps, which is exactly the drift
+R3 exists to stop.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.carbon.shift import DeferralSpec
+from repro.carbon.signal import CarbonSpec
+from repro.serving.admission.disagg import DisaggSpec
+from repro.serving.admission.priority import PrioritySpec
+from repro.serving.api import (AutoscaleSpec, EndpointSpec, ServingSpec,
+                               SLOClass, SpecError, sweep, with_override)
+from repro.workload.generators import WorkloadSpec
+
+ARCH = "minitron-4b-smoke"
+
+
+def baseline_spec() -> ServingSpec:
+    """A fully-populated valid spec: every nested spec present and
+    non-trivial, so every override below changes something real."""
+    slo = {"interactive": SLOClass(slo_ms=50.0, priority="interactive"),
+           "batch": SLOClass(deadline_s=30.0, priority="batch")}
+    wl = WorkloadSpec(kind="poisson", n=64, prompt_len=8, max_new_tokens=8,
+                      rate_per_s=20.0, peak_rate_per_s=40.0, seed=7)
+    chat = EndpointSpec(
+        name="chat", arch=ARCH, model="m", policy="dynamic_batch",
+        max_batch=8, ttft_slo_ms=200.0, slo_classes=slo, workload=wl,
+        zones=("eu",),
+        # max_replicas=1 keeps single-field si overrides (SI3 forbids
+        # autoscaled replicas) independently valid
+        autoscale=AutoscaleSpec(enabled=True, min_replicas=1,
+                                max_replicas=1))
+    pd = EndpointSpec(
+        name="pd", arch=ARCH, policy="adaptive_batch",
+        autoscale=AutoscaleSpec(enabled=False),
+        disagg=DisaggSpec(enabled=True, prefill_replicas=1,
+                          decode_replicas=2))
+    return ServingSpec(
+        endpoints=(chat, pd),
+        router="least_loaded",
+        ttft_budget_s=1.0,
+        carbon=CarbonSpec(kind="constant", g_per_kwh=475.0),
+        carbon_zones={"eu": CarbonSpec(kind="constant", g_per_kwh=150.0),
+                      "us": CarbonSpec(kind="constant", g_per_kwh=420.0)},
+        deferral=DeferralSpec(enabled=True),
+        priority=PrioritySpec(enabled=True),
+    ).validate()
+
+
+# every field of every spec class -> (override path, valid alternate value);
+# None as path means the field is exercised without a dotted path (see the
+# special-case tests at the bottom)
+ALTERNATES = {
+    ServingSpec: {
+        "endpoints": (None, ()),                 # replaced wholesale
+        "router": ("router", "greenest"),
+        "ttft_budget_s": ("ttft_budget_s", 2.5),
+        "active_power_w": ("active_power_w", 90.0),
+        "idle_power_w": ("idle_power_w", 12.0),
+        "carbon": ("carbon", CarbonSpec(kind="diurnal", g_per_kwh=400.0)),
+        "carbon_zones": ("carbon_zones",
+                         {"eu": CarbonSpec(kind="constant", g_per_kwh=99.0),
+                          "us": CarbonSpec(kind="constant",
+                                           g_per_kwh=505.0)}),
+        "deferral": ("deferral", DeferralSpec(enabled=False, window_s=1.0)),
+        "priority": ("priority", PrioritySpec(enabled=False, pause_ms=5.0)),
+    },
+    EndpointSpec: {
+        "name": ("endpoints.chat.name", "chat2"),
+        "arch": ("endpoints.chat.arch", "minitron-8b-smoke"),
+        "model": ("endpoints.chat.model", "m2"),
+        "version": ("endpoints.chat.version", 2),
+        "format": ("endpoints.chat.format", "rsm_int8"),
+        "si": ("endpoints.chat.si", "si3_dl_server"),
+        "container": ("endpoints.chat.container", "docker"),
+        "protocol": ("endpoints.chat.protocol", "rest_json"),
+        "policy": ("endpoints.chat.policy", "adaptive_batch"),
+        "max_batch": ("endpoints.chat.max_batch", 4),
+        "batch_timeout_ms": ("endpoints.chat.batch_timeout_ms", 10.0),
+        "max_seq": ("endpoints.chat.max_seq", 128),
+        "ttft_slo_ms": ("endpoints.chat.ttft_slo_ms", 500.0),
+        "autoscale": ("endpoints.chat.autoscale",
+                      AutoscaleSpec(enabled=False, cold_start_s=0.5)),
+        "slo_classes": ("endpoints.chat.slo_classes",
+                        {"interactive": SLOClass(slo_ms=25.0,
+                                                 priority="interactive")}),
+        "service_time_hint_s": ("endpoints.chat.service_time_hint_s", 0.25),
+        "active_power_w": ("endpoints.chat.active_power_w", 75.0),
+        "idle_power_w": ("endpoints.chat.idle_power_w", 10.0),
+        "step_cache": ("endpoints.chat.step_cache", False),
+        "zones": ("endpoints.chat.zones", ("eu", "us")),
+        "workload": ("endpoints.chat.workload",
+                     WorkloadSpec(kind="poisson", n=32, rate_per_s=5.0,
+                                  seed=3)),
+        "disagg": ("endpoints.chat.disagg",
+                   DisaggSpec(enabled=False, link_gbps=50.0)),
+    },
+    AutoscaleSpec: {
+        "enabled": ("endpoints.chat.autoscale.enabled", False),
+        "min_replicas": ("endpoints.chat.autoscale.min_replicas", 0),
+        "max_replicas": ("endpoints.chat.autoscale.max_replicas", 2),
+        "replicas_hint": ("endpoints.chat.autoscale.replicas_hint", 1),
+        "target_utilization":
+            ("endpoints.chat.autoscale.target_utilization", 0.5),
+        "window_s": ("endpoints.chat.autoscale.window_s", 2.0),
+        "cold_start_s": ("endpoints.chat.autoscale.cold_start_s", 1.0),
+        "down_windows": ("endpoints.chat.autoscale.down_windows", 3),
+        "calendar": ("endpoints.chat.autoscale.calendar",
+                     ((0.0, 5.0), (10.0, 2.0))),
+        "carbon_bias": ("endpoints.chat.autoscale.carbon_bias", 0.5),
+    },
+    SLOClass: {
+        "slo_ms": (None, 75.0),
+        "deadline_s": (None, 60.0),
+        "priority": (None, "standard"),
+    },
+    CarbonSpec: {
+        "kind": ("carbon.kind", "diurnal"),
+        "g_per_kwh": ("carbon.g_per_kwh", 250.0),
+        "amplitude_g_per_kwh": ("carbon.amplitude_g_per_kwh", 100.0),
+        "period_s": ("carbon.period_s", 3600.0),
+        "phase_s": ("carbon.phase_s", 600.0),
+        "trace": ("carbon.trace", ((0.0, 300.0), (60.0, 200.0))),
+    },
+    DeferralSpec: {
+        "enabled": ("deferral.enabled", False),
+        "window_s": ("deferral.window_s", 0.5),
+        "margin_s": ("deferral.margin_s", 1.0),
+        "service_margin": ("deferral.service_margin", 2.0),
+        "valley_tolerance": ("deferral.valley_tolerance", 0.2),
+    },
+    PrioritySpec: {
+        "enabled": ("priority.enabled", False),
+        "preempt": ("priority.preempt", False),
+        "pause_ms": ("priority.pause_ms", 4.0),
+        "resume_ms": ("priority.resume_ms", 4.0),
+        "max_preemptions": ("priority.max_preemptions", 2),
+    },
+    DisaggSpec: {
+        "enabled": ("endpoints.pd.disagg.enabled", False),
+        "prefill_replicas": ("endpoints.pd.disagg.prefill_replicas", 2),
+        "decode_replicas": ("endpoints.pd.disagg.decode_replicas", 3),
+        "link_gbps": ("endpoints.pd.disagg.link_gbps", 50.0),
+        "link_latency_ms": ("endpoints.pd.disagg.link_latency_ms", 1.0),
+        "link_power_w": ("endpoints.pd.disagg.link_power_w", 4.0),
+        "kv_dtype_bytes": ("endpoints.pd.disagg.kv_dtype_bytes", 4),
+        "kv_bytes_per_token":
+            ("endpoints.pd.disagg.kv_bytes_per_token", 2048.0),
+    },
+    WorkloadSpec: {
+        "kind": ("endpoints.chat.workload.kind", "diurnal"),
+        "n": ("endpoints.chat.workload.n", 32),
+        "prompt_len": ("endpoints.chat.workload.prompt_len", 4),
+        "max_new_tokens": ("endpoints.chat.workload.max_new_tokens", 4),
+        "rate_per_s": ("endpoints.chat.workload.rate_per_s", 30.0),
+        "seed": ("endpoints.chat.workload.seed", 11),
+        "rid0": ("endpoints.chat.workload.rid0", 1000),
+        "slo_ms": ("endpoints.chat.workload.slo_ms", 80.0),
+        "deadline_s": ("endpoints.chat.workload.deadline_s", 45.0),
+        "priority": ("endpoints.chat.workload.priority", "batch"),
+        "peak_rate_per_s": ("endpoints.chat.workload.peak_rate_per_s", 60.0),
+        "period_s": ("endpoints.chat.workload.period_s", 120.0),
+        "phase_s": ("endpoints.chat.workload.phase_s", 30.0),
+        "burst_n": ("endpoints.chat.workload.burst_n", 4),
+        "burst_every_s": ("endpoints.chat.workload.burst_every_s", 5.0),
+        "burst_rate_per_s":
+            ("endpoints.chat.workload.burst_rate_per_s", 50.0),
+        "arrivals": ("endpoints.chat.workload.arrivals", (0.1, 0.2, 0.4)),
+    },
+}
+
+# where each spec class lives inside the roundtripped ServingSpec
+_GETTERS = {
+    ServingSpec: lambda s: s,
+    EndpointSpec: lambda s: s.endpoints[0],
+    AutoscaleSpec: lambda s: s.endpoints[0].autoscale,
+    SLOClass: lambda s: s.endpoints[0].slo_classes["interactive"],
+    CarbonSpec: lambda s: s.carbon,
+    DeferralSpec: lambda s: s.deferral,
+    PrioritySpec: lambda s: s.priority,
+    DisaggSpec: lambda s: s.endpoint("pd").disagg,
+    WorkloadSpec: lambda s: s.endpoints[0].workload,
+}
+
+_PATH_CASES = [(cls, field) for cls, table in ALTERNATES.items()
+               for field, (path, _) in table.items() if path is not None]
+
+
+@pytest.mark.parametrize("cls", list(ALTERNATES))
+def test_alternates_table_is_complete(cls):
+    """A new spec field without an ALTERNATES entry fails HERE — decide how
+    it serializes and sweeps before shipping it (the R3 contract)."""
+    declared = {f.name for f in dataclasses.fields(cls)}
+    covered = set(ALTERNATES[cls])
+    assert declared == covered, (
+        f"{cls.__name__}: uncovered fields {sorted(declared - covered)}, "
+        f"stale table entries {sorted(covered - declared)}")
+
+
+def test_baseline_roundtrips_bit_identically():
+    spec = baseline_spec()
+    back = ServingSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.to_json() == spec.to_json()
+    back.validate()
+
+
+@pytest.mark.parametrize(
+    "cls,field", _PATH_CASES,
+    ids=[f"{c.__name__}.{f}" for c, f in _PATH_CASES])
+def test_every_field_survives_roundtrip_and_sweeps(cls, field):
+    spec = baseline_spec()
+    path, alt = ALTERNATES[cls][field]
+    before = getattr(_GETTERS[cls](spec), field)
+    assert before != alt, (
+        f"{cls.__name__}.{field}: alternate equals the baseline value "
+        f"{before!r}; the roundtrip would prove nothing")
+    overridden = with_override(spec, path, alt).validate()
+    back = ServingSpec.from_json(overridden.to_json())
+    holder = _GETTERS[cls](back)
+    if field == "name":                   # the endpoint was renamed
+        holder = back.endpoint(alt)
+        assert getattr(holder, field) == alt
+    else:
+        assert getattr(holder, field) == alt
+    assert back == overridden
+    assert back.to_json() == overridden.to_json()
+
+
+@pytest.mark.parametrize("field", sorted(ALTERNATES[SLOClass]))
+def test_slo_class_fields_roundtrip_through_mapping(field):
+    """SLO classes live in a mapping, so they sweep as whole values."""
+    spec = baseline_spec()
+    _, alt = ALTERNATES[SLOClass][field]
+    base_cls = spec.endpoints[0].slo_classes["interactive"]
+    assert getattr(base_cls, field) != alt
+    new_map = dict(spec.endpoints[0].slo_classes)
+    new_map["interactive"] = dataclasses.replace(base_cls, **{field: alt})
+    overridden = with_override(spec, "endpoints.chat.slo_classes",
+                               new_map).validate()
+    back = ServingSpec.from_json(overridden.to_json())
+    assert getattr(back.endpoints[0].slo_classes["interactive"],
+                   field) == alt
+    assert back == overridden
+
+
+def test_endpoints_tuple_roundtrips_wholesale():
+    """The endpoints field itself (no dotted path) survives replacement."""
+    spec = baseline_spec()
+    trimmed = dataclasses.replace(spec, endpoints=spec.endpoints[:1])
+    trimmed.validate()
+    back = ServingSpec.from_json(trimmed.to_json())
+    assert back == trimmed
+    assert [e.name for e in back.endpoints] == ["chat"]
+
+
+def test_sweep_grid_covers_and_validates():
+    spec = baseline_spec()
+    grid = sweep(spec, {
+        "router": ["round_robin", "greenest"],
+        "endpoints.chat.max_batch": [1, 8],
+        "carbon.g_per_kwh": [100.0, 300.0],
+    })
+    assert len(grid) == 8
+    seen = set()
+    for assignment, variant in grid:
+        seen.add(tuple(sorted(assignment.items())))
+        assert variant.router == assignment["router"]
+        assert variant.endpoint("chat").max_batch == \
+            assignment["endpoints.chat.max_batch"]
+        assert variant.carbon.g_per_kwh == assignment["carbon.g_per_kwh"]
+        # every grid cell must itself survive the wire format
+        assert ServingSpec.from_json(variant.to_json()) == variant
+    assert len(seen) == 8
+
+
+def test_unknown_field_is_rejected_with_path():
+    spec = baseline_spec()
+    doc = spec.to_dict()
+    doc["endpoints"][0]["autoscale"]["turbo"] = True
+    with pytest.raises(SpecError, match="turbo"):
+        ServingSpec.from_dict(doc)
+
+
+def test_override_unknown_field_is_rejected():
+    with pytest.raises(SpecError):
+        with_override(baseline_spec(), "endpoints.chat.nonexistent", 1)
