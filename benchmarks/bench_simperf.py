@@ -1,0 +1,201 @@
+"""Simulator-throughput bench: how many requests the SIMULATOR serves per
+wall second — the meta-benchmark this repo's million-request frontier runs on.
+
+Two measurements feed the ``sim_throughput`` grid in ``BENCH_serving.json``:
+
+  * the **canonical cell** — a single 100k-request bursty fleet run with the
+    priority ladder and the SLO-aware adaptive policy enabled, i.e. every
+    hot path the PR-7 queue refactor rewrote (ladder pops, ``pending_within``
+    window sizing, flash-crowd backlogs).  Its ``requests_per_wall_s`` is the
+    number :mod:`scripts.check_bench_regression` watches (warn-only, >20%);
+  * the **rate x SLO sweep grid** — the new sweep axes
+    (``endpoints.*.workload.rate_per_s`` x ``endpoints.*.slo_classes.*
+    .slo_ms``) executed through the process pool (``--jobs N``): per-cell
+    seeds, spec-as-JSON transport, :class:`repro.serving.stepcache.
+    ReplayEngine` workers replaying the parent's one-time calibration, and
+    an :class:`~repro.energy.meter.EnergyMeter` merge-on-join with a
+    joule+gram conservation receipt.
+
+Scale knobs (env): ``SIMPERF_CANONICAL_N`` (default 100000) and
+``SIMPERF_GRID_N`` (default 40000 per cell) — the 1M-request acceptance run
+is ``SIMPERF_GRID_N=250000 benchmarks/run.py --only simperf --jobs 4``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from benchmarks.common import emit
+from benchmarks.pool import merge_meters, run_cells
+from repro.configs import get_arch
+from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
+from repro.models import init_params
+from repro.serving.api import (
+    AutoscaleSpec,
+    EndpointSpec,
+    PrioritySpec,
+    ServingSession,
+    ServingSpec,
+    SLOClass,
+    sweep,
+    with_override,
+)
+from repro.serving.stepcache import ReplayEngine, StepTimeCache
+from repro.workload.generators import WorkloadSpec
+
+ARCH = "minitron-4b-smoke"
+PROMPT_LEN = 16
+MAX_NEW = 6
+
+# canonical cell traffic: a background stream punctuated by 2000-request
+# flash crowds — the backlog regime where the old sorted-list queue paid
+# O(backlog) per admission event and the new index-cursor queue pays O(1)
+CANONICAL_N = int(os.environ.get("SIMPERF_CANONICAL_N", 100_000))
+GRID_N = int(os.environ.get("SIMPERF_GRID_N", 40_000))
+
+# Measured once on the canonical 100k cell immediately before the PR-7
+# queue / batched-workload / slots rewrite (same host, same driver, the
+# pre-rewrite tree checked out via git stash; methodology in
+# docs/PERFORMANCE.md).  Kept static so every regenerated grid still shows
+# the frontier jump against the pre-rewrite harness.
+PRE_PR_CANONICAL_REQ_PER_S = 261.5
+
+GRID_RATES = [200.0, 400.0]
+GRID_SLO_MS = [60.0, 120.0]
+
+
+def _base_spec(n: int, rate: float) -> ServingSpec:
+    return ServingSpec(
+        endpoints=(
+            EndpointSpec(
+                name="api", arch=ARCH, model="m", format="rsm",
+                policy="adaptive_batch", max_batch=8, batch_timeout_ms=10.0,
+                max_seq=64, ttft_slo_ms=120.0,
+                slo_classes={"interactive": SLOClass(slo_ms=120.0,
+                                                     priority="standard")},
+                autoscale=AutoscaleSpec(min_replicas=1, max_replicas=4,
+                                        replicas_hint=2, window_s=0.25,
+                                        cold_start_s=0.05),
+                workload=WorkloadSpec(kind="bursty", n=n, rate_per_s=rate,
+                                      prompt_len=PROMPT_LEN,
+                                      max_new_tokens=MAX_NEW,
+                                      burst_n=2000, burst_every_s=4.0,
+                                      burst_rate_per_s=10_000.0, seed=71),
+            ),
+        ),
+        router="least_loaded",
+        priority=PrioritySpec(enabled=True, preempt=False),
+    )
+
+
+def _calibrate(session: ServingSession) -> StepTimeCache:
+    for ep in session.spec.endpoints:
+        session.calibrate(ep.name, batch_sizes=range(1, 9),
+                          prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+    return session._warm_cache("api")
+
+
+def _run_cell(payload):
+    """One sweep cell, self-contained and picklable: deploy the spec's
+    endpoints on ReplayEngines, warm them from the parent's calibration,
+    serve the declared workload under the 'interactive' SLO class."""
+    spec_json, cache_payload, assignment = payload
+    spec = ServingSpec.from_json(spec_json)
+    session = ServingSession()
+    session.deploy(spec, engines={
+        ep.name: ReplayEngine(get_arch(ep.arch)) for ep in spec.endpoints})
+    for ep in spec.endpoints:
+        session.warm(ep.name, StepTimeCache.from_payload(cache_payload))
+    workloads = session.declared_workloads()
+    for name, wl in workloads.items():
+        session.submit(name, wl, slo_class="interactive")
+    n = sum(len(wl) for wl in workloads.values())
+    t0 = time.perf_counter()
+    report = session.run()
+    host_s = time.perf_counter() - t0
+    f = report.fleet
+    row = dict(assignment)
+    row.update({
+        "n_requests": f.n_requests,
+        "host_s": host_s,
+        "sim_requests_per_wall_s": n / max(host_s, 1e-9),
+        "j_per_token": f.j_per_token,
+        "gco2_per_token": f.gco2_per_token,
+        "p95_latency_s": f.latency_p95_s,
+        "mean_ttft_s": f.mean_ttft_s,
+    })
+    return row, report.result.fleet.meter
+
+
+def _canonical(cache: StepTimeCache) -> dict:
+    spec = _base_spec(CANONICAL_N, 250.0)
+    row, _meter = _run_cell((spec.to_json(), cache.to_payload(),
+                             {"cell": "canonical"}))
+    return row
+
+
+def _grid(cache: StepTimeCache, jobs: int) -> dict:
+    base = _base_spec(GRID_N, 250.0)
+    grid = {
+        "endpoints.*.workload.rate_per_s": GRID_RATES,
+        "endpoints.*.slo_classes.*.slo_ms": GRID_SLO_MS,
+    }
+    cells = []
+    for i, (assignment, variant) in enumerate(sweep(base, grid)):
+        # per-cell seeds: every cell draws an independent arrival stream,
+        # so pool results are comparable but never accidentally correlated
+        variant = with_override(variant, "endpoints.*.workload.seed",
+                                1000 + i).validate()
+        cells.append((variant.to_json(), cache.to_payload(),
+                      dict(assignment, seed=1000 + i)))
+    t0 = time.perf_counter()
+    results = run_cells(_run_cell, cells, jobs)
+    grid_host_s = time.perf_counter() - t0
+    rows = [row for row, _ in results]
+    merged, receipt = merge_meters(
+        [meter for _, meter in results],
+        active_power_w=HOST_CPU_POWER_W, idle_power_w=HOST_CPU_IDLE_POWER_W)
+    total_requests = sum(r["n_requests"] for r in rows)
+    return {
+        "rows": rows,
+        "jobs": jobs,
+        "total_requests": total_requests,
+        "grid_host_s": grid_host_s,
+        "grid_requests_per_wall_s": total_requests / max(grid_host_s, 1e-9),
+        "conservation": receipt,
+    }
+
+
+def run(jobs: int = 1):
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+    session.deploy(_base_spec(1, 250.0), params={"m": params})
+    t0 = time.perf_counter()
+    cache = _calibrate(session)
+    cal_s = time.perf_counter() - t0
+
+    canonical = _canonical(cache)
+    grid = _grid(cache, jobs)
+
+    out = {
+        "canonical": dict(canonical,
+                          pre_pr_requests_per_wall_s=PRE_PR_CANONICAL_REQ_PER_S,
+                          speedup_vs_pre_pr=(canonical["sim_requests_per_wall_s"]
+                                             / PRE_PR_CANONICAL_REQ_PER_S)),
+        "grid": grid,
+    }
+    emit("simperf_canonical",
+         canonical["host_s"] * 1e6,
+         f"req_per_s={canonical['sim_requests_per_wall_s']:.0f};"
+         f"n={canonical['n_requests']};cal_s={cal_s:.2f};"
+         f"speedup_vs_pre_pr={out['canonical']['speedup_vs_pre_pr']:.1f}x")
+    emit("simperf_grid",
+         grid["grid_host_s"] * 1e6,
+         f"req_per_s={grid['grid_requests_per_wall_s']:.0f};"
+         f"n={grid['total_requests']};jobs={jobs};"
+         f"joules_conserved={grid['conservation']['joules_conserved']}")
+    return out

@@ -11,6 +11,8 @@ run (the CI bench job uploads it as an artifact).
   bench_decisions      - ServingSpec sweep: format x router grid (pure data)
   bench_carbon         - temporal grid: carbon signal x deferral x router
   bench_disagg         - admission grid: disaggregation x priority-mix x router
+  bench_simperf        - simulator throughput: canonical 100k cell + pooled
+                         rate x SLO sweep (honors --jobs)
   bench_formats        - Table 1, TD2 model-format row
   bench_codecs         - Table 1, TD4 communication-protocol row
   bench_adds           - Table 1 executed as GreenReports (all qualities)
@@ -23,6 +25,7 @@ run (the CI bench job uploads it as an artifact).
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -50,6 +53,8 @@ def write_serving_json(path: str, results: dict) -> None:
         doc["carbon_grid"] = results["bench_carbon"]
     if "bench_disagg" in results:
         doc["disagg_grid"] = results["bench_disagg"]
+    if "bench_simperf" in results:
+        doc["sim_throughput"] = results["bench_simperf"]
     if "bench_batching" in results:
         doc["batching"] = {
             name: m.summary() for name, m in results["bench_batching"].items()
@@ -72,17 +77,21 @@ def main(argv=None) -> None:
         bench_kernels,
         bench_roofline,
         bench_serving_infra,
+        bench_simperf,
     )
 
     modules = [bench_codecs, bench_formats, bench_kernels,
                bench_serving_infra, bench_batching, bench_fleet,
-               bench_decisions, bench_carbon, bench_disagg, bench_adds,
-               bench_roofline]
+               bench_decisions, bench_carbon, bench_disagg, bench_simperf,
+               bench_adds, bench_roofline]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated module names (e.g. bench_fleet)")
     ap.add_argument("--serving-json", default="BENCH_serving.json",
                     help="where to write the serving results JSON")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="process-pool width for sweep-cell benches "
+                         "(modules whose run() accepts jobs=)")
     ns = ap.parse_args(argv)
     if ns.only:
         wanted = {w if w.startswith("bench_") else f"bench_{w}"
@@ -98,12 +107,15 @@ def main(argv=None) -> None:
     failed = []
     for mod in modules:
         try:
-            results[mod.__name__.split(".")[-1]] = mod.run()
+            kwargs = {}
+            if "jobs" in inspect.signature(mod.run).parameters:
+                kwargs["jobs"] = ns.jobs
+            results[mod.__name__.split(".")[-1]] = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             failed.append((mod.__name__, e))
             traceback.print_exc()
     if results.keys() & {"bench_fleet", "bench_batching", "bench_decisions",
-                         "bench_carbon", "bench_disagg"}:
+                         "bench_carbon", "bench_disagg", "bench_simperf"}:
         write_serving_json(ns.serving_json, results)
     if failed:
         print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)

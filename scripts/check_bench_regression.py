@@ -7,7 +7,12 @@ Compares a freshly generated grid against the checked-in
     fleet grid for old baselines);
   * the **carbon-aware-router gCO2/token** (carbon grid);
   * the **interactive-class p95 TTFT** (disagg grid) — the latency contract
-    the admission layer must not trade away while chasing J/token.
+    the admission layer must not trade away while chasing J/token;
+  * the **simulator throughput** (sim_throughput grid, canonical cell) —
+    simulated requests per wall second, a HIGHER-is-better meta-metric: a
+    >20% drop warns that the event loop itself got slower (PR 7's hot-path
+    work regressing).  Always warn-only — wall-clock throughput is the one
+    number here that genuinely varies across bench hosts.
 
 A relative regression beyond ``--threshold`` emits a GitHub Actions
 ``::warning::`` annotation — loud on the PR, but not red (bench hosts are
@@ -64,6 +69,36 @@ def interactive_p95_ttft(doc: dict) -> float | None:
     measurement rows, any router (None for pre-admission baselines;
     headline rows carry no per-cell metric and fall out of the filter)."""
     return _min_cell(doc, "disagg_grid", None, "interactive_p95_ttft_s")
+
+
+def sim_requests_per_wall_s(doc: dict) -> float | None:
+    """The canonical cell's simulated-requests-per-wall-second (None for
+    baselines predating the sim_throughput grid)."""
+    cell = (doc.get("sim_throughput") or {}).get("canonical") or {}
+    v = cell.get("sim_requests_per_wall_s")
+    return v if isinstance(v, (int, float)) else None
+
+
+def check_sim_throughput(base: float | None, fresh: float | None,
+                         baseline_path: str) -> int:
+    """Warn (never fail) when the fresh simulator throughput fell more
+    than 20% below baseline.  Higher is better, so the sign is flipped
+    relative to the energy/latency metrics; always returns 0 — sim
+    throughput is host-sensitive and must never gate, only annotate."""
+    if base is None or fresh is None or base <= 0:
+        if base is not None or fresh is not None:
+            print(f"::warning file={baseline_path}::no comparable "
+                  f"sim-throughput cells (baseline={base}, fresh={fresh})")
+        return 0
+    rel = (fresh - base) / base
+    msg = (f"sim requests/wall-s: baseline={base:.0f} fresh={fresh:.0f} "
+           f"({rel:+.1%})")
+    if rel < -0.20:
+        print(f"::warning file={baseline_path},title=simulator slowdown::"
+              f"{msg} — the event loop got >20% slower")
+    else:
+        print(f"# ok: {msg}")
+    return 0
 
 
 def check_metric(label: str, base: float | None, fresh: float | None,
@@ -137,6 +172,9 @@ def main(argv=None) -> int:
                            interactive_p95_ttft(base_doc),
                            interactive_p95_ttft(fresh_doc),
                            ns.threshold, ns.baseline, ns.fresh)
+    status |= check_sim_throughput(sim_requests_per_wall_s(base_doc),
+                                   sim_requests_per_wall_s(fresh_doc),
+                                   ns.baseline)
     return status
 
 

@@ -1,0 +1,69 @@
+"""cProfile harness over the canonical 100k-request fleet run.
+
+The next perf PR should start from data, not guesses: this script runs the
+same canonical cell ``benchmarks/bench_simperf`` measures (bursty traffic,
+priority ladder, SLO-aware adaptive policy — every hot path in the serving
+event loop), under ``cProfile``, prints the top cumulative hot spots, and
+writes a ``.prof`` artifact for ``snakeviz``/``pstats`` spelunking.
+
+Usage:
+    PYTHONPATH=src:. python scripts/profile_sim.py
+    PYTHONPATH=src:. python scripts/profile_sim.py --n 20000 --top 30 \
+        --out /tmp/sim.prof
+
+Calibration (real jax execution) happens OUTSIDE the profiled region — the
+profile shows where the *simulator* spends its time, not XLA compile time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import pstats
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000,
+                    help="requests in the profiled run (default: the "
+                         "canonical 100k cell)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="rows of the cumulative-time report")
+    ap.add_argument("--out", default="profile_sim.prof",
+                    help="where to write the .prof artifact")
+    ns = ap.parse_args(argv)
+
+    import jax
+
+    from benchmarks import bench_simperf
+    from repro.configs import get_arch
+    from repro.models import init_params
+    from repro.serving.api import ServingSession
+
+    cfg = get_arch(bench_simperf.ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+    session.deploy(bench_simperf._base_spec(1, 250.0), params={"m": params})
+    print(f"# calibrating {bench_simperf.ARCH} (outside the profile)...",
+          file=sys.stderr)
+    cache = bench_simperf._calibrate(session)
+
+    payload = (bench_simperf._base_spec(ns.n, 250.0).to_json(),
+               cache.to_payload(), {"cell": "profiled"})
+    print(f"# profiling a {ns.n}-request canonical run...", file=sys.stderr)
+    prof = cProfile.Profile()
+    prof.enable()
+    row, _meter = bench_simperf._run_cell(payload)
+    prof.disable()
+    prof.dump_stats(ns.out)
+
+    stats = pstats.Stats(prof, stream=sys.stdout)
+    stats.sort_stats("cumulative").print_stats(ns.top)
+    print(f"# {row['n_requests']} requests in {row['host_s']:.2f}s host "
+          f"({row['sim_requests_per_wall_s']:.0f} req/s); "
+          f"artifact: {ns.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -58,6 +58,7 @@ adapters over this module (kept for compatibility); new code should build a
 
 from __future__ import annotations
 
+import collections.abc as _abc
 import dataclasses
 import itertools
 import json
@@ -515,7 +516,26 @@ def _replace_path(obj, parts: Sequence[str], value, path: str):
         raise SpecError(path, f"{type(obj).__name__} has no field {head!r}")
     if len(parts) == 1:
         return dataclasses.replace(obj, **{head: value})
-    sub = _replace_path(getattr(obj, head), parts[1:], value, path)
+    cur = getattr(obj, head)
+    if cur is None:
+        raise SpecError(path, f"{type(obj).__name__}.{head} is unset; "
+                              f"cannot descend into it")
+    if isinstance(cur, _abc.Mapping):
+        # mapping fields sweep by key: slo_classes.<name>.slo_ms or
+        # slo_classes.*.slo_ms (all classes at once — the rate x SLO grid)
+        key, rest = parts[1], parts[2:]
+        if not rest:
+            raise SpecError(path, f"mapping override needs a field after "
+                                  f"the key, e.g. {head}.{key or '<name>'}"
+                                  f".<field>")
+        if key != "*" and key not in cur:
+            raise SpecError(path, f"{head!r} has no key {key!r}; "
+                                  f"known: {sorted(cur)}")
+        new = {k: (_replace_path(v, rest, value, path)
+                   if key in ("*", k) else v)
+               for k, v in cur.items()}
+        return dataclasses.replace(obj, **{head: new})
+    sub = _replace_path(cur, parts[1:], value, path)
     return dataclasses.replace(obj, **{head: sub})
 
 

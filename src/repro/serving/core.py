@@ -36,16 +36,16 @@ Two entry modes share one event loop:
 
 from __future__ import annotations
 
-import bisect
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.carbon.signal import CarbonSignal
-from repro.core.engines import Engine, token_landing_s
+from repro.core.engines import Engine
 from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
 from repro.energy.sanitize import new_meter
 from repro.serving.admission.priority import AdmissionControl, priority_level
+from repro.serving.queue import PendingQueue
 from repro.serving.request import Request, Response, ServingMetrics
 from repro.serving.stepcache import StepTimeCache, shape_bucket, synth_tokens
 
@@ -107,9 +107,10 @@ class SchedulerCore:
         self._reset([])
 
     def _reset(self, workload: List[Request]) -> None:
-        self.pending: List[Request] = sorted(workload,
-                                             key=lambda r: r.arrival_s)
-        self._head = 0
+        # rung indices only under a ladder: the FIFO path must never
+        # classify priority names (unknown names must not raise)
+        self.pending = PendingQueue(workload,
+                                    use_rungs=self.admission is not None)
         self.clock = 0.0
         self.wall = 0.0
         self.responses: List[Response] = []
@@ -127,40 +128,15 @@ class SchedulerCore:
         return self.clock
 
     def peek(self) -> Optional[Request]:
-        if self._head < len(self.pending):
-            return self.pending[self._head]
-        return None
+        return self.pending.peek()
 
     def pop(self) -> Request:
-        req = self.pending[self._head]
-        self._head += 1
-        return req
+        return self.pending.pop()
 
     def has_pending(self) -> bool:
-        return self._head < len(self.pending)
+        return self.pending.has_pending()
 
     # -- priority-ordered admission (repro.serving.admission) -----------------
-    def _best_visible(self, t: float) -> Optional[int]:
-        """Index of the most urgent pending arrival visible by ``t``
-        ((level, arrival, rid) order), or None if nothing has arrived."""
-        best = None
-        top = None          # arrival of the first top-rung request seen
-        for idx in range(self._head, len(self.pending)):
-            r = self.pending[idx]
-            if r.arrival_s > t + 1e-12:
-                break
-            if top is not None and r.arrival_s > top + 1e-12:
-                # arrival-sorted scan: a top-rung request was found and the
-                # exact-tie window has closed — nothing later can beat it.
-                # Stops the scan going quadratic over a congested backlog
-                break
-            key = (priority_level(r.priority), r.arrival_s, r.rid)
-            if best is None or key < best[0]:
-                best = (key, idx)
-            if key[0] == 0 and top is None:
-                top = r.arrival_s
-        return None if best is None else best[1]
-
     def peek_next(self, visible_t: Optional[float] = None) -> Optional[Request]:
         """The request :meth:`pop_next` would return, without removing it."""
         nxt = self.peek()
@@ -168,8 +144,8 @@ class SchedulerCore:
             return nxt
         t = visible_t if visible_t is not None \
             else max(self.clock, nxt.arrival_s)
-        i = self._best_visible(t)
-        return nxt if i is None else self.pending[i]
+        best = self.pending.peek_best(t)
+        return nxt if best is None else best
 
     def pop_next(self, visible_t: Optional[float] = None) -> Request:
         """FIFO pop — unless an admission ladder is configured, in which
@@ -182,42 +158,21 @@ class SchedulerCore:
         nxt = self.peek()
         t = visible_t if visible_t is not None \
             else max(self.clock, nxt.arrival_s)
-        i = self._best_visible(t)
-        if i is None:
+        best = self.pending.pop_best(t)
+        if best is None:
             return self.pop()
-        return self.pending.pop(i)
+        return best
 
     def _pop_preemptor(self, level: int, before_s: float) -> Optional[Request]:
         """Remove and return the earliest pending arrival strictly more
         urgent than ``level`` arriving strictly before ``before_s``."""
-        best = None
-        for idx in range(self._head, len(self.pending)):
-            r = self.pending[idx]
-            if r.arrival_s >= before_s:
-                break
-            if best is not None and r.arrival_s > best[0][0] + 1e-12:
-                # arrival-sorted scan: past the first preemptor's exact-tie
-                # window nothing can arrive earlier — stop
-                break
-            lv = priority_level(r.priority)
-            if lv >= level:
-                continue
-            key = (r.arrival_s, lv, r.rid)
-            if best is None or key < best[0]:
-                best = (key, idx)
-        if best is None:
-            return None
-        return self.pending.pop(best[1])
+        return self.pending.pop_preemptor(level, before_s)
 
     def pending_within(self, t: float) -> List[Request]:
         """Queued-but-unpopped arrivals with ``arrival_s <= t`` (for SLO-aware
-        policies that size a batch from what is visible in the window)."""
-        out = []
-        for req in self.pending[self._head:]:
-            if req.arrival_s > t:
-                break
-            out.append(req)
-        return out
+        policies that size a batch from what is visible in the window) — a
+        bisected slice view, not a rescan of the whole backlog."""
+        return self.pending.pending_within(t)
 
     @property
     def vocab(self) -> int:
@@ -320,18 +275,26 @@ class SchedulerCore:
             return w
 
         first_s = to_wall(prefill_s)
+        # vectorized token-landing math: same IEEE double expression as
+        # token_landing_s evaluated elementwise (bit-identical offsets)
+        step = decode_s / max(max_new - 1, 1)
+        n_arr = np.fromiter((min(r.max_new_tokens, max_new) for r in batch),
+                            np.int64, count=len(batch))
+        land_c = prefill_s + np.maximum(n_arr - 1, 0) * step
+        done_w = None if intr else start_s + land_c
         done_c = {}                      # rid -> landing compute offset
         done_by_rid = {}
         n_tokens = 0
+        vocab = self.vocab
         for bi, req in enumerate(batch):
-            n = min(req.max_new_tokens, max_new)
+            n = int(n_arr[bi])
             if res is not None:
                 toks = np.asarray(res.tokens[bi, :n])
             else:
-                toks = synth_tokens(req.prompt, n, self.vocab)
-            c = token_landing_s(prefill_s, decode_s, max_new, n)
+                toks = synth_tokens(req.prompt, n, vocab)
+            c = float(land_c[bi])
             done_c[req.rid] = c
-            done = to_wall(c)
+            done = to_wall(c) if intr else float(done_w[bi])
             done_by_rid[req.rid] = done
             self.record_response(req, toks, start_s, first_s, done)
             n_tokens += n
@@ -466,15 +429,19 @@ class SchedulerCore:
         self.advance_to(start_s)
         _prefill_s, decode_s, res, max_new = self._timed_generate(batch)
         step = decode_s / max(max_new - 1, 1)
+        n_arr = np.fromiter((min(r.max_new_tokens, max_new) for r in batch),
+                            np.int64, count=len(batch))
+        done_arr = start_s + np.maximum(n_arr - 1, 0) * step
         done_by_rid = {}
         n_tokens = 0
+        vocab = self.vocab
         for bi, req in enumerate(batch):
-            n = min(req.max_new_tokens, max_new)
+            n = int(n_arr[bi])
             if res is not None:
                 toks = np.asarray(res.tokens[bi, 1:n])
             else:
-                toks = synth_tokens(req.prompt, n, self.vocab)[1:]
-            done = start_s + max(n - 1, 0) * step
+                toks = synth_tokens(req.prompt, n, vocab)[1:]
+            done = float(done_arr[bi])
             done_by_rid[req.rid] = done
             # first_token_s is the prefill leg's business; the fleet stitches
             self.record_response(req, toks, start_s, start_s, done)
@@ -503,14 +470,7 @@ class SchedulerCore:
     def offer(self, req: Request) -> None:
         """Enqueue one arrival.  Routers offer in global arrival order, so
         this is an O(1) append; out-of-order offers fall back to insort."""
-        if not self.pending or req.arrival_s >= self.pending[-1].arrival_s:
-            self.pending.append(req)
-        else:
-            lo = bisect.bisect_right(
-                [r.arrival_s for r in self.pending[self._head:]],
-                req.arrival_s,
-            )
-            self.pending.insert(self._head + lo, req)
+        self.pending.push(req)
 
     def drain_until(self, horizon: float = float("inf")) -> None:
         """Process events whose arrivals lie at or before ``horizon``.

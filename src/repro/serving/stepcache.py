@@ -41,6 +41,34 @@ def synth_tokens(prompt: np.ndarray, n: int, vocab: int) -> np.ndarray:
     return ((seed + 2654435761 * (i + 1)) % max(int(vocab), 1)).astype(np.int32)
 
 
+class ReplayEngine:
+    """Engine stand-in for pure-replay cells: a warm :class:`StepTimeCache`
+    means the model is never executed, so sweep workers (which run in
+    separate processes and must not re-calibrate or even import jax state)
+    deploy endpoints with this stub instead of a real engine.  Any cache
+    miss — a shape the parent did not calibrate — fails loudly rather than
+    silently simulating with made-up step times."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def _refuse(self, what: str):
+        raise RuntimeError(
+            f"ReplayEngine cannot execute {what}: this shape is missing "
+            "from the warm StepTimeCache — calibrate it in the parent "
+            "process before dispatching replay cells")
+
+    def generate(self, tokens, max_new_tokens):
+        self._refuse(f"generate(B={tokens.shape[0]}, S={tokens.shape[1]}, "
+                     f"max_new={max_new_tokens})")
+
+    def prefill_one(self, tokens):
+        self._refuse("prefill_one")
+
+    def decode_batch(self, cache, tokens):
+        self._refuse("decode_batch")
+
+
 class StepTimeCache:
     """Measured step durations keyed by execution shape; first write wins."""
 
@@ -48,6 +76,20 @@ class StepTimeCache:
         self._times: Dict[tuple, Tuple[float, ...]] = {}
         self.hits = 0
         self.misses = 0
+
+    # -- cross-process transport (the sweep pool ships calibrations) ----------
+    def to_payload(self) -> Dict[tuple, Tuple[float, ...]]:
+        """Picklable snapshot of the measurements (plain dict of tuples)."""
+        return dict(self._times)
+
+    @classmethod
+    def from_payload(cls,
+                     payload: Dict[tuple, Tuple[float, ...]]
+                     ) -> "StepTimeCache":
+        cache = cls()
+        for k, v in payload.items():
+            cache._times[tuple(k)] = tuple(float(x) for x in v)
+        return cache
 
     def __len__(self) -> int:
         return len(self._times)

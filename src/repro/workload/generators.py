@@ -40,21 +40,27 @@ def _requests(times: np.ndarray, rng: np.random.RandomState, prompt_len: int,
               deadline_s: Optional[float],
               priority: Optional[str] = None) -> List[Request]:
     """Stamp prompts/ids/budgets onto computed arrival instants.  Prompts
-    are drawn AFTER all arrival times, one randint per request in arrival
-    order — the exact RNG call sequence the legacy generator used, so seeds
-    keep producing bit-identical workloads."""
+    are drawn AFTER all arrival times in ONE batched randint: RandomState
+    fills the ``(n, prompt_len)`` matrix row-major from the same MT19937
+    stream as ``n`` sequential per-request draws, so both the token values
+    and the post-call RNG state are bit-identical to the legacy per-request
+    loop (regression-tested in ``tests/test_workload.py``)."""
+    n = len(times)
+    if n == 0:
+        return []
+    prompts = rng.randint(0, vocab, size=(n, prompt_len)).astype(np.int32)
+    arrivals = np.asarray(times, np.float64).tolist()
     return [
         Request(
             rid=rid0 + i,
-            prompt=rng.randint(0, vocab, size=prompt_len).astype(np.int32),
+            prompt=prompts[i],
             max_new_tokens=max_new,
-            arrival_s=float(t),
+            arrival_s=t,
             slo_ms=slo_ms,
-            deadline_s=(float(t) + deadline_s
-                        if deadline_s is not None else None),
+            deadline_s=(t + deadline_s if deadline_s is not None else None),
             priority=priority,
         )
-        for i, t in enumerate(times)
+        for i, t in enumerate(arrivals)
     ]
 
 

@@ -38,6 +38,9 @@ def _doc():
         "disagg_grid": [
             {"router": "round_robin", "interactive_p95_ttft_s": 0.02},
         ],
+        "sim_throughput": {
+            "canonical": {"sim_requests_per_wall_s": 15000.0},
+        },
     }
 
 
@@ -146,6 +149,48 @@ def test_fleet_grid_fallback_still_compares(tmp_path):
     base = _write(tmp_path, "base.json", old)
     fresh = _write(tmp_path, "fresh.json", _doc())
     assert _run(base, fresh) == 0
+
+
+def test_sim_throughput_drop_warns_but_never_fails(tmp_path, capsys):
+    """Simulator throughput is host-sensitive: a >20% drop annotates the
+    PR (title=simulator slowdown) but must never gate the job."""
+    doc = _doc()
+    doc["sim_throughput"]["canonical"]["sim_requests_per_wall_s"] = 9000.0
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "simulator slowdown" in out and "::error" not in out
+
+
+def test_sim_throughput_gain_is_ok(tmp_path, capsys):
+    doc = _doc()
+    doc["sim_throughput"]["canonical"]["sim_requests_per_wall_s"] = 30000.0
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    assert "simulator slowdown" not in capsys.readouterr().out
+
+
+def test_sim_throughput_small_drop_is_within_budget(tmp_path, capsys):
+    doc = _doc()
+    doc["sim_throughput"]["canonical"]["sim_requests_per_wall_s"] = 13000.0
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    assert "simulator slowdown" not in capsys.readouterr().out
+
+
+def test_fresh_lost_sim_throughput_only_warns(tmp_path, capsys):
+    """Unlike the energy/latency grids, losing sim_throughput is warn-only:
+    quick --only runs legitimately skip the simperf bench."""
+    doc = _doc()
+    del doc["sim_throughput"]
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "::warning" in out and "::error" not in out
 
 
 def test_checked_in_baseline_is_self_consistent():

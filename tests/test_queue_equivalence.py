@@ -1,0 +1,261 @@
+"""Property suite: the index-cursor PendingQueue is bit-identical to the
+old sorted-list admission semantics.
+
+``_LegacyQueue`` below is a verbatim transplant of the pre-refactor
+``SchedulerCore`` queue code (sorted list + ``pop(i)`` + arrival-sorted
+scans, including its early-stop optimizations and exact tolerance
+constants).  The randomized driver runs both implementations through the
+same operation stream — FIFO pops, ladder pops at adversarial visible-time
+cursors, preemptor extraction, window slices, in-order and out-of-order
+offers — over workloads engineered to contain exact arrival ties, shuffled
+rids, and mixed priority classes, and asserts every observable agrees at
+every step.  Any divergence in tie-breaks, ladder ordering, FIFO-within-
+class order, or tolerance handling fails here long before it could skew a
+benchmark grid.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.admission.priority import priority_level
+from repro.serving.queue import PendingQueue
+from repro.serving.request import Request
+
+PRIORITIES = ("interactive", "standard", "batch")
+
+
+class _LegacyQueue:
+    """The pre-refactor sorted-list queue, verbatim (reference semantics)."""
+
+    def __init__(self, workload):
+        self.pending = sorted(workload, key=lambda r: r.arrival_s)
+        self._head = 0
+
+    def peek(self):
+        if self._head < len(self.pending):
+            return self.pending[self._head]
+        return None
+
+    def pop(self):
+        req = self.pending[self._head]
+        self._head += 1
+        return req
+
+    def has_pending(self):
+        return self._head < len(self.pending)
+
+    def _best_visible(self, t):
+        best = None
+        top = None
+        for idx in range(self._head, len(self.pending)):
+            r = self.pending[idx]
+            if r.arrival_s > t + 1e-12:
+                break
+            if top is not None and r.arrival_s > top + 1e-12:
+                break
+            key = (priority_level(r.priority), r.arrival_s, r.rid)
+            if best is None or key < best[0]:
+                best = (key, idx)
+            if key[0] == 0 and top is None:
+                top = r.arrival_s
+        return None if best is None else best[1]
+
+    def peek_best(self, t):
+        i = self._best_visible(t)
+        return None if i is None else self.pending[i]
+
+    def pop_best(self, t):
+        i = self._best_visible(t)
+        return None if i is None else self.pending.pop(i)
+
+    def pop_preemptor(self, level, before_s):
+        best = None
+        for idx in range(self._head, len(self.pending)):
+            r = self.pending[idx]
+            if r.arrival_s >= before_s:
+                break
+            if best is not None and r.arrival_s > best[0][0] + 1e-12:
+                break
+            lv = priority_level(r.priority)
+            if lv >= level:
+                continue
+            key = (r.arrival_s, lv, r.rid)
+            if best is None or key < best[0]:
+                best = (key, idx)
+        if best is None:
+            return None
+        return self.pending.pop(best[1])
+
+    def pending_within(self, t):
+        out = []
+        for req in self.pending[self._head:]:
+            if req.arrival_s > t:
+                break
+            out.append(req)
+        return out
+
+    def push(self, req):
+        import bisect
+
+        if not self.pending or req.arrival_s >= self.pending[-1].arrival_s:
+            self.pending.append(req)
+        else:
+            lo = bisect.bisect_right(
+                [r.arrival_s for r in self.pending[self._head:]],
+                req.arrival_s,
+            )
+            self.pending.insert(self._head + lo, req)
+
+
+_PROMPT = np.arange(4, dtype=np.int32)
+
+
+def _mk_request(rid, arrival, priority):
+    return Request(rid=rid, prompt=_PROMPT, max_new_tokens=4,
+                   arrival_s=arrival, priority=priority)
+
+
+def _mk_workload(rng, n):
+    """Arrivals quantized to force exact ties; rids shuffled so rid order
+    disagrees with arrival order (exercises the rid tie-break)."""
+    gaps = rng.exponential(0.05, size=n)
+    times = np.round(np.cumsum(gaps), 2)        # coarse grid -> exact ties
+    rids = rng.permutation(n)
+    prios = rng.choice(len(PRIORITIES), size=n)
+    return [_mk_request(int(rids[i]), float(times[i]),
+                        PRIORITIES[prios[i]]) for i in range(n)]
+
+
+def _pick_t(rng, queues):
+    """A visible-time cursor near a real arrival, jittered across the
+    1e-12 tolerance boundary (and occasionally far away)."""
+    legacy = queues[0]
+    tail = legacy.pending[legacy._head:]
+    if tail and rng.rand() < 0.8:
+        base = tail[rng.randint(len(tail))].arrival_s
+    else:
+        base = float(rng.rand() * 3.0)
+    jitter = rng.choice([0.0, 0.0, 1e-13, -1e-13, 1e-9, -1e-9, 0.5, -0.5])
+    return base + float(jitter)
+
+
+def _rid(x):
+    return None if x is None else x.rid
+
+
+def _drive(seed, n, n_ops, ladder):
+    rng = np.random.RandomState(seed)
+    wl = _mk_workload(rng, n)
+    legacy = _LegacyQueue(list(wl))
+    fast = PendingQueue(list(wl), use_rungs=ladder)
+    next_rid = n
+    ops = ["pop", "peek", "within", "push"]
+    if ladder:
+        ops += ["pop_best", "peek_best", "preemptor"]
+    for _ in range(n_ops):
+        assert legacy.has_pending() == fast.has_pending()
+        op = ops[rng.randint(len(ops))]
+        if op == "pop":
+            if not legacy.has_pending():
+                continue
+            assert legacy.pop().rid == fast.pop().rid
+        elif op == "peek":
+            assert _rid(legacy.peek()) == _rid(fast.peek())
+        elif op == "pop_best":
+            t = _pick_t(rng, (legacy,))
+            assert _rid(legacy.pop_best(t)) == _rid(fast.pop_best(t))
+        elif op == "peek_best":
+            t = _pick_t(rng, (legacy,))
+            assert _rid(legacy.peek_best(t)) == _rid(fast.peek_best(t))
+        elif op == "preemptor":
+            level = int(rng.randint(0, 4))
+            t = _pick_t(rng, (legacy,))
+            assert _rid(legacy.pop_preemptor(level, t)) == \
+                _rid(fast.pop_preemptor(level, t))
+        elif op == "within":
+            t = _pick_t(rng, (legacy,))
+            assert [r.rid for r in legacy.pending_within(t)] == \
+                [r.rid for r in fast.pending_within(t)]
+        elif op == "push":
+            # out-of-order pushes included: decode handoff legs and
+            # deferral releases arrive behind the frontier
+            arr = float(np.round(rng.rand() * 3.0, 2))
+            req = _mk_request(next_rid, arr,
+                              PRIORITIES[rng.randint(len(PRIORITIES))])
+            next_rid += 1
+            legacy.push(req)
+            fast.push(req)
+    # drain what's left through the richest op and compare the full order
+    while legacy.has_pending():
+        t = max(r.arrival_s for r in legacy.pending[legacy._head:]) + 1.0
+        if ladder:
+            assert legacy.pop_best(t).rid == fast.pop_best(t).rid
+        else:
+            assert legacy.pop().rid == fast.pop().rid
+    assert not fast.has_pending()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_ladder_equivalence_randomized(seed):
+    _drive(seed, n=120, n_ops=400, ladder=True)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fifo_equivalence_randomized(seed):
+    _drive(seed + 100, n=120, n_ops=400, ladder=False)
+
+
+def test_exact_tie_breaks_by_rid_within_rung():
+    # three same-instant standard arrivals with shuffled rids: the ladder
+    # pops the smallest rid first (the old full-scan min's tie-break)
+    wl = [_mk_request(rid, 1.0, "standard") for rid in (7, 3, 5)]
+    fast = PendingQueue(list(wl), use_rungs=True)
+    legacy = _LegacyQueue(list(wl))
+    order_fast = [fast.pop_best(1.0).rid for _ in range(3)]
+    order_legacy = [legacy.pop_best(1.0).rid for _ in range(3)]
+    assert order_fast == order_legacy == [3, 5, 7]
+
+
+def test_ladder_orders_across_rungs_fifo_within_class():
+    wl = [
+        _mk_request(0, 0.0, "batch"),
+        _mk_request(1, 0.1, "batch"),
+        _mk_request(2, 0.2, "interactive"),
+        _mk_request(3, 0.3, "interactive"),
+        _mk_request(4, 0.4, "standard"),
+    ]
+    fast = PendingQueue(list(wl), use_rungs=True)
+    order = [fast.pop_best(10.0).rid for _ in range(5)]
+    # interactive rung first (FIFO within), then standard, then batch
+    assert order == [2, 3, 4, 0, 1]
+
+
+def test_visibility_tolerance_boundary():
+    wl = [_mk_request(0, 1.0, "interactive")]
+    fast = PendingQueue(list(wl), use_rungs=True)
+    legacy = _LegacyQueue(list(wl))
+    for t in (1.0 - 1e-11, 1.0 - 1e-13, 1.0, 1.0 + 1e-13):
+        assert _rid(legacy.peek_best(t)) == _rid(fast.peek_best(t))
+
+
+def test_preemptor_strictly_before_and_strictly_more_urgent():
+    wl = [_mk_request(0, 1.0, "interactive"),
+          _mk_request(1, 1.0, "standard")]
+    fast = PendingQueue(list(wl), use_rungs=True)
+    # strict arrival cut: nothing arrives strictly before 1.0
+    assert fast.pop_preemptor(2, 1.0) is None
+    # strict urgency cut: level 0 admits no preemptors at all
+    assert fast.pop_preemptor(0, 5.0) is None
+    got = fast.pop_preemptor(2, 1.5)
+    assert got is not None and got.rid == 0
+    # standard (level 1) is not strictly more urgent than level 1
+    assert fast.pop_preemptor(1, 5.0) is None
+
+
+def test_fifo_path_never_classifies_priorities():
+    # unknown priority names must not raise on the FIFO (no-ladder) path,
+    # exactly like the old core which only keyed priorities under a ladder
+    wl = [_mk_request(0, 0.0, "not-a-class"), _mk_request(1, 1.0, None)]
+    fast = PendingQueue(list(wl), use_rungs=False)
+    assert fast.pop().rid == 0
+    assert fast.pop().rid == 1

@@ -236,6 +236,68 @@ def test_star_override_hits_every_endpoint():
     assert all(ep.max_seq == 64 for ep in spec.endpoints)
 
 
+# -- mapping-path overrides (the rate x SLO sweep axes) ------------------------
+
+
+def test_mapping_override_star_hits_every_slo_class():
+    base = base_spec()
+    spec = with_override(base, "endpoints.chat.slo_classes.*.slo_ms", 80.0)
+    assert all(c.slo_ms == 80.0
+               for c in spec.endpoint("chat").slo_classes.values())
+    # copy-on-write: the original spec's classes are untouched
+    assert base.endpoint("chat").slo_classes["interactive"].slo_ms == 100.0
+
+
+def test_mapping_override_named_key_leaves_siblings():
+    spec = with_override(base_spec(),
+                         "endpoints.chat.slo_classes.interactive.slo_ms",
+                         55.0)
+    classes = spec.endpoint("chat").slo_classes
+    assert classes["interactive"].slo_ms == 55.0
+    assert classes["batch"].slo_ms is None
+
+
+def test_mapping_override_unknown_key_rejected():
+    with pytest.raises(SpecError, match="no key 'premium'"):
+        with_override(base_spec(),
+                      "endpoints.chat.slo_classes.premium.slo_ms", 10.0)
+
+
+def test_mapping_override_needs_trailing_field():
+    with pytest.raises(SpecError, match="field after the key"):
+        with_override(base_spec(),
+                      "endpoints.chat.slo_classes.interactive", 10.0)
+
+
+def test_override_cannot_descend_into_unset_field():
+    # bulk declares no workload; the path must fail loudly, not invent one
+    with pytest.raises(SpecError, match="unset"):
+        with_override(base_spec(), "endpoints.bulk.workload.rate_per_s",
+                      100.0)
+
+
+def test_sweep_rate_x_slo_axes():
+    from repro.workload.generators import WorkloadSpec
+
+    base = base_spec(endpoints=(
+        EndpointSpec(name="api", arch=ARCH, max_batch=8,
+                     slo_classes={"interactive": SLOClass(slo_ms=100.0)},
+                     workload=WorkloadSpec(kind="poisson", n=10,
+                                           rate_per_s=50.0, seed=3)),
+    ))
+    grid = sweep(base, {
+        "endpoints.*.workload.rate_per_s": [100.0, 200.0],
+        "endpoints.*.slo_classes.*.slo_ms": [60.0, 120.0],
+    })
+    assert len(grid) == 4
+    for assignment, variant in grid:
+        ep = variant.endpoint("api")
+        assert ep.workload.rate_per_s == \
+            assignment["endpoints.*.workload.rate_per_s"]
+        assert ep.slo_classes["interactive"].slo_ms == \
+            assignment["endpoints.*.slo_classes.*.slo_ms"]
+
+
 # -- adapter equivalence -------------------------------------------------------
 
 

@@ -92,6 +92,41 @@ def test_replay_reproduces_input_times():
     assert [r.rid for r in wl] == [7, 8, 9]
 
 
+def _legacy_requests(times, rng, prompt_len, vocab):
+    """The pre-batching per-request prompt loop, verbatim: one randint per
+    request in arrival order (reference for the bulk-draw contract)."""
+    return [rng.randint(0, vocab, size=prompt_len).astype(np.int32)
+            for _ in times]
+
+
+def test_batched_prompt_draw_bit_identical_to_per_request_loop():
+    # the numpy-batched _requests path must consume the MT19937 stream
+    # exactly like the old per-request loop: same prompts AND same
+    # post-call RNG state, for every generator kind
+    from repro.workload.generators import _requests
+
+    for seed, n_req, plen, vocab in ((0, 1, 1, 7), (3, 57, 16, 1000),
+                                     (11, 200, 5, 32000)):
+        times = np.cumsum(np.random.RandomState(99).exponential(0.1,
+                                                                size=n_req))
+        rng_a = np.random.RandomState(seed)
+        rng_b = np.random.RandomState(seed)
+        got = _requests(times, rng_a, plen, 4, vocab, rid0=0, slo_ms=None,
+                        deadline_s=2.0)
+        want = _legacy_requests(times, rng_b, plen, vocab)
+        assert len(got) == n_req
+        for i, (req, prompt) in enumerate(zip(got, want)):
+            assert np.array_equal(req.prompt, prompt)
+            assert req.prompt.dtype == np.int32
+            assert req.arrival_s == float(times[i])
+            assert req.deadline_s == float(times[i]) + 2.0
+        # the stream position after the bulk draw matches the loop's
+        sa = rng_a.get_state()
+        sb = rng_b.get_state()
+        assert sa[0] == sb[0] and np.array_equal(sa[1], sb[1]) \
+            and sa[2:] == sb[2:]
+
+
 def test_workload_spec_build_dispatch_and_validation():
     vocab = 100
     p = WorkloadSpec(kind="poisson", n=30, rate_per_s=10.0, seed=1)
