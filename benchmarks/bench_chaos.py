@@ -1,0 +1,288 @@
+"""Resilience grid: recovery tactic x router under one scripted failure day.
+
+The spatial grids trade *where*, the carbon grid *when*, the admission grid
+*how*; this grid trades **what happens when the infrastructure fails**.
+Every cell replays the same seeded :class:`repro.serving.chaos.ChaosSpec`
+script — a replica crash mid-batch, an 8-virtual-second whole-region outage
+of ``east``, a brownout power cap on ``west`` — against a different
+:class:`RetrySpec` tactic, so availability x energy x latency are compared
+under *identical* failures:
+
+  * ``failover_degrade`` — bounded retry + cross-region failover + graceful
+    degradation (batch-class arrivals shed while a chaos window is active):
+    the full green-tactics answer;
+  * ``failover_only``    — bounded retry + failover, nothing shed;
+  * ``naive_retry``      — effectively infinite same-region retry (no
+    failover, no shedding): work for the downed region piles up behind
+    geometric backoff and floods home when the outage lifts;
+  * ``no_retry``         — failed work is dropped on the floor (the
+    availability floor the tactics are bought against);
+  * ``healthy``          — the same spec with no chaos events (reference).
+
+The two regions carry *offset* diurnal carbon signals tuned so the
+surviving region (``west``) is in its solar valley during the outage while
+``east`` rises toward its dirty peak as the outage lifts — the regime where
+failing over is green and waiting is not.  Cross-region request/response
+legs are billed honestly through the ``xfer`` bucket; a crash's in-flight
+work lands in the meter's ``lost`` bucket, so every cell asserts five-way
+conservation (``total = active + idle + preempt + xfer + lost``) in joules
+AND grams.
+
+After the grid, one headline row per router records the acceptance claim:
+``failover_degrade`` holds >= 0.99 interactive-class availability under the
+crash/outage script at lower total gCO2 than ``naive_retry``.
+
+Scale knob (env): ``CHAOS_GRID_N`` (default 3000 requests/cell); arrival
+rate scales with N so the ~20-virtual-second scenario shape (and the fixed
+event script) is preserved at reduced CI scale.  ``run(jobs=N)`` fans cells
+out through ``benchmarks.pool`` with a merge-on-join conservation receipt.
+
+``run()`` returns machine-readable rows; ``benchmarks/run.py`` folds them
+into ``BENCH_serving.json`` under ``chaos_grid``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from benchmarks.common import emit
+from benchmarks.pool import merge_meters, run_cells
+from repro.carbon.signal import CarbonSpec
+from repro.configs import get_arch
+from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
+from repro.models import init_params
+from repro.serving.api import (
+    AutoscaleSpec,
+    EndpointSpec,
+    PrioritySpec,
+    ServingSession,
+    ServingSpec,
+)
+from repro.serving.chaos import ChaosEvent, ChaosSpec, RetrySpec
+from repro.serving.regions import RegionSpec
+from repro.serving.stepcache import ReplayEngine, StepTimeCache
+from repro.workload.generators import WorkloadSpec
+
+ARCH = "minitron-4b-smoke"
+PROMPT_LEN = 16
+MAX_NEW = 6
+N = int(os.environ.get("CHAOS_GRID_N", 3000))
+SPAN_S = 20.0                          # arrival window the script is cut for
+RATE = N / SPAN_S                      # combined arrival rate (req/s)
+
+# the failure day every tactic faces (virtual seconds); the mid-outage
+# crashes hit the surviving pool while it carries double load, so they
+# reliably catch dispatches mid-batch (the ``lost`` bucket's test case)
+OUTAGE_T, OUTAGE_DUR = 4.0, 8.0
+EVENTS = (
+    ChaosEvent(kind="crash", t_s=2.0),                 # seeded replica pick
+    ChaosEvent(kind="outage", t_s=OUTAGE_T, target="east",
+               duration_s=OUTAGE_DUR),
+    ChaosEvent(kind="crash", t_s=5.0),
+    ChaosEvent(kind="crash", t_s=9.0),
+    ChaosEvent(kind="brownout", t_s=14.0, target="west", duration_s=4.0,
+               power_cap_frac=0.6),
+)
+
+# offset diurnal signals (period 40 s): west sits in its solar valley
+# across the outage window [4, 12]; east climbs to its dirty peak right as
+# the outage lifts — exactly when naive_retry's deferred backlog floods home
+REGIONS = {
+    "east": RegionSpec(carbon=CarbonSpec(kind="diurnal", g_per_kwh=300.0,
+                                         amplitude_g_per_kwh=280.0,
+                                         period_s=40.0, phase_s=4.0),
+                       latency_ms=2.0, gbps=10.0, link_power_w=2.0),
+    "west": RegionSpec(carbon=CarbonSpec(kind="diurnal", g_per_kwh=300.0,
+                                         amplitude_g_per_kwh=280.0,
+                                         period_s=40.0, phase_s=18.0),
+                       latency_ms=2.0, gbps=10.0, link_power_w=2.0),
+}
+
+TACTICS = {
+    "failover_degrade": RetrySpec(max_retries=3, backoff_s=0.05,
+                                  backoff_mult=2.0, failover=True,
+                                  degrade=True),
+    "failover_only": RetrySpec(max_retries=3, backoff_s=0.05,
+                               backoff_mult=2.0, failover=True,
+                               degrade=False),
+    "naive_retry": RetrySpec(max_retries=64, backoff_s=0.05,
+                             backoff_mult=2.0, failover=False,
+                             degrade=False),
+    "no_retry": RetrySpec(max_retries=0, failover=True, degrade=False),
+}
+ROUTERS = ("least_loaded", "follow_sun")
+
+
+def spec_for(tactic: str, router: str) -> ServingSpec:
+    return ServingSpec(
+        endpoints=(EndpointSpec(
+            name="llm", arch=ARCH, model="m", format="rsm",
+            policy="dynamic_batch", max_batch=8, batch_timeout_ms=10.0,
+            max_seq=64,
+            autoscale=AutoscaleSpec(min_replicas=2, max_replicas=6,
+                                    replicas_hint=4, window_s=0.5,
+                                    cold_start_s=0.1),
+            zones=("east", "west"),
+        ),),
+        router=router,
+        priority=PrioritySpec(enabled=True, preempt=False),
+        regions=REGIONS,
+        chaos=(ChaosSpec() if tactic == "healthy"
+               else ChaosSpec(events=EVENTS, seed=11)),
+        retry=TACTICS.get(tactic, RetrySpec()),
+    )
+
+
+def workload(vocab: int):
+    """Geo-mixed interactive chat + standard API + batch bulk traffic."""
+    n_chat, n_std = int(N * 0.4), int(N * 0.3)
+    n_bulk = N - n_chat - n_std
+    chat = WorkloadSpec(kind="poisson", n=n_chat, rate_per_s=RATE * 0.4,
+                        prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                        seed=71, slo_ms=150.0, priority="interactive",
+                        origins=("east", "west"))
+    std = WorkloadSpec(kind="poisson", n=n_std, rate_per_s=RATE * 0.3,
+                       prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                       seed=72, rid0=1_000_000,
+                       origins=("west", "east"))
+    bulk = WorkloadSpec(kind="bursty", n=n_bulk, rate_per_s=RATE * 0.2,
+                        prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                        seed=73, rid0=2_000_000, priority="batch",
+                        burst_n=max(n_bulk // 6, 1), burst_every_s=5.0,
+                        burst_rate_per_s=RATE * 3.0,
+                        origins=("east", "west"))
+    return (chat.build(vocab) + std.build(vocab) + bulk.build(vocab))
+
+
+def _run_cell(payload):
+    """One (tactic, router) cell, self-contained and picklable."""
+    spec_json, cache_payload, assignment = payload
+    spec = ServingSpec.from_json(spec_json)
+    session = ServingSession()
+    session.deploy(spec, engines={
+        ep.name: ReplayEngine(get_arch(ep.arch)) for ep in spec.endpoints})
+    for ep in spec.endpoints:
+        session.warm(ep.name, StepTimeCache.from_payload(cache_payload))
+    session.submit("llm", workload(get_arch(ARCH).vocab_size))
+    t0 = time.perf_counter()
+    report = session.run()
+    sim_s = time.perf_counter() - t0
+    ep = report.endpoints["llm"]
+    meter = report.result.fleet.meter
+    # five-way conservation: the buckets decompose the meter total — in
+    # joules and in grams (a crash reclassifies, it never mints or loses)
+    err_j = abs(meter.total_j - (meter.active_j + meter.idle_j
+                                 + meter.preempt_j + meter.xfer_j
+                                 + meter.lost_j))
+    assert err_j < 1e-6, f"joule conservation broke: {err_j}"
+    err_g = abs(meter.total_g - (meter.active_g + meter.idle_g
+                                 + meter.preempt_g + meter.xfer_g
+                                 + meter.lost_g))
+    assert err_g < 1e-6, f"gram conservation broke: {err_g}"
+    m = ep.metrics
+    fleet_stats = report.fleet.metrics.fleet or {}
+    row = dict(assignment)
+    row.update({
+        "n_requests": ep.n_requests,
+        "availability": ep.availability,
+        "interactive_availability":
+            ep.availability_by_class.get("interactive"),
+        "batch_availability": ep.availability_by_class.get("batch"),
+        "drops_by_class": ep.drops_by_class,
+        "shed_by_class": ep.shed_by_class,
+        "retries": fleet_stats.get("retries", 0),
+        "chaos_events": len(fleet_stats.get("chaos_events", [])),
+        "transit_legs": (fleet_stats.get("transit") or {}).get("count", 0),
+        "j_per_token": ep.j_per_token,
+        "j_active": ep.j_active,
+        "j_idle": ep.j_idle,
+        "j_preempt": ep.j_preempt,
+        "j_xfer": ep.j_xfer,
+        "j_lost": ep.j_lost,
+        "gco2_total": meter.total_g,
+        "gco2_lost": ep.gco2_lost,
+        "gco2_per_token": ep.gco2_per_token,
+        "interactive_p95_ttft_s":
+            ep.ttft_p95_by_class.get("interactive", 0.0),
+        "p95_latency_s": ep.latency_p95_s,
+        "makespan_s": max((r.done_s for r in m.responses), default=0.0),
+        "sim_host_s": sim_s,
+    })
+    return row, meter
+
+
+def run(jobs: int = 1):
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+    session.deploy(spec_for("healthy", "least_loaded").validate(),
+                   params={"m": params})
+    t0 = time.perf_counter()
+    session.calibrate("llm", batch_sizes=range(1, 9),
+                      prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+    cal_s = time.perf_counter() - t0
+    cache = session._warm_cache("llm")
+
+    cells = []
+    for router in ROUTERS:
+        for tactic in ("healthy",) + tuple(TACTICS):
+            spec = spec_for(tactic, router).validate()
+            cells.append((spec.to_json(), cache.to_payload(),
+                          {"tactic": tactic, "router": router}))
+    results = run_cells(_run_cell, cells, jobs)
+    rows = [row for row, _ in results]
+    _merged, receipt = merge_meters(
+        [meter for _, meter in results],
+        active_power_w=HOST_CPU_POWER_W, idle_power_w=HOST_CPU_IDLE_POWER_W)
+
+    by_cell = {(r["router"], r["tactic"]): r for r in rows}
+    for r in rows:
+        avail = r["availability"]
+        ia = r["interactive_availability"]
+        emit(
+            f"chaos_{r['tactic']}_{r['router']}",
+            r["interactive_p95_ttft_s"] * 1e6,
+            f"avail={-1.0 if avail is None else avail:.4f};"
+            f"interactive={-1.0 if ia is None else ia:.4f};"
+            f"gco2={r['gco2_total']:.4f};J_lost={r['j_lost']:.3f};"
+            f"J_xfer={r['j_xfer']:.3f};retries={r['retries']};"
+            f"n={r['n_requests']};sim_host_s={r['sim_host_s']:.3f}",
+        )
+
+    # headline rows: the acceptance claim, per router — the full tactic
+    # stack holds >= 0.99 interactive availability under the same failures
+    # at lower total gCO2 than waiting out the outage with naive retry
+    for router in ROUTERS:
+        green = by_cell[(router, "failover_degrade")]
+        naive = by_cell[(router, "naive_retry")]
+        ge99 = (green["interactive_availability"] or 0.0) >= 0.99
+        wins = green["gco2_total"] < naive["gco2_total"]
+        rows.append({
+            "kind": "headline",
+            "router": router,
+            "interactive_availability_ge_99": ge99,
+            "wins_gco2_vs_naive": wins,
+            "acceptance": ge99 and wins,
+            "green_interactive_availability":
+                green["interactive_availability"],
+            "naive_interactive_availability":
+                naive["interactive_availability"],
+            "green_gco2_total": green["gco2_total"],
+            "naive_gco2_total": naive["gco2_total"],
+            "green_gco2_per_token": green["gco2_per_token"],
+            "naive_gco2_per_token": naive["gco2_per_token"],
+        })
+        emit(
+            f"chaos_headline_{router}",
+            green["interactive_p95_ttft_s"] * 1e6,
+            f"acceptance={ge99 and wins};interactive_ge_99={ge99};"
+            f"wins_gco2={wins};"
+            f"green_gco2={green['gco2_total']:.4f};"
+            f"naive_gco2={naive['gco2_total']:.4f};"
+            f"cal_s={cal_s:.2f};jobs={jobs};"
+            f"joules_conserved={receipt['joules_conserved']}",
+        )
+    return rows

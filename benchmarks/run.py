@@ -11,6 +11,8 @@ run (the CI bench job uploads it as an artifact).
   bench_decisions      - ServingSpec sweep: format x router grid (pure data)
   bench_carbon         - temporal grid: carbon signal x deferral x router
   bench_disagg         - admission grid: disaggregation x priority-mix x router
+  bench_chaos          - resilience grid: recovery tactic x router under one
+                         seeded failure script (honors --jobs)
   bench_simperf        - simulator throughput: canonical 100k cell + pooled
                          rate x SLO sweep (honors --jobs)
   bench_formats        - Table 1, TD2 model-format row
@@ -53,6 +55,8 @@ def write_serving_json(path: str, results: dict) -> None:
         doc["carbon_grid"] = results["bench_carbon"]
     if "bench_disagg" in results:
         doc["disagg_grid"] = results["bench_disagg"]
+    if "bench_chaos" in results:
+        doc["chaos_grid"] = results["bench_chaos"]
     if "bench_simperf" in results:
         doc["sim_throughput"] = results["bench_simperf"]
     if "bench_batching" in results:
@@ -69,6 +73,7 @@ def main(argv=None) -> None:
         bench_adds,
         bench_batching,
         bench_carbon,
+        bench_chaos,
         bench_codecs,
         bench_decisions,
         bench_disagg,
@@ -82,7 +87,8 @@ def main(argv=None) -> None:
 
     modules = [bench_codecs, bench_formats, bench_kernels,
                bench_serving_infra, bench_batching, bench_fleet,
-               bench_decisions, bench_carbon, bench_disagg, bench_simperf,
+               bench_decisions, bench_carbon, bench_disagg, bench_chaos,
+               bench_simperf,
                bench_adds, bench_roofline]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
@@ -115,7 +121,8 @@ def main(argv=None) -> None:
             failed.append((mod.__name__, e))
             traceback.print_exc()
     if results.keys() & {"bench_fleet", "bench_batching", "bench_decisions",
-                         "bench_carbon", "bench_disagg", "bench_simperf"}:
+                         "bench_carbon", "bench_disagg", "bench_chaos",
+                         "bench_simperf"}:
         write_serving_json(ns.serving_json, results)
     if failed:
         print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)

@@ -8,6 +8,9 @@ Compares a freshly generated grid against the checked-in
   * the **carbon-aware-router gCO2/token** (carbon grid);
   * the **interactive-class p95 TTFT** (disagg grid) — the latency contract
     the admission layer must not trade away while chasing J/token;
+  * the **interactive-class availability under chaos** (chaos grid, best
+    tactic) — the resilience contract: warn-only when it falls more than
+    one point (0.01 absolute) below baseline;
   * the **simulator throughput** (sim_throughput grid, canonical cell) —
     simulated requests per wall second, a HIGHER-is-better meta-metric: a
     >20% drop warns that the event loop itself got slower (PR 7's hot-path
@@ -69,6 +72,51 @@ def interactive_p95_ttft(doc: dict) -> float | None:
     measurement rows, any router (None for pre-admission baselines;
     headline rows carry no per-cell metric and fall out of the filter)."""
     return _min_cell(doc, "disagg_grid", None, "interactive_p95_ttft_s")
+
+
+def chaos_interactive_availability(doc: dict) -> float | None:
+    """Best (maximum) interactive-class availability among the chaos
+    grid's measurement rows (None for pre-chaos baselines; healthy rows
+    report availability None by contract and fall out of the filter)."""
+    rows = doc.get("chaos_grid") or []
+    try:
+        cells = [r.get("interactive_availability") for r in rows
+                 if r.get("kind") != "headline"]
+    except (AttributeError, TypeError):
+        return None
+    cells = [c for c in cells if isinstance(c, (int, float))]
+    return max(cells) if cells else None
+
+
+def check_availability(base: float | None, fresh: float | None,
+                       baseline_path: str, fresh_path: str) -> int:
+    """Warn (never fail the comparison) when the fresh interactive-class
+    availability under chaos fell more than one point (0.01, absolute —
+    availability is already a fraction, so relative budgets make no sense
+    near 1.0) below baseline.  Losing the grid entirely still errors like
+    any other metric."""
+    if base is not None and base > 0 and fresh is None:
+        print(f"::error file={fresh_path},title=green-serving bench "
+              f"malformed::fresh document has no comparable interactive "
+              f"availability rows but the baseline does (baseline={base}); "
+              "the chaos grid went missing, not resilient")
+        return 1
+    if base is None or fresh is None:
+        if base is not None or fresh is not None:
+            print(f"::warning file={baseline_path}::no comparable "
+                  f"interactive-availability rows "
+                  f"(baseline={base}, fresh={fresh})")
+        return 0
+    diff = fresh - base
+    msg = (f"chaos interactive availability: baseline={base:.4f} "
+           f"fresh={fresh:.4f} ({diff:+.4f})")
+    if diff < -0.01:
+        print(f"::warning file={baseline_path},title=availability "
+              f"regression::{msg} — fell more than one point under the "
+              "same failure script")
+    else:
+        print(f"# ok: {msg}")
+    return 0
 
 
 def sim_requests_per_wall_s(doc: dict) -> float | None:
@@ -172,6 +220,9 @@ def main(argv=None) -> int:
                            interactive_p95_ttft(base_doc),
                            interactive_p95_ttft(fresh_doc),
                            ns.threshold, ns.baseline, ns.fresh)
+    status |= check_availability(chaos_interactive_availability(base_doc),
+                                 chaos_interactive_availability(fresh_doc),
+                                 ns.baseline, ns.fresh)
     status |= check_sim_throughput(sim_requests_per_wall_s(base_doc),
                                    sim_requests_per_wall_s(fresh_doc),
                                    ns.baseline)

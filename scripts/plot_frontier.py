@@ -2,15 +2,18 @@
 
 Every serving PR has added a grid to ``BENCH_serving.json`` — fleet
 (policy x router), decisions (format x router), carbon (signal x deferral x
-router) and disagg (mode x priority-mix x router) — but the frontier the
-paper cares about (how much energy does a latency budget cost?) only shows
-up when the cells are drawn.  This script renders all four grids as one SVG
-of small multiples, one panel per grid, each an energy-vs-latency scatter:
+router), disagg (mode x priority-mix x router) and chaos (recovery tactic x
+router) — but the frontier the paper cares about (how much energy does a
+latency or availability budget cost?) only shows up when the cells are
+drawn.  This script renders all five grids as one SVG of small multiples,
+one panel per grid:
 
   * **fleet**     J/token  vs p95 latency,       colored by router;
   * **decisions** J/token  vs p95 latency,       colored by router;
   * **carbon**    gCO2/token vs chat p95 latency, colored by router;
-  * **disagg**    J/token  vs interactive p95 TTFT, colored by mode.
+  * **disagg**    J/token  vs interactive p95 TTFT, colored by mode;
+  * **chaos**     availability vs total gCO2,     colored by tactic
+    (healthy reference rows drawn at availability 1.0).
 
 Pure stdlib — the SVG is written by hand, no plotting dependency.  Colors
 follow the entity (router / mode), assigned in fixed order, with the
@@ -47,7 +50,7 @@ GAP = 28
 def series_colors(keys):
     """Fixed-order assignment: baseline key (if present) gets the neutral,
     the rest take the categorical slots in order."""
-    baselines = {"round_robin", "unified"}
+    baselines = {"round_robin", "unified", "naive_retry"}
     slots = [BLUE, AQUA, ORANGE]
     out, i = {}, 0
     for k in keys:
@@ -202,6 +205,13 @@ def build_panels(doc):
                f"{r.get('router', '')}·{r.get('interactive_share', '')}")
               for r in doc.get("disagg_grid") or []
               if isinstance(r, dict) and r.get("kind") != "headline"]
+    # a healthy (chaos-less) run has availability None by contract — it
+    # delivered everything, so the reference point draws at 1.0
+    chaos = [(r.get("gco2_total"),
+              1.0 if r.get("availability") is None else r.get("availability"),
+              r.get("tactic", "?"), r.get("router", ""))
+             for r in doc.get("chaos_grid") or []
+             if isinstance(r, dict) and r.get("kind") != "headline"]
     return [
         Panel("Fleet: policy x router", "p95 latency (s)", "J / token",
               fleet),
@@ -211,6 +221,8 @@ def build_panels(doc):
               "chat p95 latency (s)", "gCO2e / token", carbon),
         Panel("Admission: disaggregation x priority mix",
               "interactive p95 TTFT (s)", "J / token", disagg),
+        Panel("Resilience: recovery tactic x router",
+              "total gCO2e (g)", "availability", chaos),
     ]
 
 
@@ -252,7 +264,7 @@ def main(argv=None) -> int:
     with open(ns.out, "w") as f:
         f.write(svg)
     n_pts = sum(len(p.points) for p in build_panels(doc))
-    print(f"# wrote {ns.out} ({n_pts} cells across 4 grids)",
+    print(f"# wrote {ns.out} ({n_pts} cells across 5 grids)",
           file=sys.stderr)
     return 0
 

@@ -42,6 +42,8 @@ _SPEC_MODULES = {
     "serving/admission/priority.py": ("PrioritySpec",),
     "serving/admission/disagg.py": ("DisaggSpec",),
     "workload/generators.py": ("WorkloadSpec",),
+    "serving/regions/spec.py": ("RegionSpec",),
+    "serving/chaos/spec.py": ("ChaosSpec", "ChaosEvent", "RetrySpec"),
 }
 
 _SPEC_CLASSES = {c for classes in _SPEC_MODULES.values() for c in classes}

@@ -23,6 +23,13 @@ visible instead of smeared into active/idle:
     decode pools; billed at the *link's* power (the joules are accumulated,
     not derived from seconds, because the link power is not the replica's).
 
+One bucket prices the resilience layer (PR 8): **lost** — compute a crashed
+replica had already billed for requests whose responses never made it out.
+:meth:`mark_lost` *reclassifies* that energy (it was genuinely drawn; the
+crash does not refund joules): the victims' per-request attribution moves
+from the active bucket to ``lost``, so wasted work shows up as its own line
+instead of being indistinguishable from useful compute.
+
 Every joule is also billed in **grams of CO2e** through a
 :class:`repro.carbon.signal.CarbonSignal` — billed at the virtual time the
 energy was drawn (``t_s`` on every recording call), so the same joules cost
@@ -31,11 +38,12 @@ without an explicit signal uses the constant IEA-average signal, which
 reproduces the old static ``J -> g`` conversion exactly.
 
 Conservation invariants (tested): the per-request attribution always sums to
-the active energy, ``total_j == active_j + idle_j + preempt_j + xfer_j`` —
-and identically in grams: ``sum(per_request_g) == active_g`` and ``total_g ==
-active_g + idle_g + preempt_g + xfer_g``, preserved across :meth:`merge` /
-:func:`absorb_part` (a meter that never preempts or hands off has zero in
-both new buckets, reproducing the old two-bucket identities exactly).
+the active energy, ``total_j == active_j + idle_j + preempt_j + xfer_j +
+lost_j`` — and identically in grams: ``sum(per_request_g) == active_g`` and
+``total_g == active_g + idle_g + preempt_g + xfer_g + lost_g``, preserved
+across :meth:`merge` / :func:`absorb_part` (a meter that never preempts,
+hands off, or loses work has zero in the new buckets, reproducing the old
+two-bucket identities exactly).
 """
 
 from __future__ import annotations
@@ -120,6 +128,13 @@ class EnergyMeter:
     xfer_s: float = 0.0
     xfer_j: float = 0.0
     xfer_g: float = 0.0
+    # resilience bucket: compute already billed for requests whose responses
+    # a crash destroyed.  mark_lost() MOVES energy here from active (and the
+    # victims' attribution) — a reclassification, never a new draw — so the
+    # joules/grams are accumulated and survive merge verbatim like xfer
+    lost_s: float = 0.0
+    lost_j: float = 0.0
+    lost_g: float = 0.0
     total_tokens: int = 0
     per_request_j: Dict[int, float] = dataclasses.field(default_factory=dict)
     per_request_g: Dict[int, float] = dataclasses.field(default_factory=dict)
@@ -137,14 +152,22 @@ class EnergyMeter:
 
     # -- recording ------------------------------------------------------------
     def record_active(self, dur_s: float, rids: Iterable[int] = (),
-                      tokens: int = 0, t_s: Optional[float] = None) -> float:
+                      tokens: int = 0, t_s: Optional[float] = None,
+                      power_w: Optional[float] = None) -> float:
         """Bill ``dur_s`` of compute starting at virtual time ``t_s``, split
-        equally across resident ``rids`` (joules and grams alike)."""
+        equally across resident ``rids`` (joules and grams alike).
+
+        ``power_w`` overrides the draw for this window (brownout power caps
+        clamp the package below ``active_power_w``).  The override is folded
+        in as *equivalent seconds* at this meter's active power — the merge
+        idiom — so ``active_j`` stays derived and conservation exact."""
         if dur_s <= 0:
             return 0.0
-        j = dur_s * self.active_power_w
+        pw = self.active_power_w if power_w is None else power_w
+        j = dur_s * pw
         g = self._grams(j, t_s, dur_s)
-        self.active_s += dur_s
+        self.active_s += (j / self.active_power_w
+                          if self.active_power_w > 0 else dur_s)
         self.active_g += g
         self.total_tokens += tokens
         rids = list(rids)
@@ -159,7 +182,8 @@ class EnergyMeter:
 
     def record_active_shared(self, start_s: float,
                              done_by_rid: Dict[int, float],
-                             tokens: int = 0) -> float:
+                             tokens: int = 0,
+                             power_w: Optional[float] = None) -> float:
         """Bill a batched compute window where requests retire individually.
 
         The window spans ``[start_s, max(done)]``.  It is cut into segments at
@@ -168,10 +192,13 @@ class EnergyMeter:
         charged for the tail where only long requests occupy the engine.
         Grams are billed per segment at the segment's own instant on the
         carbon signal, so the per-request gram attribution sums exactly to
-        the active grams this window added.
+        the active grams this window added.  ``power_w`` overrides the draw
+        (brownout caps) and is folded in as equivalent seconds, exactly as
+        in :meth:`record_active`.
         """
         if not done_by_rid:
             return 0.0
+        pw = self.active_power_w if power_w is None else power_w
         end = max(done_by_rid.values())
         dur = end - start_s
         if dur <= 0:
@@ -179,7 +206,8 @@ class EnergyMeter:
                 self.per_request_j.setdefault(rid, 0.0)
                 self.per_request_g.setdefault(rid, 0.0)
             return 0.0
-        self.active_s += dur
+        self.active_s += (dur * pw / self.active_power_w
+                          if self.active_power_w > 0 else dur)
         self.total_tokens += tokens
         t = start_s
         for e in sorted(set(done_by_rid.values())):
@@ -187,7 +215,7 @@ class EnergyMeter:
             if seg <= 0:
                 continue
             resident = [rid for rid, d in done_by_rid.items() if d > t]
-            seg_j = seg * self.active_power_w
+            seg_j = seg * pw
             seg_g = self.signal.grams(seg_j, t, e)
             self.active_g += seg_g
             share = seg_j / max(len(resident), 1)
@@ -201,7 +229,7 @@ class EnergyMeter:
         for rid in done_by_rid:              # zero-duration requests: J = 0
             self.per_request_j.setdefault(rid, 0.0)
             self.per_request_g.setdefault(rid, 0.0)
-        return dur * self.active_power_w
+        return dur * pw
 
     def record_idle(self, dur_s: float, t_s: Optional[float] = None) -> float:
         if dur_s <= 0:
@@ -237,6 +265,33 @@ class EnergyMeter:
         self.xfer_g += self._grams(j, t_s, dur_s)
         return j
 
+    def mark_lost(self, rids: Iterable[int],
+                  t_s: Optional[float] = None) -> float:
+        """Reclassify the compute already billed to ``rids`` as lost.
+
+        Called when a crash destroys a replica's undelivered responses at
+        virtual instant ``t_s``: the energy was genuinely drawn, so totals
+        do NOT change — each victim's attributed joules/grams move from the
+        active bucket (and the per-request maps) into ``lost``, and the
+        equivalent active seconds move to ``lost_s`` so busy time stays
+        decomposable.  Unknown rids are ignored (nothing was billed to
+        them here).  Returns the joules moved."""
+        del t_s  # the reclassification is instant-free: grams move verbatim
+        moved = 0.0
+        for rid in rids:
+            j = self.per_request_j.pop(rid, 0.0)
+            g = self.per_request_g.pop(rid, 0.0)
+            if j == 0.0 and g == 0.0:
+                continue
+            s = j / self.active_power_w if self.active_power_w > 0 else 0.0
+            self.active_s -= s
+            self.active_g -= g
+            self.lost_s += s
+            self.lost_j += j
+            self.lost_g += g
+            moved += j
+        return moved
+
     def merge(self, other: "EnergyMeter",
               source: Optional[str] = None) -> "EnergyMeter":
         """Fold ``other`` into this meter.
@@ -271,6 +326,9 @@ class EnergyMeter:
         self.xfer_s += other.xfer_s
         self.xfer_j += other.xfer_j
         self.xfer_g += other.xfer_g
+        self.lost_s += other.lost_s
+        self.lost_j += other.lost_j
+        self.lost_g += other.lost_g
         self.total_tokens += other.total_tokens
         for rid, j in other.per_request_j.items():
             self.per_request_j[rid] = self.per_request_j.get(rid, 0.0) + j
@@ -283,26 +341,30 @@ class EnergyMeter:
                                  d.get("active_g", 0.0), d.get("idle_g", 0.0),
                                  d.get("preempt_j", 0.0),
                                  d.get("preempt_g", 0.0),
-                                 d.get("xfer_j", 0.0), d.get("xfer_g", 0.0))
+                                 d.get("xfer_j", 0.0), d.get("xfer_g", 0.0),
+                                 d.get("lost_j", 0.0), d.get("lost_g", 0.0))
         elif source is not None:
             self._add_source(source, other.active_s, other.idle_s,
                              other.active_j, other.idle_j,
                              other.active_g, other.idle_g,
                              other.preempt_j, other.preempt_g,
-                             other.xfer_j, other.xfer_g)
+                             other.xfer_j, other.xfer_g,
+                             other.lost_j, other.lost_g)
         return self
 
     def _add_source(self, source: str, active_s: float, idle_s: float,
                     active_j: float, idle_j: float,
                     active_g: float = 0.0, idle_g: float = 0.0,
                     preempt_j: float = 0.0, preempt_g: float = 0.0,
-                    xfer_j: float = 0.0, xfer_g: float = 0.0) -> None:
+                    xfer_j: float = 0.0, xfer_g: float = 0.0,
+                    lost_j: float = 0.0, lost_g: float = 0.0) -> None:
         d = self.by_source.setdefault(
             source, {"active_s": 0.0, "idle_s": 0.0,
                      "active_j": 0.0, "idle_j": 0.0,
                      "active_g": 0.0, "idle_g": 0.0,
                      "preempt_j": 0.0, "preempt_g": 0.0,
-                     "xfer_j": 0.0, "xfer_g": 0.0})
+                     "xfer_j": 0.0, "xfer_g": 0.0,
+                     "lost_j": 0.0, "lost_g": 0.0})
         d["active_s"] += active_s
         d["idle_s"] += idle_s
         d["active_j"] += active_j
@@ -313,6 +375,8 @@ class EnergyMeter:
         d["preempt_g"] += preempt_g
         d["xfer_j"] += xfer_j
         d["xfer_g"] += xfer_g
+        d["lost_j"] += lost_j
+        d["lost_g"] += lost_g
 
     # -- accounting -----------------------------------------------------------
     @property
@@ -325,11 +389,13 @@ class EnergyMeter:
 
     @property
     def total_j(self) -> float:
-        return self.active_j + self.idle_j + self.preempt_j + self.xfer_j
+        return (self.active_j + self.idle_j + self.preempt_j + self.xfer_j
+                + self.lost_j)
 
     @property
     def total_g(self) -> float:
-        return self.active_g + self.idle_g + self.preempt_g + self.xfer_g
+        return (self.active_g + self.idle_g + self.preempt_g + self.xfer_g
+                + self.lost_g)
 
     @property
     def energy_per_token_j(self) -> float:
@@ -366,6 +432,10 @@ class EnergyMeter:
             d["xfer_s"] = round(self.xfer_s, 6)
             d["xfer_j"] = round(self.xfer_j, 6)
             d["xfer_g"] = round(self.xfer_g, 9)
+        if self.lost_s or self.lost_j:
+            d["lost_s"] = round(self.lost_s, 6)
+            d["lost_j"] = round(self.lost_j, 6)
+            d["lost_g"] = round(self.lost_g, 9)
         if self.by_source:
             d["by_source"] = {
                 src: {k: round(v, 6) for k, v in split.items()}

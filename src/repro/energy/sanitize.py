@@ -14,9 +14,12 @@ the offending event's full context — the moment accounting drifts:
     mis-billed segment (anything poking ``active_s`` / ``per_request_j``
     behind the meter's back) is caught and named;
   * **conservation** — after every event, in joules AND grams:
-    ``total == active + idle + preempt + xfer`` and the per-request
+    ``total == active + idle + preempt + xfer + lost`` and the per-request
     attribution plus the tracked unattributed remainder equals the active
     bucket;
+  * **lost-work reclassification** — ``mark_lost`` must leave the totals
+    bit-identical (a crash reclassifies energy, it never mints or refunds
+    it) while moving exactly the victims' attribution into ``lost``;
   * **merge/absorb** — folding a contributor in must grow every bucket by
     exactly the contributor's content (the joule-preserving fold), and the
     per-source provenance must keep decomposing the total.
@@ -43,7 +46,7 @@ _NEG_DUR = -1e-6
 
 _TRACKED = ("active_s", "idle_s", "active_g", "idle_g", "preempt_s",
             "preempt_j", "preempt_g", "xfer_s", "xfer_j", "xfer_g",
-            "total_tokens")
+            "lost_s", "lost_j", "lost_g", "total_tokens")
 
 
 class ConservationError(AssertionError):
@@ -112,19 +115,20 @@ class SanitizedEnergyMeter(EnergyMeter):
     def _global_invariants(self, event: str) -> None:
         for f in ("active_s", "idle_s", "preempt_s", "preempt_j",
                   "preempt_g", "xfer_s", "xfer_j", "xfer_g",
-                  "active_g", "idle_g"):
+                  "lost_s", "lost_j", "lost_g", "active_g", "idle_g"):
             v = getattr(self, f)
-            if not (v == v) or v < 0:  # NaN or negative bucket
+            if not (v == v) or v < -_ABS:  # NaN or negative bucket
                 self._fail(event, f"bucket {f} is invalid: {v!r}")
-        total = self.active_j + self.idle_j + self.preempt_j + self.xfer_j
+        total = (self.active_j + self.idle_j + self.preempt_j
+                 + self.xfer_j + self.lost_j)
         if not _close(self.total_j, total):
             self._fail(event, f"total_j {self.total_j} != active+idle+"
-                              f"preempt+xfer {total}")
+                              f"preempt+xfer+lost {total}")
         total_g = (self.active_g + self.idle_g + self.preempt_g
-                   + self.xfer_g)
+                   + self.xfer_g + self.lost_g)
         if not _close(self.total_g, total_g):
             self._fail(event, f"total_g {self.total_g} != active+idle+"
-                              f"preempt+xfer grams {total_g}")
+                              f"preempt+xfer+lost grams {total_g}")
         attr_j = sum(self.per_request_j.values()) + self._unattr_j
         if not _close(attr_j, self.active_j):
             self._fail(
@@ -149,19 +153,25 @@ class SanitizedEnergyMeter(EnergyMeter):
 
     # -- audited events -------------------------------------------------------
     def record_active(self, dur_s: float, rids: Iterable[int] = (),
-                      tokens: int = 0, t_s: Optional[float] = None) -> float:
+                      tokens: int = 0, t_s: Optional[float] = None,
+                      power_w: Optional[float] = None) -> float:
         rids = list(rids)
         ev = (f"record_active(dur_s={dur_s!r}, rids={rids!r}, "
-              f"tokens={tokens}, t_s={t_s!r})")
+              f"tokens={tokens}, t_s={t_s!r}, power_w={power_w!r})")
         self._check_untouched(ev)
         if dur_s < _NEG_DUR:
             self._fail(ev, f"negative duration {dur_s}")
         pre_s, pre_g = self.active_s, self.active_g
         pre_req_j = sum(self.per_request_j.values())
-        j = super().record_active(dur_s, rids, tokens, t_s)
+        j = super().record_active(dur_s, rids, tokens, t_s, power_w)
+        # a power override is folded in as equivalent seconds at the
+        # meter's own active power (the merge idiom)
+        exp_s = dur_s
+        if power_w is not None and self.active_power_w > 0:
+            exp_s = dur_s * power_w / self.active_power_w
         d_s = self.active_s - pre_s
-        if dur_s > 0 and not _close(d_s, dur_s):
-            self._fail(ev, f"active_s moved by {d_s}, expected {dur_s}")
+        if dur_s > 0 and not _close(d_s, exp_s):
+            self._fail(ev, f"active_s moved by {d_s}, expected {exp_s}")
         if not rids:
             self._unattr_j += j
             self._unattr_g += self.active_g - pre_g
@@ -174,15 +184,18 @@ class SanitizedEnergyMeter(EnergyMeter):
 
     def record_active_shared(self, start_s: float,
                              done_by_rid: Dict[int, float],
-                             tokens: int = 0) -> float:
+                             tokens: int = 0,
+                             power_w: Optional[float] = None) -> float:
         ev = (f"record_active_shared(start_s={start_s!r}, "
-              f"done_by_rid={dict(done_by_rid)!r}, tokens={tokens})")
+              f"done_by_rid={dict(done_by_rid)!r}, tokens={tokens}, "
+              f"power_w={power_w!r})")
         self._check_untouched(ev)
         pre_s = self.active_s
         pre_g = self.active_g
         pre_req_j = sum(self.per_request_j.values())
         pre_req_g = sum(self.per_request_g.values())
-        j = super().record_active_shared(start_s, done_by_rid, tokens)
+        j = super().record_active_shared(start_s, done_by_rid, tokens,
+                                         power_w)
         # the window is fully attributed: segment shares must sum back to
         # the seconds and grams the window added
         d_j = (self.active_s - pre_s) * self.active_power_w
@@ -238,6 +251,29 @@ class SanitizedEnergyMeter(EnergyMeter):
         self._seal(ev)
         return j
 
+    def mark_lost(self, rids: Iterable[int],
+                  t_s: Optional[float] = None) -> float:
+        rids = list(rids)
+        ev = f"mark_lost(rids={rids!r}, t_s={t_s!r})"
+        self._check_untouched(ev)
+        pre_total_j, pre_total_g = self.total_j, self.total_g
+        pre_lost_j = self.lost_j
+        want = sum(self.per_request_j.get(rid, 0.0)
+                   for rid in sorted(set(rids)))
+        moved = super().mark_lost(rids, t_s)
+        # a crash reclassifies energy — it must never mint or refund it
+        if not _close(self.total_j, pre_total_j):
+            self._fail(ev, f"total_j moved {pre_total_j} -> {self.total_j}; "
+                           "mark_lost must be a pure reclassification")
+        if not _close(self.total_g, pre_total_g):
+            self._fail(ev, f"total_g moved {pre_total_g} -> {self.total_g}; "
+                           "mark_lost must be a pure reclassification")
+        if not _close(self.lost_j - pre_lost_j, want):
+            self._fail(ev, f"lost_j grew by {self.lost_j - pre_lost_j}, "
+                           f"expected the victims' attributed {want} J")
+        self._seal(ev)
+        return moved
+
     def merge(self, other: EnergyMeter,
               source: Optional[str] = None) -> EnergyMeter:
         ev = (f"merge(other=<{type(other).__name__} total_j="
@@ -259,7 +295,8 @@ class SanitizedEnergyMeter(EnergyMeter):
         if not _close(self.total_g, pre_total_g + other.total_g):
             self._fail(ev, f"total_g moved {pre_total_g} -> {self.total_g}, "
                            f"expected +{other.total_g}")
-        for f in ("preempt_j", "preempt_g", "xfer_j", "xfer_g"):
+        for f in ("preempt_j", "preempt_g", "xfer_j", "xfer_g",
+                  "lost_j", "lost_g"):
             moved = getattr(self, f) - pre[f]
             want = getattr(other, f)
             if not _close(moved, want):

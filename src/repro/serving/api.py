@@ -48,6 +48,20 @@ all sweepable (``priority.preempt``, ``endpoints.*.disagg.enabled``).
 ``benchmarks/bench_disagg`` charts disaggregation x priority-mix x router
 from exactly these fields.
 
+As of PR 8 the *resilience* decisions are spec data too: named
+:class:`~repro.serving.regions.RegionSpec` s promote carbon zones into
+first-class places (per-region offset diurnal signals for the
+``follow_sun`` router, inter-region latency/bandwidth billed through the
+``xfer`` bucket when a request's ``origin`` region differs from its serving
+replica's), a :class:`~repro.serving.chaos.ChaosSpec` scripts seeded
+failures (replica crash mid-batch, whole-region outage, brownout power
+caps) whose wasted joules land in the meter's ``lost`` bucket, and a
+:class:`~repro.serving.chaos.RetrySpec` declares the recovery tactics
+(bounded retry-with-backoff, cross-region failover, batch-first graceful
+degradation).  Degraded-mode runs report per-class availability, drops and
+sheds; ``benchmarks/bench_chaos`` charts availability x energy x latency
+under identical failures from exactly these fields.
+
 Validation is eager and names the offending field: every constraint violation
 raises :class:`SpecError` with a ``endpoints[name].field`` style path.
 
@@ -82,8 +96,16 @@ from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
 from repro.serving import container as td1
 from repro.serving.admission.disagg import DisaggRuntime, DisaggSpec
 from repro.serving.admission.priority import PRIORITY_LEVELS, PrioritySpec
+from repro.serving.chaos import (
+    ChaosEvent,
+    ChaosRuntime,
+    ChaosSpec,
+    RetryRuntime,
+    RetrySpec,
+)
 from repro.serving.fleet import ROUTERS, Autoscaler, FleetResult, ReplicaFleet
 from repro.serving.fleet import EndpointSpec as FleetEndpoint
+from repro.serving.regions import RegionSpec, RegionTopology
 from repro.serving.request import Request, ServingMetrics
 from repro.serving.scheduler import (
     POLICIES,
@@ -404,6 +426,17 @@ class ServingSpec:
     # the admission ladder (interactive > standard > batch) and in-replica
     # preemption contract, fleet-wide; disabled = FIFO, never preempt
     priority: PrioritySpec = PrioritySpec()
+    # geo-distributed regions (PR 8): named places with their own carbon
+    # signal and an egress link; endpoint zones and chaos targets may name
+    # them, and requests whose origin region differs from their serving
+    # replica's pay inter-region transit through the xfer bucket
+    regions: Mapping[str, RegionSpec] = dataclasses.field(
+        default_factory=dict)
+    # the seeded failure script (crash / outage / brownout) and the
+    # recovery tactics answering it; no events = the healthy world, which
+    # reproduces the pre-chaos timeline byte for byte
+    chaos: ChaosSpec = ChaosSpec()
+    retry: RetrySpec = RetrySpec()
 
     def __post_init__(self):
         if not isinstance(self.endpoints, tuple):
@@ -445,12 +478,34 @@ class ServingSpec:
             _check_sub(cs, f"carbon_zones[{zone}]")
         _check_sub(self.deferral, "deferral")
         _check_sub(self.priority, "priority")
+        for rname, rs in self.regions.items():
+            _check(bool(rname), "regions",
+                   "region names must be non-empty")
+            _check(rname not in self.carbon_zones, f"regions[{rname}]",
+                   "region name collides with a carbon_zones entry; a "
+                   "region already carries its own carbon signal")
+            _check_sub(rs, f"regions[{rname}]")
+        _check_sub(self.chaos, "chaos")
+        _check_sub(self.retry, "retry")
+        places = set(self.regions) | set(self.carbon_zones)
+        for i, ev in enumerate(self.chaos.events):
+            if ev.kind == "outage" or (ev.kind == "brownout" and ev.target):
+                _check(ev.target in self.regions,
+                       f"chaos.events[{i}].target",
+                       f"unknown region {ev.target!r}; "
+                       f"known: {sorted(self.regions)}")
         for ep in self.endpoints:
             for z in ep.zones:
-                _check(z == "" or z in self.carbon_zones,
+                _check(z == "" or z in places,
                        f"endpoints[{ep.name}].zones",
-                       f"unknown carbon zone {z!r}; "
-                       f"known: {sorted(self.carbon_zones)} (plus '')")
+                       f"unknown carbon zone/region {z!r}; "
+                       f"known: {sorted(places)} (plus '')")
+            if ep.workload is not None:
+                for o in ep.workload.origins:
+                    _check(o in self.regions,
+                           f"endpoints[{ep.name}].workload.origins",
+                           f"unknown region {o!r}; "
+                           f"known: {sorted(self.regions)}")
         # the shared-timeline knobs must agree (one fleet autoscaler)
         scaled = [ep for ep in self.endpoints if ep.autoscale.enabled]
         for field in ("window_s", "target_utilization", "down_windows"):
@@ -500,6 +555,22 @@ class ServingSpec:
         if top.get("priority") is not None:
             top["priority"] = _construct(PrioritySpec, top["priority"],
                                          "priority")
+        regions = {}
+        for rn, rs in (top.get("regions") or {}).items():
+            rs = dict(rs)
+            if rs.get("carbon") is not None:
+                rs["carbon"] = _construct(CarbonSpec, rs["carbon"],
+                                          f"regions[{rn}].carbon")
+            regions[rn] = _construct(RegionSpec, rs, f"regions[{rn}]")
+        top["regions"] = regions
+        if top.get("chaos") is not None:
+            ch = dict(top["chaos"])
+            ch["events"] = tuple(
+                _construct(ChaosEvent, e, f"chaos.events[{i}]")
+                for i, e in enumerate(ch.get("events") or ()))
+            top["chaos"] = _construct(ChaosSpec, ch, "chaos")
+        if top.get("retry") is not None:
+            top["retry"] = _construct(RetrySpec, top["retry"], "retry")
         return _construct(cls, top, "spec")
 
     @classmethod
@@ -665,6 +736,18 @@ class EndpointReport:
     # per-priority-class p95 TTFT ({} when the workload is classless)
     ttft_p95_by_class: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # resilience attribution (PR 8): joules/grams a crash billed but never
+    # delivered (the meter's ``lost`` bucket), and — for chaos-injected
+    # runs — per-class availability with the recorded drops (retry budget
+    # exhausted) and sheds (degraded-mode batch work) that explain the
+    # gap.  ``availability`` is None for healthy (chaos-less) runs
+    j_lost: float = 0.0
+    gco2_lost: float = 0.0
+    availability: Optional[float] = None
+    availability_by_class: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    drops_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    shed_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         # field-by-field, NOT dataclasses.asdict: asdict would deep-copy
@@ -709,15 +792,17 @@ def _endpoint_report(name: str, decisions: Dict[str, object],
     by_replica = {}
     g_by_replica = {}
     if m.meter is not None:
-        # all four buckets, so the per-replica provenance sums to the
-        # endpoint total even under preemption / KV handoffs
+        # all five buckets, so the per-replica provenance sums to the
+        # endpoint total even under preemption / KV handoffs / crash loss
         by_replica = {
             src: round(d["active_j"] + d["idle_j"]
-                       + d.get("preempt_j", 0.0) + d.get("xfer_j", 0.0), 6)
+                       + d.get("preempt_j", 0.0) + d.get("xfer_j", 0.0)
+                       + d.get("lost_j", 0.0), 6)
             for src, d in sorted(m.meter.by_source.items())}
         g_by_replica = {
             src: round(d.get("active_g", 0.0) + d.get("idle_g", 0.0)
-                       + d.get("preempt_g", 0.0) + d.get("xfer_g", 0.0), 9)
+                       + d.get("preempt_g", 0.0) + d.get("xfer_g", 0.0)
+                       + d.get("lost_g", 0.0), 9)
             for src, d in sorted(m.meter.by_source.items())}
     g_total = m.meter.total_g if m.meter is not None else 0.0
     return EndpointReport(
@@ -755,6 +840,12 @@ def _endpoint_report(name: str, decisions: Dict[str, object],
         gco2_xfer=m.meter.xfer_g if m.meter else 0.0,
         ttft_p95_by_class={c: m.ttft_percentile(95, c)
                            for c in m.priority_classes()},
+        j_lost=m.meter.lost_j if m.meter else 0.0,
+        gco2_lost=m.meter.lost_g if m.meter else 0.0,
+        availability=stats.get("availability"),
+        availability_by_class=stats.get("availability_by_class", {}),
+        drops_by_class=stats.get("drops_by_class", {}),
+        shed_by_class=stats.get("shed_by_class", {}),
     )
 
 
@@ -1067,6 +1158,7 @@ class ServingSession:
             raise SpecError("workloads", "nothing submitted; submit() first")
         for name in self._workloads:
             self._slo_floor_check(name)
+        injected = bool(self.spec.chaos.events)
         fleet = ReplicaFleet(
             router=self.spec.router,
             autoscaler=self._autoscaler(),
@@ -1074,6 +1166,15 @@ class ServingSession:
             carbon_zones={z: cs.build()
                           for z, cs in self.spec.carbon_zones.items()},
             deferral=self.spec.deferral,
+            regions=(RegionTopology.from_specs(self.spec.regions)
+                     if self.spec.regions else None),
+            # no scripted events = the healthy world: no chaos/retry
+            # runtimes at all, so the timeline stays byte-identical to a
+            # pre-chaos spec
+            chaos=(ChaosRuntime.from_spec(self.spec.chaos)
+                   if injected else None),
+            retry=(RetryRuntime.from_spec(self.spec.retry)
+                   if injected else None),
         )
         for name, wl in self._workloads.items():
             fleet.add_endpoint(

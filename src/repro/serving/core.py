@@ -104,6 +104,13 @@ class SchedulerCore:
         self.carbon = carbon
         # priority ladder / preemption contract; None = FIFO, never preempt
         self.admission = admission
+        # brownout power-cap windows [(t0_s, t1_s, cap_frac), ...] set by
+        # the fleet's chaos runtime: a dispatch starting inside a window
+        # runs with package power clamped to cap_frac x active power and
+        # its measured step times stretched by the inverse (same joules,
+        # longer steps — a first-order DVFS model).  Empty = never capped,
+        # which is byte-identical to the pre-chaos core
+        self.power_caps: List[Tuple[float, float, float]] = []
         self._reset([])
 
     def _reset(self, workload: List[Request]) -> None:
@@ -242,6 +249,15 @@ class SchedulerCore:
         (prefill_s, decode_s), res = self.timed(key, thunk)
         return prefill_s, decode_s, res, max_new
 
+    def cap_frac(self, t: float) -> float:
+        """The brownout power-cap fraction governing a dispatch that starts
+        at ``t`` (1.0 = uncapped; overlapping windows clamp hardest)."""
+        frac = 1.0
+        for t0, t1, f in self.power_caps:
+            if t0 <= t < t1:
+                frac = min(frac, f)
+        return frac
+
     def execute_generate(self, batch: List[Request], start_s: float,
                          _depth: int = 0) -> None:
         """Dispatch ``batch`` as one uniform engine call at ``start_s``.
@@ -262,6 +278,14 @@ class SchedulerCore:
         """
         self.advance_to(start_s)
         prefill_s, decode_s, res, max_new = self._timed_generate(batch)
+        frac = self.cap_frac(start_s)
+        cap_w = None
+        if frac < 1.0:
+            # brownout: steps stretch by 1/frac, billed at the clamped
+            # power — the energy per step is conserved to first order
+            prefill_s /= frac
+            decode_s /= frac
+            cap_w = self.meter.active_power_w * frac
         total = prefill_s + decode_s
         intr = self._run_preemptions(batch, start_s, prefill_s, total, _depth)
 
@@ -299,10 +323,11 @@ class SchedulerCore:
             self.record_response(req, toks, start_s, first_s, done)
             n_tokens += n
         if intr:
-            self._bill_preempted(start_s, done_c, intr, n_tokens)
+            self._bill_preempted(start_s, done_c, intr, n_tokens,
+                                 power_w=cap_w)
         else:
             self.meter.record_active_shared(start_s, done_by_rid,
-                                            tokens=n_tokens)
+                                            tokens=n_tokens, power_w=cap_w)
         self.wall += prefill_s + decode_s
         self.clock = start_s + total + sum(d for _, d in intr)
 
@@ -364,7 +389,8 @@ class SchedulerCore:
 
     def _bill_preempted(self, start_s: float, done_c: Dict[int, float],
                         intr: List[Tuple[float, float]],
-                        tokens: int) -> None:
+                        tokens: int,
+                        power_w: Optional[float] = None) -> None:
         """Segment-wise active billing for a preempted dispatch: the batch's
         compute is cut at every retirement and pause offset; each segment is
         billed at its own (shifted) wall instant and split across the
@@ -387,7 +413,8 @@ class SchedulerCore:
             resident = [rid for rid, dc in done_c.items() if dc > t + 1e-12]
             self.meter.record_active(seg, rids=resident,
                                      tokens=tokens if first else 0,
-                                     t_s=start_s + t + gaps_before(t))
+                                     t_s=start_s + t + gaps_before(t),
+                                     power_w=power_w)
             first = False
             t = c
         for rid in done_c:               # zero-compute requests: J = g = 0
@@ -405,6 +432,11 @@ class SchedulerCore:
         """
         self.advance_to(start_s)
         prefill_s, _decode_s, res, _max_new = self._timed_generate(batch)
+        frac = self.cap_frac(start_s)
+        cap_w = None
+        if frac < 1.0:
+            prefill_s /= frac
+            cap_w = self.meter.active_power_w * frac
         end = start_s + prefill_s
         rids = [r.rid for r in batch]
         for bi, req in enumerate(batch):
@@ -414,7 +446,7 @@ class SchedulerCore:
                 tok0 = synth_tokens(req.prompt, 1, self.vocab)
             self.record_response(req, tok0, start_s, end, end)
         self.meter.record_active(prefill_s, rids=rids, tokens=len(batch),
-                                 t_s=start_s)
+                                 t_s=start_s, power_w=cap_w)
         self.wall += prefill_s
         self.clock = end
 
@@ -428,6 +460,11 @@ class SchedulerCore:
         """
         self.advance_to(start_s)
         _prefill_s, decode_s, res, max_new = self._timed_generate(batch)
+        frac = self.cap_frac(start_s)
+        cap_w = None
+        if frac < 1.0:
+            decode_s /= frac
+            cap_w = self.meter.active_power_w * frac
         step = decode_s / max(max_new - 1, 1)
         n_arr = np.fromiter((min(r.max_new_tokens, max_new) for r in batch),
                             np.int64, count=len(batch))
@@ -446,7 +483,8 @@ class SchedulerCore:
             # first_token_s is the prefill leg's business; the fleet stitches
             self.record_response(req, toks, start_s, start_s, done)
             n_tokens += len(toks)
-        self.meter.record_active_shared(start_s, done_by_rid, tokens=n_tokens)
+        self.meter.record_active_shared(start_s, done_by_rid, tokens=n_tokens,
+                                        power_w=cap_w)
         end = max(done_by_rid.values(), default=start_s)
         self.wall += end - start_s
         self.clock = end

@@ -62,6 +62,30 @@ decision (the :mod:`repro.serving.admission` subsystem):
     sibling of the utilization target (both signals share the virtual
     clock).
 
+As of PR 8 the fleet is geo-distributed and failure-aware (the
+:mod:`repro.serving.regions` / :mod:`repro.serving.chaos` subsystems):
+
+  * a zone may be a first-class **region** (:class:`~repro.serving.regions.
+    RegionSpec`): serving a request whose ``origin`` region differs from its
+    replica's pays request- and response-leg transit on the inter-region
+    link (delaying arrival and client-observed tokens, billed through the
+    ``xfer`` bucket at the link power), and the ``follow_sun`` router chases
+    the currently-cleanest region across offset diurnal carbon signals;
+  * a seeded :class:`~repro.serving.chaos.ChaosSpec` script injects failures
+    between scheduling windows — a **crash** loses the victim's in-flight
+    work (reclassified into the meter's ``lost`` bucket: billed joules and
+    grams that never produced a delivered response), an **outage** crashes a
+    whole region and excludes it from routing for its window, a **brownout**
+    clamps replica power (``SchedulerCore.power_caps``) so steps stretch;
+    chaos code never writes ``core.clock`` — victims are *drained to* the
+    event instant (the clock-causality contract, docs/INVARIANTS.md R4);
+  * a :class:`~repro.serving.chaos.RetrySpec` declares the recovery tactics:
+    crashed/shed work re-enters after bounded backoff (exhausted work is a
+    recorded drop), ``failover`` lets retries and placement leave the
+    request's origin region, and ``degrade`` sheds batch-class arrivals at
+    the front door while any chaos window is active — so degraded-mode runs
+    report per-class availability, drops and sheds alongside the energy.
+
 Simulation semantics: arrivals are processed in windows.  All arrivals of a
 window are routed (and offered to their replica's core) before any core is
 drained, so intra-window batching is exact; each core is then drained only up
@@ -88,8 +112,15 @@ from repro.energy.hw import HOST_CPU_IDLE_POWER_W, HOST_CPU_POWER_W
 from repro.energy.meter import estimate_j_per_token
 from repro.energy.sanitize import new_meter
 from repro.serving.admission.disagg import DisaggRuntime
-from repro.serving.admission.priority import AdmissionControl
+from repro.serving.admission.priority import (
+    AdmissionControl,
+    DEFAULT_PRIORITY,
+    PRIORITY_LEVELS,
+    priority_level,
+)
+from repro.serving.chaos import ChaosRuntime, RetryRuntime
 from repro.serving.core import SchedulerCore, SchedulingPolicy
+from repro.serving.regions import RegionTopology
 from repro.serving.request import Request, Response, ServingMetrics
 from repro.serving.stepcache import StepTimeCache, shape_bucket
 from repro.workload.calendar import TrafficCalendar
@@ -250,6 +281,26 @@ class CarbonAwareRouter(RoutingPolicy):
         return min(candidates, key=marginal)
 
 
+class FollowSunRouter(RoutingPolicy):
+    """Chase the sun: place each arrival in the region whose grid is
+    cleanest *right now*, then shortest queue.
+
+    With per-region diurnal carbon signals at offset phases
+    (``RegionSpec.carbon.phase_s``) this is the classic follow-the-sun
+    placement — traffic migrates around the globe as each region's solar
+    valley comes and goes.  Unlike :class:`CarbonAwareRouter` it needs no
+    step-time measurement (intensity is a pure function of the virtual
+    clock), so it works from the very first arrival; the price is that it
+    ignores batch-amortization efficiency and cross-region transit."""
+
+    name = "follow_sun"
+
+    def choose(self, fleet, candidates, req, now):
+        return min(candidates,
+                   key=lambda r: (fleet.zone_intensity(r.zone, now),
+                                  r.backlog, r.name))
+
+
 def req_endpoint(candidates: List[Replica]) -> str:
     return candidates[0].endpoint
 
@@ -265,6 +316,7 @@ ROUTERS: Dict[str, Callable[[], RoutingPolicy]] = {
     "warmest": WarmestRouter,
     "greenest": GreenestRouter,
     "carbon_aware": CarbonAwareRouter,
+    "follow_sun": FollowSunRouter,
 }
 
 
@@ -367,12 +419,24 @@ class ReplicaFleet:
                  autoscaler: Optional[Autoscaler] = None,
                  carbon: Optional[CarbonSignal] = None,
                  carbon_zones: Optional[Dict[str, CarbonSignal]] = None,
-                 deferral: Optional[DeferralSpec] = None):
+                 deferral: Optional[DeferralSpec] = None,
+                 regions: Optional[RegionTopology] = None,
+                 chaos: Optional[ChaosRuntime] = None,
+                 retry: Optional[RetryRuntime] = None):
         self.router = make_router(router)
         self.autoscaler = autoscaler
         # "" is the default zone: the fleet-wide grid signal
         self.carbon = carbon if carbon is not None else ConstantSignal()
         self.carbon_zones = dict(carbon_zones or {})
+        # geo-distribution + resilience (PR 8): region signals join the zone
+        # map (an explicit carbon_zones entry wins), the chaos script and
+        # retry tactics drive the failure/recovery paths below
+        self.regions = regions
+        self.chaos = chaos
+        self.retry = retry
+        if regions is not None:
+            for rname, sig in regions.signals.items():
+                self.carbon_zones.setdefault(rname, sig)
         self.shifter: Optional[TemporalShifter] = None
         if deferral is not None and deferral.enabled:
             # temporal shifting plans against the default-zone grid (the
@@ -396,6 +460,18 @@ class ReplicaFleet:
         self.handoff_events: List[dict] = []
         # trailing default-grid intensity samples for carbon-biased scaling
         self._intensity_hist: deque = deque(maxlen=64)
+        # chaos/retry state: every routed request by rid (so a crash can
+        # recover the original Request of an in-flight casualty), the retry
+        # re-entry heap (ready_s, rid, endpoint, request), per-endpoint
+        # per-class submitted/drop/shed counters, and the applied-event log
+        self._req_by_rid: Dict[int, Tuple[str, Request]] = {}
+        self._retry_q: List[Tuple[float, int, str, Request]] = []
+        self._submitted: Dict[str, Dict[str, int]] = {}
+        self._drops: Dict[str, Dict[str, int]] = {}
+        self._shed: Dict[str, Dict[str, int]] = {}
+        self._retry_minted: Dict[str, int] = {}
+        self.chaos_log: List[dict] = []
+        self.transit_events: List[dict] = []
 
     # -- carbon zones ----------------------------------------------------------
     def zone_signal(self, zone: str) -> CarbonSignal:
@@ -421,7 +497,8 @@ class ReplicaFleet:
             self._spawn(spec, created_s=0.0, ready_s=0.0)
 
     def _spawn(self, spec: EndpointSpec, created_s: float,
-               ready_s: float, role: str = "") -> Replica:
+               ready_s: float, role: str = "",
+               zone: Optional[str] = None) -> Replica:
         i = self._counter.get((spec.name, role), 0)
         self._counter[(spec.name, role)] = i + 1
         cache: Optional[StepTimeCache] = None
@@ -429,7 +506,8 @@ class ReplicaFleet:
             cache = StepTimeCache()
             if spec.warm_cache is not None:
                 cache.seed_from(spec.warm_cache)
-        zone = spec.zones[i % len(spec.zones)] if spec.zones else ""
+        if zone is None:
+            zone = spec.zones[i % len(spec.zones)] if spec.zones else ""
         if role == "prefill":
             factory, prefix = spec.disagg.prefill_policy_factory, "p"
         elif role == "decode":
@@ -442,6 +520,10 @@ class ReplicaFleet:
                              idle_power_w=spec.idle_power_w,
                              carbon=self.zone_signal(zone),
                              admission=spec.admission)
+        if self.chaos is not None:
+            # brownout windows are static spec data: install the zone's
+            # power-cap schedule once, at provisioning time
+            core.power_caps = self.chaos.caps_for(zone)
         rep = Replica(f"{spec.name}/{prefix}{i}", spec.name, core, created_s,
                       ready_s, zone=zone, role=role)
         if rep.cold_start:
@@ -516,6 +598,28 @@ class ReplicaFleet:
         return wait + prefill_s <= budget_s
 
     # -- routing ---------------------------------------------------------------
+    def _routable_zone(self, zone: str, req: Request, t: float) -> bool:
+        """May ``req`` be placed in ``zone`` at ``t``?  False inside the
+        zone's outage window, and — with cross-region failover disabled —
+        anywhere outside the request's own origin region."""
+        if self.chaos is not None and self.chaos.region_down(zone, t):
+            return False
+        if (self.retry is not None and not self.retry.failover
+                and req.origin and zone != req.origin):
+            return False
+        return True
+
+    def _spawn_zone(self, spec: EndpointSpec, req: Request,
+                    t: float) -> Optional[str]:
+        """Zone for a scale-from-zero spawn; ``None`` = the default cycling
+        (also the fallback when every allowed zone is down — the safety net
+        for legs routed outside the :meth:`_admit` front door)."""
+        if self.chaos is None:
+            return None
+        zones = list(spec.zones) if spec.zones else [""]
+        ok = [z for z in zones if self._routable_zone(z, req, t)]
+        return ok[0] if ok else None
+
     def route(self, name: str, req: Request) -> Replica:
         t = req.arrival_s
         spec = self.specs[name]
@@ -528,19 +632,21 @@ class ReplicaFleet:
             if req.phase != "decode":
                 self._disagg_orig[req.rid] = req
         pool = [r for r in self.endpoint_replicas(name, role)
-                if r.serving(t)]
+                if r.serving(t) and self._routable_zone(r.zone, req, t)]
         if not pool:
             # every serving replica is still cold: queue on the one that
             # becomes ready first (arrival waits out the cold start)
             pool = [r for r in self.endpoint_replicas(name, role)
-                    if r.stopped_s is None and not r.draining]
+                    if r.stopped_s is None and not r.draining
+                    and self._routable_zone(r.zone, req, t)]
             pool.sort(key=lambda r: (r.ready_s, r.name))
             pool = pool[:1]
         if not pool:
             # prefer reviving a draining replica — still provisioned and
             # warm, so cancelling its drain is free — before cold-starting
             draining = [r for r in self.endpoint_replicas(name, role)
-                        if r.stopped_s is None and r.draining]
+                        if r.stopped_s is None and r.draining
+                        and self._routable_zone(r.zone, req, t)]
             if draining:
                 rep = min(draining, key=lambda r: (r.backlog, r.name))
                 rep.draining = False
@@ -551,11 +657,29 @@ class ReplicaFleet:
             # cold start — the serverless corner of the SI4 trade-off
             cold = self.cold_start_s(spec)
             pool = [self._spawn(spec, created_s=t, ready_s=t + cold,
-                                role=role or "")]
+                                role=role or "",
+                                zone=self._spawn_zone(spec, req, t))]
         ok = [r for r in pool if self._slo_ok(r, req, t)]
         rep = self.router.choose(self, ok or pool, req, t)
+        if (self.regions is not None and req.origin
+                and req.origin != rep.zone and req.phase != "decode"):
+            # cross-region request leg: the prompt crosses the inter-region
+            # link before the replica can see it — transit delays the
+            # effective arrival and is billed as xfer at the *sending*
+            # (origin) region's link power.  Decode legs are exempt: their
+            # KV handoff already paid the intra-fleet move.
+            xfer_s = self.regions.transit_s(req.origin, rep.zone,
+                                            8 * len(req.prompt))
+            if xfer_s > 0.0:
+                rep.core.meter.record_xfer(
+                    xfer_s, self.regions.link_power_w(req.origin), t_s=t)
+                req = dataclasses.replace(req, arrival_s=t + xfer_s)
+                self.transit_events.append({
+                    "rid": req.rid, "endpoint": name, "leg": "request",
+                    "from": req.origin, "to": rep.zone, "xfer_s": xfer_s})
         rep.offered += 1
         rep.core.offer(req)
+        self._req_by_rid[req.rid] = (name, req)
         return rep
 
     # -- KV handoffs (prefill pool -> decode pool) -----------------------------
@@ -604,6 +728,141 @@ class ReplicaFleet:
             n += 1
         return n
 
+    # -- chaos: failure injection + recovery tactics ---------------------------
+    @staticmethod
+    def _bump(table: Dict[str, Dict[str, int]], name: str,
+              req: Request) -> None:
+        cls = req.priority or DEFAULT_PRIORITY
+        per = table.setdefault(name, {})
+        per[cls] = per.get(cls, 0) + 1
+
+    def _shed_now(self, req: Request, t: float) -> bool:
+        """Graceful degradation: while any chaos window is active, shed
+        batch-rung work at the front door (zero energy, recorded shed) so
+        the surviving capacity serves the interactive classes."""
+        return (self.retry is not None and self.retry.degrade
+                and self.chaos is not None and self.chaos.degraded(t)
+                and priority_level(req.priority) >= PRIORITY_LEVELS["batch"])
+
+    def _placeable(self, name: str, req: Request, t: float) -> bool:
+        """Does any zone this endpoint may serve ``req`` from have power?"""
+        if self.chaos is None:
+            return True
+        spec = self.specs[name]
+        zones = list(spec.zones) if spec.zones else [""]
+        return any(self._routable_zone(z, req, t) for z in zones)
+
+    def _admit(self, name: str, req: Request) -> bool:
+        """Front door for arrivals, deferral releases and retry re-entries:
+        apply degradation shedding, then either place the request or burn a
+        retry attempt (origin region dark and failover off, or every
+        allowed region down).  Returns True iff the request was routed."""
+        t = req.arrival_s
+        if self._shed_now(req, t):
+            self._bump(self._shed, name, req)
+            return False
+        if not self._placeable(name, req, t):
+            self._retry_or_drop(name, req, t)
+            return False
+        self.route(name, req)
+        return True
+
+    def _retry_or_drop(self, name: str, req: Request, t_fail: float) -> None:
+        """Recovery tactic for one failed request: re-enter after bounded
+        exponential backoff while the RetrySpec allows, else record the
+        drop (the client saw an error — availability pays for it)."""
+        if self.retry is not None and self.retry.allows(req.retries):
+            attempt = req.retries + 1
+            ready = max(t_fail, req.arrival_s) + self.retry.backoff(attempt)
+            leg = dataclasses.replace(req, retries=attempt, arrival_s=ready)
+            heapq.heappush(self._retry_q, (ready, req.rid, name, leg))
+            self._retry_minted[name] = self._retry_minted.get(name, 0) + 1
+        else:
+            self._bump(self._drops, name, req)
+
+    def _release_retries(self, before_s: float) -> int:
+        """Re-admit every retry/re-route leg due before ``before_s``."""
+        n = 0
+        while self._retry_q and self._retry_q[0][0] < before_s:
+            _, _, name, leg = heapq.heappop(self._retry_q)
+            self._admit(name, leg)
+            n += 1
+        return n
+
+    def _apply_chaos(self, t_end: float) -> None:
+        """Apply every scripted event due before this window.
+
+        Crash/outage victims are *drained to* the event instant first (the
+        clock-causality contract: chaos never writes ``core.clock``), so
+        work that retired before the failure survives and the dispatch
+        crossing it becomes the in-flight casualty."""
+        if self.chaos is None:
+            return
+        for ev in self.chaos.pop_due(t_end):
+            if ev.kind == "brownout":
+                # static data: each core got its cap windows at spawn; the
+                # loop only logs the window for the audit trail
+                self.chaos_log.append({
+                    "t": ev.t_s, "kind": "brownout",
+                    "target": ev.target or "*",
+                    "duration_s": ev.duration_s,
+                    "power_cap_frac": ev.power_cap_frac})
+                continue
+            if ev.kind == "crash":
+                victims = self._crash_targets(ev)
+            else:                      # outage: the whole region at once
+                victims = [r for r in self.replicas
+                           if r.stopped_s is None and r.zone == ev.target]
+                self.chaos_log.append({
+                    "t": ev.t_s, "kind": "outage", "target": ev.target,
+                    "duration_s": ev.duration_s,
+                    "replicas": len(victims)})
+            for rep in victims:
+                self._crash(rep, ev.t_s)
+
+    def _crash_targets(self, ev) -> List[Replica]:
+        if ev.target:
+            return [r for r in self.replicas
+                    if r.name == ev.target and r.stopped_s is None]
+        name = self.chaos.pick_crash_target(
+            [r.name for r in self.replicas if r.serving(ev.t_s)])
+        return [r for r in self.replicas if r.name == name]
+
+    def _crash(self, rep: Replica, t_c: float) -> None:
+        """Kill one replica at ``t_c``: deliveries before the instant
+        survive, the in-flight dispatch's joules/grams move to the ``lost``
+        bucket (billed, never delivered), and every casualty — in-flight or
+        still queued — goes through the retry tactic.  Queued work that had
+        not even arrived by ``t_c`` is re-routed free of a retry charge."""
+        core = rep.core
+        core.drain_until(t_c)
+        lost = [r for r in core.responses if r.done_s > t_c]
+        lost_j = 0.0
+        if lost:
+            lost_j = core.meter.mark_lost([r.rid for r in lost], t_s=t_c)
+            core.responses[:] = [r for r in core.responses
+                                 if r.done_s <= t_c]
+            core.total_tokens -= sum(len(r.tokens) for r in lost)
+        queued = core.pending.drain_all()
+        rep.draining = False
+        rep.stopped_s = max(core.clock, t_c, rep.ready_s)
+        for resp in lost:
+            ent = self._req_by_rid.get(resp.rid)
+            if ent is not None:
+                self._retry_or_drop(ent[0], ent[1], t_c)
+        for req in queued:
+            if req.arrival_s > t_c:
+                # routed ahead of its arrival: nothing was sent yet, so it
+                # re-routes at its own arrival instant, no attempt burned
+                heapq.heappush(self._retry_q,
+                               (req.arrival_s, req.rid, rep.endpoint, req))
+            else:
+                self._retry_or_drop(rep.endpoint, req, t_c)
+        self.chaos_log.append({
+            "t": t_c, "kind": "crash", "target": rep.name,
+            "endpoint": rep.endpoint, "lost_rids": len(lost),
+            "lost_j": lost_j, "requeued": len(queued)})
+
     # -- the shared-timeline run ----------------------------------------------
     def _defers(self, req: Request) -> bool:
         return self.shifter is not None and req.deadline_s is not None
@@ -622,6 +881,15 @@ class ReplicaFleet:
                     wake = tp - lead if wake is None else min(wake, tp - lead)
                     break
         return wake
+
+    def _more_work(self, i: int, n_events: int) -> bool:
+        """Does the window loop still owe anything — an unrouted arrival, a
+        due handoff or retry, a planned deferral release, or an unapplied
+        chaos event?"""
+        return (i < n_events or bool(self._handoff) or bool(self._retry_q)
+                or (self.shifter is not None and self.shifter.pending)
+                or (self.chaos is not None
+                    and self.chaos.next_due_t() != float("inf")))
 
     def run(self, workloads: Dict[str, List[Request]]) -> FleetResult:
         """Serve ``{endpoint: workload}`` on one virtual timeline."""
@@ -644,11 +912,22 @@ class ReplicaFleet:
             window_s = self.shifter.spec.window_s   # release cadence
         else:
             window_s = float("inf")
+        if self.chaos is not None and self.chaos.events \
+                and not math.isfinite(window_s):
+            # chaos application and retry release run between windows, so
+            # an injected run needs a finite cadence even with no
+            # autoscaler; 1s matches the default autoscaler window
+            window_s = 1.0
+        if self.chaos is not None:
+            # availability denominators: every original arrival, by class
+            for name, wl in workloads.items():
+                for req in wl:
+                    self._bump(self._submitted, name, req)
         self.replica_timeline.append((0.0, self._serving_counts()))
         i = 0
         t_end = window_s
-        while i < len(events) or self._handoff \
-                or (self.shifter is not None and self.shifter.pending):
+        while self._more_work(i, len(events)):
+            self._apply_chaos(t_end)
             window_arrivals: Dict[str, int] = {}
             while i < len(events) and events[i][0] < t_end:
                 _, name, req = events[i]
@@ -656,26 +935,27 @@ class ReplicaFleet:
                     # batch-class: plan a low-carbon release instead of
                     # serving on arrival (deadline pressure caps the hold)
                     self.shifter.defer(name, req, self.service_time_s(name))
-                else:
-                    self.route(name, req)
+                elif self._admit(name, req):
                     window_arrivals[name] = window_arrivals.get(name, 0) + 1
                 i += 1
             if self.shifter is not None:
                 for name, req in self.shifter.release_due(t_end):
-                    self.route(name, req)
-                    window_arrivals[name] = window_arrivals.get(name, 0) + 1
+                    if self._admit(name, req):
+                        window_arrivals[name] = \
+                            window_arrivals.get(name, 0) + 1
+            self._release_retries(t_end)
             self._release_handoffs(t_end)
             self._drain_window(t_end)
             # completed prefills mint decode-pool arrivals for next window
             self._collect_handoffs()
-            more = i < len(events) or self._handoff \
-                or (self.shifter is not None and self.shifter.pending)
+            more = self._more_work(i, len(events))
             self._observe_and_scale(t_end, window_arrivals, window_s,
                                     more_events=more)
             if not more:
                 break
             # the next busy instant: an arrival, a planned release, a due
-            # KV handoff, or a calendar pre-warm — never skip past any
+            # KV handoff, a retry re-entry, a scripted chaos event, or a
+            # calendar pre-warm — never skip past any
             pending = []
             if i < len(events):
                 pending.append(events[i][0])
@@ -683,6 +963,12 @@ class ReplicaFleet:
                 pending.append(self.shifter.next_release_s())
             if self._handoff:
                 pending.append(self._handoff[0][0])
+            if self._retry_q:
+                pending.append(self._retry_q[0][0])
+            if self.chaos is not None \
+                    and self.chaos.next_due_t() != float("inf"):
+                # every event < t_end was already applied above
+                pending.append(max(self.chaos.next_due_t(), t_end))
             prewarm = self._next_prewarm_s(t_end, window_s)
             if prewarm is not None and prewarm < min(pending):
                 pending.append(max(prewarm, t_end))
@@ -830,7 +1116,40 @@ class ReplicaFleet:
                                       self._serving_counts()))
 
     # -- metrics ---------------------------------------------------------------
+    def _bill_response_transit(self) -> None:
+        """Cross-region response leg: generated tokens cross the link back
+        to the request's origin region before the client sees them — the
+        transit shifts the client-observed TTFT/completion instants and is
+        billed as xfer at the *serving* region's link power."""
+        for rep in self.replicas:
+            if not rep.zone:
+                continue
+            out, changed = [], False
+            for resp in rep.core.responses:
+                ent = self._req_by_rid.get(resp.rid)
+                origin = ent[1].origin if ent is not None else ""
+                xfer_s = self.regions.transit_s(rep.zone, origin,
+                                                8 * int(len(resp.tokens)))
+                if xfer_s <= 0.0:
+                    out.append(resp)
+                    continue
+                rep.core.meter.record_xfer(
+                    xfer_s, self.regions.link_power_w(rep.zone),
+                    t_s=resp.done_s)
+                out.append(dataclasses.replace(
+                    resp, first_token_s=resp.first_token_s + xfer_s,
+                    done_s=resp.done_s + xfer_s))
+                changed = True
+                self.transit_events.append({
+                    "rid": resp.rid, "endpoint": rep.endpoint,
+                    "leg": "response", "from": rep.zone, "to": origin,
+                    "xfer_s": xfer_s})
+            if changed:
+                rep.core.responses[:] = out
+
     def _finalize(self) -> FleetResult:
+        if self.regions is not None:
+            self._bill_response_transit()
         # the shared timeline ends when the last provisioned replica goes
         # quiet; every still-provisioned replica pays idle draw up to there
         live_ends = [r.core.clock for r in self.replicas
@@ -845,9 +1164,11 @@ class ReplicaFleet:
             # replica's last piece of work — bill its grams there.  Preempt
             # seconds occupied the replica (pause/resume work), so they
             # count against uptime; xfer seconds do not (the link streams
-            # in parallel with the replica's own timeline)
+            # in parallel with the replica's own timeline); lost seconds
+            # were active seconds before their reclassification, so they
+            # too count against uptime
             meter.record_idle(uptime - meter.active_s - meter.idle_s
-                              - meter.preempt_s,
+                              - meter.preempt_s - meter.lost_s,
                               t_s=rep.core.clock)
 
         endpoints: Dict[str, ServingMetrics] = {}
@@ -869,6 +1190,7 @@ class ReplicaFleet:
                 responses = [r for _, m in finished for r in m.responses]
             responses.sort(key=lambda r: r.rid)
             stats = self._stats(reps, endpoint=name)
+            self._availability_stats(stats, [name], responses)
             endpoints[name] = ServingMetrics(
                 responses, wall, meter.total_j, tokens, meter=meter,
                 fleet=stats)
@@ -877,6 +1199,7 @@ class ReplicaFleet:
             all_tokens += tokens
         all_resp.sort(key=lambda r: r.rid)
         fleet_stats = self._stats(self.replicas)
+        self._availability_stats(fleet_stats, list(self.specs), all_resp)
         fleet = ServingMetrics(all_resp, all_wall, fleet_meter.total_j,
                                all_tokens, meter=fleet_meter,
                                fleet=fleet_stats)
@@ -945,4 +1268,49 @@ class ReplicaFleet:
                 "kv_bytes": sum(e["kv_bytes"] for e in handoffs),
                 "xfer_s": sum(e["xfer_s"] for e in handoffs),
             }
+        transits = [e for e in self.transit_events
+                    if endpoint is None or e["endpoint"] == endpoint]
+        if transits:
+            stats["transit"] = {
+                "count": len(transits),
+                "xfer_s": sum(e["xfer_s"] for e in transits),
+            }
+        if self.chaos_log and endpoint is None:
+            stats["chaos_events"] = list(self.chaos_log)
         return stats
+
+    def _availability_stats(self, stats: dict, names: List[str],
+                            responses: List[Response]) -> None:
+        """Per-class availability for a chaos-injected run: delivered
+        responses over submitted arrivals, with the recorded drops (retry
+        budget exhausted) and sheds (degraded-mode batch work) that explain
+        the gap.  Healthy runs (no ChaosRuntime) report nothing — their
+        stats stay byte-identical to the pre-chaos fleet."""
+        if self.chaos is None:
+            return
+        sub: Dict[str, int] = {}
+        drops: Dict[str, int] = {}
+        shed: Dict[str, int] = {}
+        for n in names:
+            for c, k in self._submitted.get(n, {}).items():
+                sub[c] = sub.get(c, 0) + k
+            for c, k in self._drops.get(n, {}).items():
+                drops[c] = drops.get(c, 0) + k
+            for c, k in self._shed.get(n, {}).items():
+                shed[c] = shed.get(c, 0) + k
+        if not sub:
+            return
+        delivered: Dict[str, int] = {}
+        for r in responses:
+            c = r.priority or DEFAULT_PRIORITY
+            delivered[c] = delivered.get(c, 0) + 1
+        stats["submitted_by_class"] = dict(sorted(sub.items()))
+        stats["delivered_by_class"] = dict(sorted(delivered.items()))
+        stats["drops_by_class"] = dict(sorted(drops.items()))
+        stats["shed_by_class"] = dict(sorted(shed.items()))
+        stats["availability_by_class"] = {
+            c: delivered.get(c, 0) / max(k, 1)
+            for c, k in sorted(sub.items())}
+        stats["availability"] = (sum(delivered.values())
+                                 / max(sum(sub.values()), 1))
+        stats["retries"] = sum(self._retry_minted.get(n, 0) for n in names)

@@ -201,6 +201,20 @@ class PendingQueue:
             return None
         return self._pop_at(best_idx)
 
+    def drain_all(self) -> List[Request]:
+        """Remove and return every unpopped entry, in queue order.
+
+        The chaos layer's crash path: a dead replica's backlog is pulled out
+        wholesale so the fleet can re-route or retry it elsewhere.  Leaves
+        the queue empty (every index marked popped)."""
+        self._advance_head()
+        arr, popped = self._arr, self._popped
+        out = [arr[i] for i in range(self._head, len(arr)) if not popped[i]]
+        for i in range(self._head, len(arr)):
+            popped[i] = 1
+        self._head = len(arr)
+        return out
+
     # -- arrivals --------------------------------------------------------------
     def push(self, req: Request) -> None:
         """Enqueue one arrival.  Routers offer in global arrival order, so

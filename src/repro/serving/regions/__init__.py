@@ -1,0 +1,9 @@
+"""Geo-distributed regions: carbon zones promoted to first-class places.
+
+See :mod:`repro.serving.regions.spec` for the declarative
+:class:`RegionSpec` and the :class:`RegionTopology` the fleet executes.
+"""
+
+from repro.serving.regions.spec import RegionSpec, RegionTopology
+
+__all__ = ["RegionSpec", "RegionTopology"]

@@ -41,6 +41,15 @@ class Request:
     # KV-cache payload this request's handoff moved (stamped by the fleet
     # on the decode leg; 0 for unified serving)
     kv_bytes: int = 0
+    # client region (RegionSpec name): serving the request from a replica in
+    # another region bills request/response transit on the inter-region link
+    # and delays the effective arrival.  "" = region-less (all legacy
+    # workloads), which never pays transit
+    origin: str = ""
+    # retry generation under a RetrySpec: 0 for the original attempt; the
+    # chaos layer re-mints crashed/shed work with retries+1 until the
+    # spec's max_retries is exhausted
+    retries: int = 0
 
 
 @dataclasses.dataclass(slots=True)

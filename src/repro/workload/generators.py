@@ -193,10 +193,15 @@ class WorkloadSpec:
     burst_rate_per_s: float = 0.0
     # trace replay
     arrivals: Tuple[float, ...] = ()
+    # client regions (repro.serving.regions): requests cycle the named
+    # origins round-robin in arrival order, so one spec declares a
+    # geo-mixed client population; () = region-less (never pays transit)
+    origins: Tuple[str, ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "arrivals",
                            tuple(float(t) for t in self.arrivals))
+        object.__setattr__(self, "origins", tuple(self.origins))
 
     def problems(self) -> Sequence[Tuple[str, str]]:
         """(relative_field, message) violations; the spec layer prefixes
@@ -225,6 +230,10 @@ class WorkloadSpec:
                 out.append(("priority",
                             f"unknown priority class {self.priority!r}; "
                             f"known: {sorted(PRIORITY_LEVELS)}"))
+        for j, o in enumerate(self.origins):
+            if not o:
+                out.append((f"origins[{j}]",
+                            "origin region names must be non-empty"))
         if self.kind == "diurnal":
             if self.rate_per_s <= 0:
                 out.append(("rate_per_s",
@@ -257,16 +266,25 @@ class WorkloadSpec:
                       seed=self.seed, rid0=self.rid0, slo_ms=self.slo_ms,
                       deadline_s=self.deadline_s, priority=self.priority)
         if self.kind == "poisson":
-            return poisson(self.n, rate_per_s=self.rate_per_s, **common)
-        if self.kind == "diurnal":
-            return diurnal(self.n, base_rate_per_s=self.rate_per_s,
-                           peak_rate_per_s=self.peak_rate_per_s,
-                           period_s=self.period_s, phase_s=self.phase_s,
-                           **common)
-        if self.kind == "bursty":
-            return bursty(self.n, rate_per_s=self.rate_per_s,
-                          burst_n=self.burst_n,
-                          burst_every_s=self.burst_every_s,
-                          burst_rate_per_s=self.burst_rate_per_s,
-                          phase_s=self.phase_s, **common)
-        return replay(self.arrivals, **common)
+            out = poisson(self.n, rate_per_s=self.rate_per_s, **common)
+        elif self.kind == "diurnal":
+            out = diurnal(self.n, base_rate_per_s=self.rate_per_s,
+                          peak_rate_per_s=self.peak_rate_per_s,
+                          period_s=self.period_s, phase_s=self.phase_s,
+                          **common)
+        elif self.kind == "bursty":
+            out = bursty(self.n, rate_per_s=self.rate_per_s,
+                         burst_n=self.burst_n,
+                         burst_every_s=self.burst_every_s,
+                         burst_rate_per_s=self.burst_rate_per_s,
+                         phase_s=self.phase_s, **common)
+        else:
+            out = replay(self.arrivals, **common)
+        if self.origins:
+            # geo-mixed clients: cycle the declared origin regions in
+            # arrival order (deterministic — no extra randomness to seed)
+            out = [dataclasses.replace(r,
+                                       origin=self.origins[k
+                                                           % len(self.origins)])
+                   for k, r in enumerate(out)]
+        return out

@@ -1,0 +1,438 @@
+"""Chaos subsystem contract tests (regions, failure script, recovery).
+
+Pins the PR 8 invariants the resilience grid is built on:
+
+  * **determinism** — the same seed + ChaosSpec replays repr-identical
+    joules, grams, latencies, and availability across two runs;
+  * **conservation incl. lost** — per policy x router, under the
+    ``REPRO_SANITIZE=1`` auditing meter, the five buckets decompose the
+    total exactly (J and g) and every submitted request is delivered,
+    dropped, or shed — never two of those, never none;
+  * **crash mid-batch** — a crash drains the victim *to* the event instant
+    (clock causality), in-flight work lands in the meter's ``lost`` bucket
+    as a pure reclassification, and the casualties re-enter through the
+    bounded retry path;
+  * **failover vs pinning** — cross-region failover serves a downed
+    region's origin traffic remotely (billed through ``xfer``); with
+    ``failover=False`` the same traffic waits out the outage at home;
+  * **graceful degradation** — sheds batch-rung arrivals only; the
+    standard/interactive rungs ride through at full availability;
+  * **brownout** — power caps stretch steps but conserve the work's active
+    energy, and the no-chaos fleet path stays byte-identical.
+"""
+
+import numpy as np
+import pytest
+
+from repro.carbon.signal import CarbonSpec
+from repro.core.engines import GenerationResult
+from repro.serving.chaos import (ChaosEvent, ChaosRuntime, ChaosSpec,
+                                 RetryRuntime, RetrySpec)
+from repro.serving.fleet import Autoscaler, EndpointSpec, ReplicaFleet
+from repro.serving.regions import RegionSpec, RegionTopology
+from repro.serving.request import Request
+from repro.serving.scheduler import make_policy
+
+
+class FakeEngine:
+    """Deterministic timings, no model — chaos mechanics only."""
+
+    cfg = None
+
+    def __init__(self, prefill_s=0.01, step_s=0.005):
+        self.prefill_s = prefill_s
+        self.step_s = step_s
+
+    def generate(self, tokens, max_new):
+        B = tokens.shape[0]
+        return GenerationResult(
+            tokens=np.ones((B, max_new), np.int32),
+            prefill_s=self.prefill_s,
+            decode_s=self.step_s * (max_new - 1),
+            n_steps=max_new,
+        )
+
+
+def _workload(n, rate, seed, rid0=0, priority=None, origins=("eu", "us")):
+    rng = np.random.RandomState(seed)
+    t, out = 0.0, []
+    for k in range(n):
+        t += rng.exponential(1.0 / rate)
+        out.append(Request(
+            rid=rid0 + k,
+            prompt=rng.randint(0, 100, size=16).astype(np.int32),
+            max_new_tokens=6, arrival_s=t, priority=priority,
+            origin=origins[k % len(origins)] if origins else ""))
+    return out
+
+
+def _regions(latency_ms=5.0):
+    return {
+        "eu": RegionSpec(carbon=CarbonSpec(kind="diurnal", g_per_kwh=300.0,
+                                           amplitude_g_per_kwh=200.0,
+                                           period_s=60.0, phase_s=0.0),
+                         latency_ms=latency_ms),
+        "us": RegionSpec(carbon=CarbonSpec(kind="diurnal", g_per_kwh=300.0,
+                                           amplitude_g_per_kwh=200.0,
+                                           period_s=60.0, phase_s=30.0),
+                         latency_ms=latency_ms),
+    }
+
+
+EVENTS = (
+    ChaosEvent(kind="crash", t_s=2.0),
+    ChaosEvent(kind="outage", t_s=4.0, target="eu", duration_s=3.0),
+    ChaosEvent(kind="brownout", t_s=8.0, target="us", duration_s=2.0,
+               power_cap_frac=0.5),
+)
+
+
+def _fleet(*, retry=RetrySpec(max_retries=3), events=EVENTS, seed=7,
+           router="least_loaded", policy="dynamic_batch", replicas=4,
+           zones=("eu", "us")):
+    fleet = ReplicaFleet(
+        router=router,
+        autoscaler=Autoscaler(window_s=0.5),
+        regions=RegionTopology.from_specs(_regions()),
+        chaos=(ChaosRuntime.from_spec(ChaosSpec(events=events, seed=seed))
+               if events is not None else None),
+        retry=(RetryRuntime.from_spec(retry) if retry is not None else None))
+    fleet.add_endpoint(EndpointSpec(
+        name="chat", engine=FakeEngine(),
+        policy_factory=lambda: make_policy(policy, max_batch=4,
+                                           timeout_ms=10.0),
+        min_replicas=2, max_replicas=replicas, initial_replicas=replicas,
+        zones=zones))
+    return fleet
+
+
+def _mixed_workload():
+    return {"chat": _workload(300, 80.0, seed=5)
+            + _workload(80, 20.0, seed=6, rid0=10_000, priority="batch")}
+
+
+def _run(fleet, workloads=None):
+    return fleet.run(workloads if workloads is not None
+                     else _mixed_workload())
+
+
+# -- spec validation -----------------------------------------------------------
+
+def test_chaos_event_problems():
+    assert ChaosEvent(kind="meteor").problems()
+    assert ChaosEvent(kind="outage", target="eu").problems()  # no duration
+    assert ChaosEvent(kind="outage", duration_s=1.0).problems()  # no target
+    assert ChaosEvent(kind="brownout", target="eu", duration_s=1.0,
+                      power_cap_frac=1.0).problems()  # cap must bite
+    assert ChaosEvent(kind="crash", t_s=-1.0).problems()
+    assert not ChaosEvent(kind="brownout", target="eu", duration_s=1.0,
+                          power_cap_frac=0.5).problems()
+
+
+def test_retry_spec_problems_and_backoff():
+    assert RetrySpec(max_retries=-1).problems()
+    assert RetrySpec(backoff_s=-0.1).problems()
+    assert RetrySpec(backoff_mult=0.5).problems()
+    rt = RetryRuntime.from_spec(RetrySpec(max_retries=2, backoff_s=0.1,
+                                          backoff_mult=2.0))
+    assert rt.backoff(1) == pytest.approx(0.1)
+    assert rt.backoff(3) == pytest.approx(0.4)
+    assert rt.allows(0) and rt.allows(1) and not rt.allows(2)
+
+
+def test_chaos_runtime_windows_and_script_order():
+    rt = ChaosRuntime.from_spec(ChaosSpec(events=EVENTS, seed=0))
+    assert rt.next_due_t() == 2.0
+    assert [e.kind for e in rt.pop_due(4.0)] == ["crash"]  # strict <
+    assert [e.kind for e in rt.pop_due(8.1)] == ["outage", "brownout"]
+    assert rt.next_due_t() == float("inf")
+    assert rt.region_down("eu", 4.0) and rt.region_down("eu", 6.9)
+    assert not rt.region_down("eu", 7.0) and not rt.region_down("us", 5.0)
+    assert rt.caps_for("us") == [(8.0, 10.0, 0.5)]
+    assert rt.caps_for("eu") == []
+    assert rt.degraded(5.0) and rt.degraded(9.0) and not rt.degraded(12.0)
+
+
+def test_seeded_crash_pick_is_deterministic():
+    names = ["chat/r2", "chat/r0", "chat/r1"]
+    picks = [ChaosRuntime.from_spec(ChaosSpec(seed=9)).pick_crash_target(
+        list(names)) for _ in range(3)]
+    assert len(set(picks)) == 1
+
+
+# -- determinism (the satellite contract) --------------------------------------
+
+def test_same_seed_replays_bit_identically():
+    """Same seed + ChaosSpec -> repr-identical joules, grams, latencies,
+    and availability across two independent runs."""
+    res1 = _run(_fleet())
+    res2 = _run(_fleet())
+    m1, m2 = res1.fleet.meter, res2.fleet.meter
+    assert repr(m1.total_j) == repr(m2.total_j)
+    assert repr(m1.total_g) == repr(m2.total_g)
+    assert repr(m1.lost_j) == repr(m2.lost_j)
+    lat1 = sorted(r.done_s - r.arrival_s for r in res1.fleet.responses)
+    lat2 = sorted(r.done_s - r.arrival_s for r in res2.fleet.responses)
+    assert repr(lat1) == repr(lat2)
+    s1, s2 = res1.fleet.fleet, res2.fleet.fleet
+    assert s1["availability"] == s2["availability"]
+    assert s1["availability_by_class"] == s2["availability_by_class"]
+    assert s1["drops_by_class"] == s2["drops_by_class"]
+    assert s1["shed_by_class"] == s2["shed_by_class"]
+
+
+def test_any_seed_conserves_energy():
+    """The seed is the only entropy (it reaches the unnamed-crash pick and
+    nothing else), so totals stay conserved for every seed."""
+    for seed in (1, 2):
+        m = _run(_fleet(seed=seed)).fleet.meter
+        assert m.total_j == pytest.approx(
+            m.active_j + m.idle_j + m.preempt_j + m.xfer_j + m.lost_j)
+
+
+# -- conservation incl. lost, per policy x router, sanitized -------------------
+
+@pytest.mark.parametrize("policy", ["dynamic_batch", "adaptive_batch"])
+@pytest.mark.parametrize("router", ["round_robin", "least_loaded",
+                                    "follow_sun"])
+def test_conservation_with_lost_bucket_sanitized(policy, router,
+                                                 monkeypatch):
+    """Five-way conservation (J and g) under the auditing meter, and the
+    request ledger closes: submitted == delivered + dropped + shed."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    res = _run(_fleet(policy=policy, router=router))
+    m = res.fleet.meter
+    assert m.total_j == pytest.approx(
+        m.active_j + m.idle_j + m.preempt_j + m.xfer_j + m.lost_j)
+    assert m.total_g == pytest.approx(
+        m.active_g + m.idle_g + m.preempt_g + m.xfer_g + m.lost_g)
+    st = res.fleet.fleet
+    for cls, n_sub in st["submitted_by_class"].items():
+        assert n_sub == (st["delivered_by_class"].get(cls, 0)
+                        + st["drops_by_class"].get(cls, 0)
+                        + st["shed_by_class"].get(cls, 0)), cls
+
+
+# -- crash mid-batch -----------------------------------------------------------
+
+def _crash_fleet(*, retry, replicas=1):
+    """A slow engine (each dispatch runs >= 1.1 virtual seconds) plus a
+    crash scripted at t=1.02 — inside the first dispatches, after the first
+    routing window — so in-flight work is guaranteed mid-batch."""
+    fleet = ReplicaFleet(
+        chaos=ChaosRuntime.from_spec(ChaosSpec(events=(
+            ChaosEvent(kind="crash", t_s=1.02, target="chat/r0"),))),
+        retry=retry)
+    fleet.add_endpoint(EndpointSpec(
+        name="chat", engine=FakeEngine(prefill_s=0.6, step_s=0.1),
+        policy_factory=lambda: make_policy("dynamic_batch", max_batch=4,
+                                           timeout_ms=5.0),
+        min_replicas=replicas, max_replicas=replicas,
+        initial_replicas=replicas))
+    return fleet, {"chat": _workload(4, 100.0, seed=3, origins=())}
+
+
+def test_crash_mid_batch_loses_inflight_work():
+    fleet, wl = _crash_fleet(retry=None)
+    res = _run(fleet, wl)
+    m = res.fleet.meter
+    # the dispatch started before the crash and would have ended after it:
+    # its joules are billed (they were drawn) but reclassified as lost
+    assert m.lost_j > 0
+    assert m.total_j == pytest.approx(
+        m.active_j + m.idle_j + m.preempt_j + m.xfer_j + m.lost_j)
+    st = res.fleet.fleet
+    assert st["availability"] < 1.0
+    assert sum(st["drops_by_class"].values()) > 0  # no retry budget: dropped
+    # clock causality: nothing on the dead replica finished past the crash
+    assert all(r.done_s <= 1.02 for r in res.fleet.responses)
+    crashes = [e for e in fleet.chaos_log if e["kind"] == "crash"]
+    assert crashes and crashes[0]["lost_rids"] > 0
+    assert crashes[0]["lost_j"] == pytest.approx(m.lost_j)
+
+
+def test_crash_casualties_reenter_through_bounded_retry():
+    """With a second replica available, the crashed batch's requests retry
+    with backoff and complete — availability recovers, lost stays billed."""
+    fleet, wl = _crash_fleet(
+        retry=RetryRuntime.from_spec(RetrySpec(max_retries=3,
+                                               backoff_s=0.01)),
+        replicas=2)
+    res = _run(fleet, wl)
+    st = res.fleet.fleet
+    assert res.fleet.meter.lost_j > 0          # the first leg still burned
+    assert st["availability"] == 1.0           # but every request delivered
+    assert st["retries"] > 0
+    assert {r.rid for r in res.fleet.responses} == {0, 1, 2, 3}
+
+
+def test_mark_lost_is_pure_reclassification(monkeypatch):
+    """Sanitized run: the crash must not mint or refund energy — the audit
+    meter raises if mark_lost moves the total instead of reclassifying."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    fleet, wl = _crash_fleet(retry=None)
+    m = _run(fleet, wl).fleet.meter
+    assert m.lost_j > 0
+    assert m.lost_g > 0
+
+
+# -- regions: failover vs pinning ----------------------------------------------
+
+def _outage_only():
+    return (ChaosEvent(kind="outage", t_s=1.0, target="eu",
+                       duration_s=2.0),)
+
+
+def test_failover_serves_downed_region_remotely():
+    fleet = _fleet(events=_outage_only(),
+                   retry=RetrySpec(max_retries=3, failover=True,
+                                   degrade=False), replicas=2)
+    res = _run(fleet, {"chat": _workload(150, 100.0, seed=5)})
+    st = res.fleet.fleet
+    assert st["availability"] == 1.0
+    # request legs crossed the region boundary and were billed as xfer
+    assert [t for t in fleet.transit_events if t["leg"] == "request"]
+    assert res.fleet.meter.xfer_j > 0
+    # the whole run finishes on the surviving region, well before the
+    # outage lifts at t=3
+    assert max(r.done_s for r in res.fleet.responses) < 3.0
+
+
+def test_pinned_traffic_waits_out_the_outage():
+    """failover=False: eu-origin work may only run in eu, so it backs off
+    until the outage lifts — it completes late instead of crossing."""
+    fleet = _fleet(events=_outage_only(),
+                   retry=RetrySpec(max_retries=8, backoff_s=0.05,
+                                   failover=False, degrade=False),
+                   replicas=2)
+    res = _run(fleet, {"chat": _workload(150, 100.0, seed=5)})
+    assert res.fleet.fleet["availability"] == 1.0
+    # pinned traffic never pays a cross-region leg in either direction
+    assert fleet.transit_events == []
+    assert res.fleet.meter.xfer_j == 0.0
+    # eu arrivals during [1, 3) only complete once the region comes back
+    assert max(r.done_s for r in res.fleet.responses) >= 3.0
+
+
+def test_outage_excludes_region_from_routing():
+    fleet = _fleet(events=_outage_only(),
+                   retry=RetrySpec(max_retries=8, degrade=False))
+    _run(fleet, {"chat": _workload(150, 100.0, seed=5)})
+    by_name = {r.name: r for r in fleet.replicas}
+    outages = [e for e in fleet.chaos_log if e["kind"] == "outage"]
+    assert outages and outages[0]["target"] == "eu" \
+        and outages[0]["replicas"] > 0
+    # the outage's collateral crashes hit eu replicas and nothing else
+    crashes = [e for e in fleet.chaos_log if e["kind"] == "crash"]
+    assert crashes
+    assert all(by_name[e["target"]].zone == "eu" for e in crashes)
+    # every eu replica provisioned before the outage is stopped by it
+    for rep in fleet.replicas:
+        if rep.zone == "eu" and rep.created_s < 1.0:
+            assert rep.stopped_s is not None
+
+
+# -- graceful degradation ------------------------------------------------------
+
+def _degrade_workload():
+    # standard traffic plus a batch rung whose arrivals straddle the
+    # outage window [1, 3): the shed path is guaranteed to see work
+    return {"chat": _workload(200, 100.0, seed=5)
+            + _workload(100, 50.0, seed=6, rid0=10_000, priority="batch")}
+
+
+def test_degradation_sheds_batch_class_only():
+    fleet = _fleet(events=_outage_only(),
+                   retry=RetrySpec(max_retries=4, backoff_s=0.01,
+                                   degrade=True))
+    res = _run(fleet, _degrade_workload())
+    st = res.fleet.fleet
+    assert set(st["shed_by_class"]) == {"batch"}
+    assert st["shed_by_class"]["batch"] > 0
+    # the protected rung rides through the outage at full availability
+    assert st["availability_by_class"]["standard"] == pytest.approx(1.0)
+    assert st["availability_by_class"]["batch"] < 1.0
+    assert st["availability"] < 1.0
+
+
+def test_no_degradation_keeps_batch_work():
+    fleet = _fleet(events=_outage_only(),
+                   retry=RetrySpec(max_retries=4, backoff_s=0.01,
+                                   degrade=False))
+    res = _run(fleet, _degrade_workload())
+    st = res.fleet.fleet
+    assert st["shed_by_class"] == {}
+    assert st["availability_by_class"]["batch"] == pytest.approx(1.0)
+
+
+# -- brownout ------------------------------------------------------------------
+
+def _single_replica(events):
+    fleet = ReplicaFleet(
+        chaos=(ChaosRuntime.from_spec(ChaosSpec(events=events))
+               if events else None),
+        retry=(RetryRuntime.from_spec(RetrySpec(degrade=False))
+               if events else None))
+    fleet.add_endpoint(EndpointSpec(
+        name="chat", engine=FakeEngine(prefill_s=0.05, step_s=0.01),
+        policy_factory=lambda: make_policy("dynamic_batch", max_batch=4,
+                                           timeout_ms=5.0),
+        min_replicas=1, max_replicas=1, initial_replicas=1))
+    return fleet
+
+
+def test_brownout_stretches_steps_but_conserves_active_energy():
+    wl = {"chat": _workload(20, 50.0, seed=4, origins=())}
+    healthy = _run(_single_replica(None), wl)
+    capped = _run(_single_replica((
+        ChaosEvent(kind="brownout", t_s=0.0, duration_s=100.0,
+                   power_cap_frac=0.5),)), wl)
+    done_h = max(r.done_s for r in healthy.fleet.responses)
+    done_c = max(r.done_s for r in capped.fleet.responses)
+    assert done_c > done_h                     # steps stretch by 1/frac
+    # capped power x stretched time: the work's own energy is conserved
+    assert capped.fleet.meter.active_j == pytest.approx(
+        healthy.fleet.meter.active_j, rel=1e-6)
+    assert len(capped.fleet.responses) == len(healthy.fleet.responses)
+    assert capped.fleet.meter.lost_j == 0.0    # nothing crashed
+
+
+def test_empty_chaos_script_is_byte_identical_to_no_chaos():
+    """ChaosSpec() (no events) must reproduce the pre-chaos fleet timeline
+    byte-for-byte; the only difference is that it *reports* availability."""
+    def mint(with_chaos):
+        fleet = ReplicaFleet(
+            chaos=(ChaosRuntime.from_spec(ChaosSpec()) if with_chaos
+                   else None),
+            retry=(RetryRuntime.from_spec(RetrySpec()) if with_chaos
+                   else None))
+        fleet.add_endpoint(EndpointSpec(
+            name="chat", engine=FakeEngine(),
+            policy_factory=lambda: make_policy("dynamic_batch", max_batch=4,
+                                               timeout_ms=5.0),
+            min_replicas=1, max_replicas=2, initial_replicas=2))
+        return fleet
+
+    wl = {"chat": _workload(50, 50.0, seed=8, origins=())}
+    plain = _run(mint(with_chaos=False), wl)
+    empty = _run(mint(with_chaos=True), wl)
+    assert repr(plain.fleet.meter.total_j) == repr(empty.fleet.meter.total_j)
+    assert repr([r.done_s for r in plain.fleet.responses]) == \
+        repr([r.done_s for r in empty.fleet.responses])
+    # healthy runs without chaos wiring report no availability at all
+    assert "availability" not in plain.fleet.fleet
+    assert empty.fleet.fleet["availability"] == 1.0
+
+
+# -- region topology -----------------------------------------------------------
+
+def test_transit_time_and_power():
+    topo = RegionTopology.from_specs(_regions(latency_ms=10.0))
+    # both endpoints' one-way latency plus the payload over the link
+    s = topo.transit_s("eu", "us", payload_bytes=1_250_000)
+    assert s == pytest.approx(0.010 + 0.010 + 1_250_000 / (10.0e9 / 8))
+    assert topo.transit_s("eu", "eu", 1000) == 0.0
+    assert topo.transit_s("", "us", 1000) == 0.0
+    assert topo.transit_s("eu", "mars", 1000) == 0.0
+    assert topo.link_power_w("eu") == 10.0
+    assert topo.names == ("eu", "us")

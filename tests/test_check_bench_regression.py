@@ -38,6 +38,16 @@ def _doc():
         "disagg_grid": [
             {"router": "round_robin", "interactive_p95_ttft_s": 0.02},
         ],
+        "chaos_grid": [
+            {"tactic": "healthy", "router": "least_loaded",
+             "availability": None, "interactive_availability": None},
+            {"tactic": "failover_degrade", "router": "least_loaded",
+             "availability": 0.83, "interactive_availability": 0.995},
+            {"tactic": "no_retry", "router": "least_loaded",
+             "availability": 0.91, "interactive_availability": 0.92},
+            {"kind": "headline", "router": "least_loaded",
+             "acceptance": True},
+        ],
         "sim_throughput": {
             "canonical": {"sim_requests_per_wall_s": 15000.0},
         },
@@ -129,6 +139,52 @@ def test_each_grid_loss_is_detected(tmp_path, grid):
     base = _write(tmp_path, "base.json", _doc())
     fresh = _write(tmp_path, "fresh.json", doc)
     assert _run(base, fresh) == 1
+
+
+def test_availability_drop_warns_but_never_fails(tmp_path, capsys):
+    """Interactive availability under chaos: more than one point below
+    baseline annotates the PR (title=availability regression) but must
+    never gate the job."""
+    doc = _doc()
+    doc["chaos_grid"][1]["interactive_availability"] = 0.95
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "availability regression" in out and "::error" not in out
+
+
+def test_availability_within_one_point_is_ok(tmp_path, capsys):
+    doc = _doc()
+    doc["chaos_grid"][1]["interactive_availability"] = 0.99  # -0.005
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    assert "availability regression" not in capsys.readouterr().out
+
+
+def test_availability_best_cell_ignores_headline_and_healthy(tmp_path,
+                                                             capsys):
+    """The metric is the best measurement row: healthy rows (availability
+    None) and headline rows never contribute."""
+    doc = _doc()
+    # degrade the best tactic; the weaker no_retry cell (0.92) must not
+    # mask the drop by becoming the comparison point on either side
+    doc["chaos_grid"][1]["interactive_availability"] = 0.90
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "baseline=0.9950 fresh=0.9200" in out
+
+
+def test_fresh_lost_chaos_grid_exits_1(tmp_path, capsys):
+    doc = _doc()
+    del doc["chaos_grid"]
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 1
+    assert "chaos grid went missing" in capsys.readouterr().out
 
 
 def test_old_baseline_missing_grid_only_warns(tmp_path, capsys):

@@ -146,8 +146,8 @@ def test_sanitizer_summary_is_bit_identical_to_plain(monkeypatch):
 def test_underbilled_active_segment_names_event(monkeypatch):
     orig = EnergyMeter.record_active
 
-    def underbilled(self, dur_s, rids=(), tokens=0, t_s=None):
-        return orig(self, dur_s * 0.5, rids, tokens, t_s)
+    def underbilled(self, dur_s, rids=(), tokens=0, t_s=None, power_w=None):
+        return orig(self, dur_s * 0.5, rids, tokens, t_s, power_w)
 
     monkeypatch.setattr(EnergyMeter, "record_active", underbilled)
     m = _meter()

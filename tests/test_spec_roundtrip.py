@@ -23,6 +23,8 @@ from repro.serving.admission.disagg import DisaggSpec
 from repro.serving.admission.priority import PrioritySpec
 from repro.serving.api import (AutoscaleSpec, EndpointSpec, ServingSpec,
                                SLOClass, SpecError, sweep, with_override)
+from repro.serving.chaos import ChaosEvent, ChaosSpec, RetrySpec
+from repro.serving.regions import RegionSpec
 from repro.workload.generators import WorkloadSpec
 
 ARCH = "minitron-4b-smoke"
@@ -34,7 +36,8 @@ def baseline_spec() -> ServingSpec:
     slo = {"interactive": SLOClass(slo_ms=50.0, priority="interactive"),
            "batch": SLOClass(deadline_s=30.0, priority="batch")}
     wl = WorkloadSpec(kind="poisson", n=64, prompt_len=8, max_new_tokens=8,
-                      rate_per_s=20.0, peak_rate_per_s=40.0, seed=7)
+                      rate_per_s=20.0, peak_rate_per_s=40.0, seed=7,
+                      origins=("apac",))
     chat = EndpointSpec(
         name="chat", arch=ARCH, model="m", policy="dynamic_batch",
         max_batch=8, ttft_slo_ms=200.0, slo_classes=slo, workload=wl,
@@ -57,6 +60,17 @@ def baseline_spec() -> ServingSpec:
                       "us": CarbonSpec(kind="constant", g_per_kwh=420.0)},
         deferral=DeferralSpec(enabled=True),
         priority=PrioritySpec(enabled=True),
+        regions={"apac": RegionSpec(carbon=CarbonSpec(kind="constant",
+                                                      g_per_kwh=80.0),
+                                    latency_ms=20.0),
+                 "emea": RegionSpec(carbon=CarbonSpec(kind="constant",
+                                                      g_per_kwh=350.0),
+                                    gbps=5.0)},
+        chaos=ChaosSpec(events=(
+            ChaosEvent(kind="crash", t_s=1.0),
+            ChaosEvent(kind="outage", t_s=2.0, target="apac",
+                       duration_s=1.0)), seed=5),
+        retry=RetrySpec(max_retries=1, backoff_s=0.02),
     ).validate()
 
 
@@ -77,6 +91,16 @@ ALTERNATES = {
                                            g_per_kwh=505.0)}),
         "deferral": ("deferral", DeferralSpec(enabled=False, window_s=1.0)),
         "priority": ("priority", PrioritySpec(enabled=False, pause_ms=5.0)),
+        "regions": ("regions",
+                    {"apac": RegionSpec(latency_ms=2.0),
+                     "emea": RegionSpec(gbps=25.0)}),
+        "chaos": ("chaos",
+                  ChaosSpec(events=(ChaosEvent(kind="brownout", t_s=3.0,
+                                               target="emea",
+                                               duration_s=2.0,
+                                               power_cap_frac=0.5),),
+                            seed=9)),
+        "retry": ("retry", RetrySpec(max_retries=5, failover=False)),
     },
     EndpointSpec: {
         "name": ("endpoints.chat.name", "chat2"),
@@ -179,6 +203,34 @@ ALTERNATES = {
         "burst_rate_per_s":
             ("endpoints.chat.workload.burst_rate_per_s", 50.0),
         "arrivals": ("endpoints.chat.workload.arrivals", (0.1, 0.2, 0.4)),
+        "origins": ("endpoints.chat.workload.origins", ("apac", "emea")),
+    },
+    RegionSpec: {
+        "carbon": ("regions.apac.carbon",
+                   CarbonSpec(kind="diurnal", g_per_kwh=120.0)),
+        "latency_ms": ("regions.apac.latency_ms", 55.0),
+        "gbps": ("regions.apac.gbps", 2.0),
+        "link_power_w": ("regions.apac.link_power_w", 25.0),
+    },
+    ChaosSpec: {
+        "events": ("chaos.events", (ChaosEvent(kind="crash", t_s=4.0),)),
+        "seed": ("chaos.seed", 13),
+    },
+    # ChaosEvent lives inside the chaos.events tuple, so its fields sweep
+    # as whole-tuple replacements (see the special-case test below)
+    ChaosEvent: {
+        "kind": (None, "outage"),
+        "t_s": (None, 7.5),
+        "target": (None, "emea"),
+        "duration_s": (None, 4.0),
+        "power_cap_frac": (None, 0.25),
+    },
+    RetrySpec: {
+        "max_retries": ("retry.max_retries", 4),
+        "backoff_s": ("retry.backoff_s", 0.1),
+        "backoff_mult": ("retry.backoff_mult", 3.0),
+        "failover": ("retry.failover", False),
+        "degrade": ("retry.degrade", False),
     },
 }
 
@@ -193,6 +245,10 @@ _GETTERS = {
     PrioritySpec: lambda s: s.priority,
     DisaggSpec: lambda s: s.endpoint("pd").disagg,
     WorkloadSpec: lambda s: s.endpoints[0].workload,
+    RegionSpec: lambda s: s.regions["apac"],
+    ChaosSpec: lambda s: s.chaos,
+    ChaosEvent: lambda s: s.chaos.events[0],
+    RetrySpec: lambda s: s.retry,
 }
 
 _PATH_CASES = [(cls, field) for cls, table in ALTERNATES.items()
@@ -255,6 +311,24 @@ def test_slo_class_fields_roundtrip_through_mapping(field):
     assert getattr(back.endpoints[0].slo_classes["interactive"],
                    field) == alt
     assert back == overridden
+
+
+@pytest.mark.parametrize("field", sorted(ALTERNATES[ChaosEvent]))
+def test_chaos_event_fields_roundtrip_through_tuple(field):
+    """Chaos events live in a tuple, so they sweep as whole tuples.  The
+    base event is a brownout: every single-field alternate below keeps it
+    a valid event (an outage needs target+duration, a brownout a cap)."""
+    spec = baseline_spec()
+    _, alt = ALTERNATES[ChaosEvent][field]
+    base = ChaosEvent(kind="brownout", t_s=2.0, target="apac",
+                      duration_s=1.0, power_cap_frac=0.5)
+    assert getattr(base, field) != alt
+    event = dataclasses.replace(base, **{field: alt})
+    overridden = with_override(spec, "chaos.events", (event,)).validate()
+    back = ServingSpec.from_json(overridden.to_json())
+    assert getattr(back.chaos.events[0], field) == alt
+    assert back == overridden
+    assert back.to_json() == overridden.to_json()
 
 
 def test_endpoints_tuple_roundtrips_wholesale():
