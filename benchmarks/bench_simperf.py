@@ -98,10 +98,15 @@ def _calibrate(session: ServingSession) -> StepTimeCache:
     return session._warm_cache("api")
 
 
-def _run_cell(payload):
+def _run_cell(payload, keep_report=False):
     """One sweep cell, self-contained and picklable: deploy the spec's
     endpoints on ReplayEngines, warm them from the parent's calibration,
-    serve the declared workload under the 'interactive' SLO class."""
+    serve the declared workload under the 'interactive' SLO class.
+
+    ``keep_report=True`` appends the full :class:`ServingReport` to the
+    return tuple (for in-process callers that need the telemetry recorder
+    or phase breakdowns; pool workers must not — reports don't ship well
+    across pickling boundaries)."""
     spec_json, cache_payload, assignment = payload
     spec = ServingSpec.from_json(spec_json)
     session = ServingSession()
@@ -127,6 +132,8 @@ def _run_cell(payload):
         "p95_latency_s": f.latency_p95_s,
         "mean_ttft_s": f.mean_ttft_s,
     })
+    if keep_report:
+        return row, report.result.fleet.meter, report
     return row, report.result.fleet.meter
 
 

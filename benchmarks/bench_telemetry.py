@@ -1,0 +1,114 @@
+"""Telemetry bench: one traced cell per scenario family -> ``telemetry_grid``.
+
+Each family re-runs a representative simulator cell twice — once untraced,
+once with ``ServingSpec.telemetry.enabled`` — and reports:
+
+  * the **per-class phase breakdown** (queue_wait / prefill / xfer / decode /
+    preempted mean + p95, virtual time) flattened into checker-friendly
+    scalars; ``interactive_queue_wait_p95_s`` is the number
+    :mod:`scripts.check_bench_regression` watches (warn-only) and the
+    stacked sixth panel of :mod:`scripts.plot_frontier` draws;
+  * the **observer-purity receipt** — traced and untraced runs must agree
+    bit-for-bit on J/token, gCO2/token and p95 latency (tracing is a pure
+    observer; a ``False`` here is a correctness bug, not noise);
+  * the **tracing overhead** (traced vs untraced host seconds — the
+    methodology documented in docs/OBSERVABILITY.md) and the exported
+    trace's size/validity against the Perfetto schema checker.
+
+Scale knob (env): ``TELEMETRY_N`` (default 20000 requests per cell).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from benchmarks import bench_simperf
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serving.api import ServingSession, with_override
+from repro.serving.telemetry import to_perfetto, validate_trace
+
+TELEMETRY_N = int(os.environ.get("TELEMETRY_N", 20_000))
+
+PHASES = ("queue_wait", "prefill", "xfer", "decode", "preempted")
+
+# one representative cell per scenario family: the canonical bursty
+# autoscale cell, its flash-crowd-heavy variant, and the greenest-router
+# decision cell — each exercised through the same ReplayEngine path the
+# simperf grid uses, so rows stay comparable run over run
+FAMILIES = (
+    ("steady", {}),
+    ("flash_crowd", {"endpoints.*.workload.rate_per_s": 450.0}),
+    ("green_router", {"router": "greenest"}),
+)
+
+
+def _family_spec(overrides):
+    spec = bench_simperf._base_spec(TELEMETRY_N, 250.0)
+    # the breakdown keys on the request's priority class; name it
+    # "interactive" so the regression checker has a stable column
+    spec = with_override(spec, "endpoints.*.slo_classes.*.priority",
+                         "interactive")
+    for path, value in overrides.items():
+        spec = with_override(spec, path, value)
+    return spec.validate()
+
+
+def _row(name, spec, cache):
+    untraced, _ = bench_simperf._run_cell(
+        (spec.to_json(), cache.to_payload(), {"family": name}))
+    traced_spec = with_override(spec, "telemetry.enabled", True).validate()
+    row, _meter, report = bench_simperf._run_cell(
+        (traced_spec.to_json(), cache.to_payload(), {"family": name}),
+        keep_report=True)
+    rec = report.telemetry
+    errors = validate_trace(to_perfetto(rec))
+    pb = report.fleet.phase_breakdown.get("interactive", {})
+    out = {
+        "family": name,
+        "router": spec.router,
+        "n_requests": row["n_requests"],
+        "j_per_token": row["j_per_token"],
+        "gco2_per_token": row["gco2_per_token"],
+        "traced_host_s": row["host_s"],
+        "untraced_host_s": untraced["host_s"],
+        "tracing_overhead_rel": (row["host_s"] / untraced["host_s"] - 1.0
+                                 if untraced["host_s"] > 0 else None),
+        "observer_pure": (
+            row["j_per_token"] == untraced["j_per_token"]
+            and row["gco2_per_token"] == untraced["gco2_per_token"]
+            and row["p95_latency_s"] == untraced["p95_latency_s"]),
+        "trace_events": len(rec.events),
+        "trace_dropped": rec.dropped,
+        "trace_valid": not errors,
+    }
+    for ph in PHASES:
+        st = pb.get(ph) or {}
+        out[f"interactive_{ph}_mean_s"] = st.get("mean_s")
+        out[f"interactive_{ph}_p95_s"] = st.get("p95_s")
+    return out
+
+
+def run():
+    cfg = get_arch(bench_simperf.ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+    session.deploy(bench_simperf._base_spec(1, 250.0), params={"m": params})
+    cache = bench_simperf._calibrate(session)
+
+    rows = []
+    for name, overrides in FAMILIES:
+        t0 = time.perf_counter()
+        r = _row(name, _family_spec(overrides), cache)
+        cell_s = time.perf_counter() - t0
+        rows.append(r)
+        emit(f"telemetry_{name}", cell_s * 1e6,
+             f"qwait_p95_s={r['interactive_queue_wait_p95_s']};"
+             f"overhead={r['tracing_overhead_rel']:+.1%};"
+             f"pure={r['observer_pure']};valid={r['trace_valid']};"
+             f"events={r['trace_events']}")
+    return rows

@@ -15,6 +15,8 @@ run (the CI bench job uploads it as an artifact).
                          seeded failure script (honors --jobs)
   bench_simperf        - simulator throughput: canonical 100k cell + pooled
                          rate x SLO sweep (honors --jobs)
+  bench_telemetry      - observability grid: one traced cell per scenario
+                         family (phase breakdowns, overhead, purity receipt)
   bench_formats        - Table 1, TD2 model-format row
   bench_codecs         - Table 1, TD4 communication-protocol row
   bench_adds           - Table 1 executed as GreenReports (all qualities)
@@ -59,6 +61,8 @@ def write_serving_json(path: str, results: dict) -> None:
         doc["chaos_grid"] = results["bench_chaos"]
     if "bench_simperf" in results:
         doc["sim_throughput"] = results["bench_simperf"]
+    if "bench_telemetry" in results:
+        doc["telemetry_grid"] = results["bench_telemetry"]
     if "bench_batching" in results:
         doc["batching"] = {
             name: m.summary() for name, m in results["bench_batching"].items()
@@ -83,12 +87,13 @@ def main(argv=None) -> None:
         bench_roofline,
         bench_serving_infra,
         bench_simperf,
+        bench_telemetry,
     )
 
     modules = [bench_codecs, bench_formats, bench_kernels,
                bench_serving_infra, bench_batching, bench_fleet,
                bench_decisions, bench_carbon, bench_disagg, bench_chaos,
-               bench_simperf,
+               bench_simperf, bench_telemetry,
                bench_adds, bench_roofline]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
@@ -122,7 +127,7 @@ def main(argv=None) -> None:
             traceback.print_exc()
     if results.keys() & {"bench_fleet", "bench_batching", "bench_decisions",
                          "bench_carbon", "bench_disagg", "bench_chaos",
-                         "bench_simperf"}:
+                         "bench_simperf", "bench_telemetry"}:
         write_serving_json(ns.serving_json, results)
     if failed:
         print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)

@@ -1,0 +1,109 @@
+"""A traced chaos run: the observability subsystem end to end (PR 9).
+
+One flip of ``ServingSpec.telemetry.enabled`` turns the chaos demo from
+``examples/serve_chaos.py`` into a fully traced run — same spec, same seeded
+crash barrage, bit-identical joules/grams/latencies (tracing is a pure
+observer) — and exports a Chrome/Perfetto ``trace_event`` JSON where the
+failure story is *visible*:
+
+  * per-replica tracks carry the meter's billing spans (active / idle /
+    preempt / xfer / lost), colored by energy bucket;
+  * the crash instants, the ``crash_loss`` markers (which rids' joules moved
+    to the ``lost`` bucket), the bounded-backoff ``retry`` re-entries and
+    the cross-region ``failover`` routings all land as instant events;
+  * every request is an async span (arrival -> delivery) with its exact
+    meter-attributed joules/grams in the args, nesting its
+    queue_wait / prefill / decode child phases;
+  * counter tracks sample pool sizes, backlogs and per-zone carbon
+    intensity at every autoscaler window boundary.
+
+Run it, then open the trace:
+
+    PYTHONPATH=src python examples/serve_traced.py --out trace.json
+    # -> https://ui.perfetto.dev  (Open trace file)
+
+The script also prints the report's per-class phase-breakdown table (the
+``queue_wait/prefill/xfer/decode/preempted`` p50/p95 decomposition) and
+re-validates the exported JSON against the schema checker before exiting.
+"""
+
+import argparse
+import sys
+
+import jax
+
+sys.path.insert(0, "examples")
+from serve_chaos import ARCH, BULK_MAX_NEW, MAX_NEW, PROMPT_LEN  # noqa: E402
+from serve_chaos import spec_for, workload  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.serving.api import ServingSession, TelemetrySpec  # noqa: E402
+from repro.serving.telemetry import validate_trace, write_trace  # noqa: E402
+from repro.serving.telemetry.export import to_perfetto  # noqa: E402
+
+PHASES = ("queue_wait", "prefill", "xfer", "decode", "preempted")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_trace.json",
+                    help="where to write the Perfetto trace JSON")
+    ap.add_argument("--mode", default="crash",
+                    choices=("healthy", "crash", "outage", "brownout"))
+    ns = ap.parse_args(argv)
+
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+
+    import dataclasses
+    spec = dataclasses.replace(
+        spec_for(ns.mode),
+        telemetry=TelemetrySpec(enabled=True)).validate()
+    session.deploy(spec, params={"m": params})
+    session.calibrate("llm", batch_sizes=range(1, 9),
+                      prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+    session.calibrate("llm", batch_sizes=range(1, 9),
+                      prompt_len=PROMPT_LEN, max_new=BULK_MAX_NEW)
+    session.submit("llm", workload(cfg.vocab_size))
+    report = session.run()
+    ep = report.endpoints["llm"]
+
+    rec = report.telemetry
+    doc = to_perfetto(rec)
+    errors = validate_trace(doc)
+    write_trace(ns.out, rec)
+
+    print(f"mode={ns.mode}  requests={ep.n_requests}  "
+          f"J={ep.j_measured:.2f} (lost {ep.j_lost:.2f})  "
+          f"gCO2={ep.gco2_total:.4f}")
+    print(f"trace: {len(doc['traceEvents'])} events, "
+          f"{len(rec.sinks)} replica tracks, "
+          f"{len(rec.requests)} request spans, "
+          f"dropped={rec.dropped} -> {ns.out}")
+    crash = [e for e in rec.events if e[0] == "inst"
+             and e[3] in ("crash", "crash_loss", "retry", "failover")]
+    print(f"chaos markers: " + ", ".join(sorted(
+        {e[3] for e in crash})) if crash else "chaos markers: none")
+
+    print(f"\n{'class':<12} {'phase':<11} {'n':>6} {'mean':>9} "
+          f"{'p50':>9} {'p95':>9}")
+    for cls, phases in sorted(ep.phase_breakdown.items()):
+        for ph in PHASES:
+            row = phases[ph]
+            print(f"{cls:<12} {ph:<11} {row['n']:>6} "
+                  f"{row['mean_s'] * 1e3:>8.2f}m {row['p50_s'] * 1e3:>8.2f}m "
+                  f"{row['p95_s'] * 1e3:>8.2f}m")
+
+    if errors:
+        print(f"\ntrace schema errors ({len(errors)}):")
+        for e in errors[:10]:
+            print(f"  {e}")
+        return 1
+    print("\ntrace schema: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

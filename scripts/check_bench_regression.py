@@ -15,7 +15,12 @@ Compares a freshly generated grid against the checked-in
     simulated requests per wall second, a HIGHER-is-better meta-metric: a
     >20% drop warns that the event loop itself got slower (PR 7's hot-path
     work regressing).  Always warn-only — wall-clock throughput is the one
-    number here that genuinely varies across bench hosts.
+    number here that genuinely varies across bench hosts;
+  * the **interactive-class queue-wait p95** (telemetry grid, PR 9's
+    phase-breakdown rows) — the admission-queue share of latency the span
+    decomposition newly makes visible.  Always warn-only: the phase
+    decomposition is young and its budget overlaps the TTFT contract
+    above, so it annotates drift without ever going red.
 
 A relative regression beyond ``--threshold`` emits a GitHub Actions
 ``::warning::`` annotation — loud on the PR, but not red (bench hosts are
@@ -149,6 +154,39 @@ def check_sim_throughput(base: float | None, fresh: float | None,
     return 0
 
 
+def interactive_queue_wait_p95(doc: dict) -> float | None:
+    """Best (minimum) interactive-class queue-wait p95 among the telemetry
+    grid's phase-breakdown rows, any family (None for pre-telemetry
+    baselines)."""
+    return _min_cell(doc, "telemetry_grid", None,
+                     "interactive_queue_wait_p95_s")
+
+
+def check_queue_wait(base: float | None, fresh: float | None,
+                     threshold: float, baseline_path: str) -> int:
+    """Warn (never fail) when the fresh interactive-class queue-wait p95
+    grew beyond the threshold.  Lower is better, like the energy/latency
+    metrics, but always returns 0 — phase rows are new enough that even a
+    lost grid only warns (quick ``--only`` runs skip the telemetry
+    bench)."""
+    if base is None or fresh is None or base <= 0:
+        if base is not None or fresh is not None:
+            print(f"::warning file={baseline_path}::no comparable "
+                  f"interactive queue-wait rows "
+                  f"(baseline={base}, fresh={fresh})")
+        return 0
+    rel = (fresh - base) / base
+    msg = (f"interactive queue-wait p95: baseline={base:.6f}s "
+           f"fresh={fresh:.6f}s ({rel:+.1%})")
+    if rel > threshold:
+        print(f"::warning file={baseline_path},title=queue-wait "
+              f"regression::{msg} exceeds the {threshold:.0%} budget — "
+              "requests are sitting longer in the admission queue")
+    else:
+        print(f"# ok: {msg}")
+    return 0
+
+
 def check_metric(label: str, base: float | None, fresh: float | None,
                  threshold: float, baseline_path: str,
                  fresh_path: str) -> int:
@@ -226,6 +264,9 @@ def main(argv=None) -> int:
     status |= check_sim_throughput(sim_requests_per_wall_s(base_doc),
                                    sim_requests_per_wall_s(fresh_doc),
                                    ns.baseline)
+    status |= check_queue_wait(interactive_queue_wait_p95(base_doc),
+                               interactive_queue_wait_p95(fresh_doc),
+                               ns.threshold, ns.baseline)
     return status
 
 

@@ -2,18 +2,21 @@
 
 Every serving PR has added a grid to ``BENCH_serving.json`` — fleet
 (policy x router), decisions (format x router), carbon (signal x deferral x
-router), disagg (mode x priority-mix x router) and chaos (recovery tactic x
-router) — but the frontier the paper cares about (how much energy does a
-latency or availability budget cost?) only shows up when the cells are
-drawn.  This script renders all five grids as one SVG of small multiples,
-one panel per grid:
+router), disagg (mode x priority-mix x router), chaos (recovery tactic x
+router) and telemetry (traced cell per scenario family) — but the frontier
+the paper cares about (how much energy does a latency or availability
+budget cost?) only shows up when the cells are drawn.  This script renders
+all six grids as one SVG of small multiples, one panel per grid:
 
   * **fleet**     J/token  vs p95 latency,       colored by router;
   * **decisions** J/token  vs p95 latency,       colored by router;
   * **carbon**    gCO2/token vs chat p95 latency, colored by router;
   * **disagg**    J/token  vs interactive p95 TTFT, colored by mode;
   * **chaos**     availability vs total gCO2,     colored by tactic
-    (healthy reference rows drawn at availability 1.0).
+    (healthy reference rows drawn at availability 1.0);
+  * **phases**    stacked per-phase mean time (queue_wait / prefill / xfer
+    / decode / preempted, interactive class) per telemetry-grid family —
+    the span decomposition PR 9's recorder attributes, drawn as bars.
 
 Pure stdlib — the SVG is written by hand, no plotting dependency.  Colors
 follow the entity (router / mode), assigned in fixed order, with the
@@ -185,6 +188,89 @@ class Panel:
         return "\n".join(parts)
 
 
+PHASES = ("queue_wait", "prefill", "xfer", "decode", "preempted")
+PHASE_COLORS = {"queue_wait": ORANGE, "prefill": BLUE, "xfer": AQUA,
+                "decode": NEUTRAL, "preempted": INK_MUTED}
+
+
+class StackPanel:
+    """Stacked per-phase time bars, one bar per telemetry family.
+
+    Duck-types :class:`Panel` (``.points`` + ``.svg(ox, oy)``) so the
+    renderer treats both alike; ``points`` = [(family, {phase: seconds})].
+    """
+
+    def __init__(self, title, y_label, points):
+        self.title = title
+        self.y_label = y_label
+        self.points = points
+
+    def svg(self, ox, oy):
+        parts = [f'<g transform="translate({ox},{oy})">']
+        iw = PANEL_W - MARGIN["l"] - MARGIN["r"]
+        ih = PANEL_H - MARGIN["t"] - MARGIN["b"]
+        parts.append(
+            f'<text x="0" y="14" fill="{INK}" font-size="13" '
+            f'font-weight="600">{esc(self.title)}</text>')
+        if not self.points:
+            parts.append(
+                f'<text x="{MARGIN["l"]}" y="{MARGIN["t"] + 20}" '
+                f'fill="{INK_MUTED}" font-size="11">no rows in '
+                'BENCH_serving.json — run benchmarks/run.py</text></g>')
+            return "\n".join(parts)
+        ms = lambda v: v * 1e3
+        totals = [sum(ms(v) for v in phases.values())
+                  for _, phases in self.points]
+        y1 = max(totals) * 1.08 or 1.0
+        sy = lambda v: MARGIN["t"] + ih - v / y1 * ih
+
+        for tv in nice_ticks(0.0, y1):
+            y = sy(tv)
+            parts.append(f'<line x1="{MARGIN["l"]}" y1="{y:.1f}" '
+                         f'x2="{MARGIN["l"] + iw}" y2="{y:.1f}" '
+                         f'stroke="{GRIDLINE}" stroke-width="1"/>')
+            parts.append(f'<text x="{MARGIN["l"] - 6}" y="{y + 3:.1f}" '
+                         f'fill="{INK_2}" font-size="9" '
+                         f'text-anchor="end">{fmt(tv)}</text>')
+        parts.append(f'<text x="12" y="{MARGIN["t"] + ih / 2}" '
+                     f'fill="{INK_2}" font-size="10" text-anchor="middle" '
+                     f'transform="rotate(-90 12 {MARGIN["t"] + ih / 2})">'
+                     f'{esc(self.y_label)}</text>')
+
+        # legend: phase order is stack order (bottom-up)
+        lx = MARGIN["l"]
+        for ph in PHASES:
+            parts.append(f'<rect x="{lx}" y="22" width="8" height="8" '
+                         f'fill="{PHASE_COLORS[ph]}"/>')
+            parts.append(f'<text x="{lx + 12}" y="29" fill="{INK_2}" '
+                         f'font-size="9">{esc(ph)}</text>')
+            lx += 18 + 5.2 * len(ph)
+
+        slot = iw / len(self.points)
+        bw = slot * 0.55
+        for i, (family, phases) in enumerate(self.points):
+            bx = MARGIN["l"] + i * slot + (slot - bw) / 2
+            y = MARGIN["t"] + ih
+            for ph in PHASES:
+                h = ms(phases.get(ph) or 0.0) / y1 * ih
+                if h <= 0:
+                    continue
+                y -= h
+                parts.append(f'<rect x="{bx:.1f}" y="{y:.1f}" '
+                             f'width="{bw:.1f}" height="{h:.1f}" '
+                             f'fill="{PHASE_COLORS[ph]}" '
+                             f'stroke="{SURFACE}" stroke-width="1"/>')
+            parts.append(f'<text x="{bx + bw / 2:.1f}" y="{y - 5:.1f}" '
+                         f'fill="{INK_MUTED}" font-size="8" '
+                         f'text-anchor="middle">{fmt(totals[i])}m</text>')
+            parts.append(f'<text x="{bx + bw / 2:.1f}" '
+                         f'y="{MARGIN["t"] + ih + 14}" fill="{INK_2}" '
+                         f'font-size="9" text-anchor="middle">'
+                         f'{esc(family)}</text>')
+        parts.append("</g>")
+        return "\n".join(parts)
+
+
 def build_panels(doc):
     fleet = [(r.get("p95_latency_s"), r.get("j_per_token"),
               r.get("router", "?"), r.get("policy", ""))
@@ -212,6 +298,14 @@ def build_panels(doc):
               r.get("tactic", "?"), r.get("router", ""))
              for r in doc.get("chaos_grid") or []
              if isinstance(r, dict) and r.get("kind") != "headline"]
+    phases = [(r.get("family", "?"),
+               {ph: r.get(f"interactive_{ph}_mean_s")
+                for ph in PHASES
+                if isinstance(r.get(f"interactive_{ph}_mean_s"),
+                              (int, float))})
+              for r in doc.get("telemetry_grid") or []
+              if isinstance(r, dict)]
+    phases = [(f, d) for f, d in phases if d]
     return [
         Panel("Fleet: policy x router", "p95 latency (s)", "J / token",
               fleet),
@@ -223,6 +317,8 @@ def build_panels(doc):
               "interactive p95 TTFT (s)", "J / token", disagg),
         Panel("Resilience: recovery tactic x router",
               "total gCO2e (g)", "availability", chaos),
+        StackPanel("Phases: interactive time breakdown per family",
+                   "mean time per request (ms)", phases),
     ]
 
 
@@ -264,7 +360,7 @@ def main(argv=None) -> int:
     with open(ns.out, "w") as f:
         f.write(svg)
     n_pts = sum(len(p.points) for p in build_panels(doc))
-    print(f"# wrote {ns.out} ({n_pts} cells across 5 grids)",
+    print(f"# wrote {ns.out} ({n_pts} cells across 6 grids)",
           file=sys.stderr)
     return 0
 

@@ -10,6 +10,13 @@ Usage:
     PYTHONPATH=src:. python scripts/profile_sim.py
     PYTHONPATH=src:. python scripts/profile_sim.py --n 20000 --top 30 \
         --out /tmp/sim.prof
+    PYTHONPATH=src:. python scripts/profile_sim.py --trace
+
+``--trace`` flips ``ServingSpec.telemetry.enabled`` on the same canonical
+cell and writes a Perfetto ``trace_event`` JSON next to the ``.prof`` (same
+stem, ``.trace.json`` suffix) — the virtual-time complement to the host-time
+profile: cProfile says where the *simulator host* burns wall seconds, the
+trace says where the *simulated fleet* burns virtual seconds and joules.
 
 Calibration (real jax execution) happens OUTSIDE the profiled region — the
 profile shows where the *simulator* spends its time, not XLA compile time.
@@ -32,6 +39,9 @@ def main(argv=None) -> None:
                     help="rows of the cumulative-time report")
     ap.add_argument("--out", default="profile_sim.prof",
                     help="where to write the .prof artifact")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable spec telemetry and write a Perfetto trace "
+                         "JSON next to the .prof")
     ns = ap.parse_args(argv)
 
     import jax
@@ -39,7 +49,7 @@ def main(argv=None) -> None:
     from benchmarks import bench_simperf
     from repro.configs import get_arch
     from repro.models import init_params
-    from repro.serving.api import ServingSession
+    from repro.serving.api import ServingSession, with_override
 
     cfg = get_arch(bench_simperf.ARCH)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -49,12 +59,15 @@ def main(argv=None) -> None:
           file=sys.stderr)
     cache = bench_simperf._calibrate(session)
 
-    payload = (bench_simperf._base_spec(ns.n, 250.0).to_json(),
-               cache.to_payload(), {"cell": "profiled"})
-    print(f"# profiling a {ns.n}-request canonical run...", file=sys.stderr)
+    spec = bench_simperf._base_spec(ns.n, 250.0)
+    if ns.trace:
+        spec = with_override(spec, "telemetry.enabled", True).validate()
+    payload = (spec.to_json(), cache.to_payload(), {"cell": "profiled"})
+    print(f"# profiling a {ns.n}-request canonical run"
+          f"{' (traced)' if ns.trace else ''}...", file=sys.stderr)
     prof = cProfile.Profile()
     prof.enable()
-    row, _meter = bench_simperf._run_cell(payload)
+    row, _meter, report = bench_simperf._run_cell(payload, keep_report=True)
     prof.disable()
     prof.dump_stats(ns.out)
 
@@ -63,6 +76,21 @@ def main(argv=None) -> None:
     print(f"# {row['n_requests']} requests in {row['host_s']:.2f}s host "
           f"({row['sim_requests_per_wall_s']:.0f} req/s); "
           f"artifact: {ns.out}", file=sys.stderr)
+
+    if ns.trace:
+        from repro.serving.telemetry import (to_perfetto, validate_trace,
+                                             write_trace)
+        rec = report.telemetry
+        trace_out = (ns.out.rsplit(".", 1)[0] if "." in ns.out
+                     else ns.out) + ".trace.json"
+        write_trace(trace_out, rec)
+        errors = validate_trace(to_perfetto(rec))
+        print(f"# trace: {len(rec.events)} events "
+              f"(dropped={rec.dropped}), schema "
+              f"{'OK' if not errors else f'BROKEN: {errors[0]}'}; "
+              f"artifact: {trace_out}", file=sys.stderr)
+        if errors:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

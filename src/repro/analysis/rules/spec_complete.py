@@ -44,6 +44,7 @@ _SPEC_MODULES = {
     "workload/generators.py": ("WorkloadSpec",),
     "serving/regions/spec.py": ("RegionSpec",),
     "serving/chaos/spec.py": ("ChaosSpec", "ChaosEvent", "RetrySpec"),
+    "serving/telemetry/spec.py": ("TelemetrySpec",),
 }
 
 _SPEC_CLASSES = {c for classes in _SPEC_MODULES.values() for c in classes}

@@ -107,6 +107,17 @@ def absorb_part(meter: "EnergyMeter", m,
 
 @dataclasses.dataclass
 class EnergyMeter:
+    # Telemetry observer (a per-replica sink installed by the fleet when
+    # `ServingSpec.telemetry.enabled`): every record_* call notifies it with
+    # the exact joule/gram deltas it just billed, so span-attributed energy
+    # reconciles with the buckets *by construction*.  Deliberately a plain
+    # CLASS attribute, not a dataclass field — `asdict`, `merge` provenance
+    # and the sanitizer's tamper snapshot never see it, so observing a meter
+    # cannot perturb the accounting contract.  `merge` never notifies:
+    # aggregate meters stay untraced (their content was already observed on
+    # the contributing replicas).
+    tracer = None
+
     active_power_w: float = HOST_CPU_POWER_W
     idle_power_w: float = HOST_CPU_IDLE_POWER_W
     # grid carbon-intensity signal for gram billing; None = constant IEA
@@ -178,6 +189,9 @@ class EnergyMeter:
                     self.per_request_j.get(rid, 0.0) + share
                 self.per_request_g[rid] = \
                     self.per_request_g.get(rid, 0.0) + share_g
+        if self.tracer is not None:
+            self.tracer.on_energy("active", t_s, dur_s, j, g,
+                                  rids=rids, tokens=tokens)
         return j
 
     def record_active_shared(self, start_s: float,
@@ -210,6 +224,7 @@ class EnergyMeter:
                           if self.active_power_w > 0 else dur)
         self.total_tokens += tokens
         t = start_s
+        win_g = 0.0
         for e in sorted(set(done_by_rid.values())):
             seg = e - t
             if seg <= 0:
@@ -218,6 +233,7 @@ class EnergyMeter:
             seg_j = seg * pw
             seg_g = self.signal.grams(seg_j, t, e)
             self.active_g += seg_g
+            win_g += seg_g
             share = seg_j / max(len(resident), 1)
             share_g = seg_g / max(len(resident), 1)
             for rid in resident:
@@ -229,14 +245,21 @@ class EnergyMeter:
         for rid in done_by_rid:              # zero-duration requests: J = 0
             self.per_request_j.setdefault(rid, 0.0)
             self.per_request_g.setdefault(rid, 0.0)
+        if self.tracer is not None:
+            self.tracer.on_energy("active", start_s, dur, dur * pw, win_g,
+                                  rids=list(done_by_rid), tokens=tokens)
         return dur * pw
 
     def record_idle(self, dur_s: float, t_s: Optional[float] = None) -> float:
         if dur_s <= 0:
             return 0.0
+        j = dur_s * self.idle_power_w
+        g = self._grams(j, t_s, dur_s)
         self.idle_s += dur_s
-        self.idle_g += self._grams(dur_s * self.idle_power_w, t_s, dur_s)
-        return dur_s * self.idle_power_w
+        self.idle_g += g
+        if self.tracer is not None:
+            self.tracer.on_energy("idle", t_s, dur_s, j, g)
+        return j
 
     def record_preempt(self, dur_s: float,
                        t_s: Optional[float] = None) -> float:
@@ -246,9 +269,12 @@ class EnergyMeter:
         if dur_s <= 0:
             return 0.0
         j = dur_s * self.active_power_w
+        g = self._grams(j, t_s, dur_s)
         self.preempt_s += dur_s
         self.preempt_j += j
-        self.preempt_g += self._grams(j, t_s, dur_s)
+        self.preempt_g += g
+        if self.tracer is not None:
+            self.tracer.on_energy("preempt", t_s, dur_s, j, g)
         return j
 
     def record_xfer(self, dur_s: float, power_w: float,
@@ -260,9 +286,12 @@ class EnergyMeter:
         if dur_s <= 0:
             return 0.0
         j = dur_s * power_w
+        g = self._grams(j, t_s, dur_s)
         self.xfer_s += dur_s
         self.xfer_j += j
-        self.xfer_g += self._grams(j, t_s, dur_s)
+        self.xfer_g += g
+        if self.tracer is not None:
+            self.tracer.on_energy("xfer", t_s, dur_s, j, g)
         return j
 
     def mark_lost(self, rids: Iterable[int],
@@ -276,8 +305,10 @@ class EnergyMeter:
         equivalent active seconds move to ``lost_s`` so busy time stays
         decomposable.  Unknown rids are ignored (nothing was billed to
         them here).  Returns the joules moved."""
-        del t_s  # the reclassification is instant-free: grams move verbatim
+        # the reclassification is instant-free (grams move verbatim); t_s
+        # only timestamps the crash-loss marker on the trace
         moved = 0.0
+        victims = [] if self.tracer is not None else None
         for rid in rids:
             j = self.per_request_j.pop(rid, 0.0)
             g = self.per_request_g.pop(rid, 0.0)
@@ -290,6 +321,10 @@ class EnergyMeter:
             self.lost_j += j
             self.lost_g += g
             moved += j
+            if victims is not None:
+                victims.append((rid, j, g))
+        if victims:
+            self.tracer.on_lost(t_s, victims)
         return moved
 
     def merge(self, other: "EnergyMeter",

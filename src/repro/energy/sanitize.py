@@ -143,6 +143,27 @@ class SanitizedEnergyMeter(EnergyMeter):
                 f"per-request grams {sum(self.per_request_g.values())} + "
                 f"unattributed {self._unattr_g} != active_g "
                 f"{self.active_g}")
+        # span/meter reconciliation (PR 9): when a telemetry sink observes
+        # this meter, its span-attributed bucket sums must track the meter's
+        # buckets exactly — joules AND grams — after every event
+        tr = self.tracer
+        if tr is not None and getattr(tr, "bucket_j", None) is not None:
+            for bucket, want_j, want_g in (
+                    ("active", self.active_j, self.active_g),
+                    ("idle", self.idle_j, self.idle_g),
+                    ("preempt", self.preempt_j, self.preempt_g),
+                    ("xfer", self.xfer_j, self.xfer_g),
+                    ("lost", self.lost_j, self.lost_g)):
+                got_j = tr.bucket_j.get(bucket, 0.0)
+                got_g = tr.bucket_g.get(bucket, 0.0)
+                if not _close(got_j, want_j):
+                    self._fail(event,
+                               f"span-attributed {bucket} joules {got_j} "
+                               f"!= meter bucket {want_j}")
+                if not _close(got_g, want_g):
+                    self._fail(event,
+                               f"span-attributed {bucket} grams {got_g} "
+                               f"!= meter bucket {want_g}")
 
     def _seal(self, event: str) -> None:
         self._global_invariants(event)

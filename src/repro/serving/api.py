@@ -114,6 +114,11 @@ from repro.serving.scheduler import (
     make_policy,
 )
 from repro.serving.stepcache import StepTimeCache, calibrate, shape_bucket
+from repro.serving.telemetry import (
+    TelemetrySpec,
+    TraceRecorder,
+    phase_breakdown,
+)
 from repro.workload.calendar import TrafficCalendar
 from repro.workload.generators import WorkloadSpec
 
@@ -437,6 +442,11 @@ class ServingSpec:
     # reproduces the pre-chaos timeline byte for byte
     chaos: ChaosSpec = ChaosSpec()
     retry: RetrySpec = RetrySpec()
+    # observability (PR 9): the virtual-clock trace/metrics recorder.  A
+    # pure observer — enabling it changes no joule, gram or latency (the
+    # bit-identity tests sweep exactly this switch); disabled (the
+    # default) costs one attribute check per billing event
+    telemetry: TelemetrySpec = TelemetrySpec()
 
     def __post_init__(self):
         if not isinstance(self.endpoints, tuple):
@@ -487,6 +497,7 @@ class ServingSpec:
             _check_sub(rs, f"regions[{rname}]")
         _check_sub(self.chaos, "chaos")
         _check_sub(self.retry, "retry")
+        _check_sub(self.telemetry, "telemetry")
         places = set(self.regions) | set(self.carbon_zones)
         for i, ev in enumerate(self.chaos.events):
             if ev.kind == "outage" or (ev.kind == "brownout" and ev.target):
@@ -571,6 +582,9 @@ class ServingSpec:
             top["chaos"] = _construct(ChaosSpec, ch, "chaos")
         if top.get("retry") is not None:
             top["retry"] = _construct(RetrySpec, top["retry"], "retry")
+        if top.get("telemetry") is not None:
+            top["telemetry"] = _construct(TelemetrySpec, top["telemetry"],
+                                          "telemetry")
         return _construct(cls, top, "spec")
 
     @classmethod
@@ -748,6 +762,11 @@ class EndpointReport:
         default_factory=dict)
     drops_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
     shed_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # observability (PR 9): per-SLO-class time decomposition of every
+    # delivered request — {class: {phase: {n, mean_s, p50_s, p95_s}}} over
+    # queue_wait/prefill/xfer/decode/preempted.  {} when telemetry is off
+    phase_breakdown: Dict[str, Dict[str, Dict[str, float]]] = \
+        dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         # field-by-field, NOT dataclasses.asdict: asdict would deep-copy
@@ -765,6 +784,10 @@ class ServingReport:
     endpoints: Dict[str, EndpointReport]
     fleet: EndpointReport
     result: FleetResult                # the raw fleet result (adapters)
+    # the trace recorder when spec.telemetry.enabled (feed it to
+    # repro.serving.telemetry.write_trace for a Perfetto-loadable JSON);
+    # None for untraced runs.  Not serialized.
+    telemetry: Optional[TraceRecorder] = None
 
     def to_dict(self) -> dict:
         return {
@@ -1159,6 +1182,10 @@ class ServingSession:
         for name in self._workloads:
             self._slo_floor_check(name)
         injected = bool(self.spec.chaos.events)
+        ts = self.spec.telemetry
+        recorder = (TraceRecorder(spans=ts.spans, metrics=ts.metrics,
+                                  max_events=ts.max_events)
+                    if ts.enabled else None)
         fleet = ReplicaFleet(
             router=self.spec.router,
             autoscaler=self._autoscaler(),
@@ -1175,12 +1202,30 @@ class ServingSession:
                    if injected else None),
             retry=(RetryRuntime.from_spec(self.spec.retry)
                    if injected else None),
+            telemetry=recorder,
         )
         for name, wl in self._workloads.items():
             fleet.add_endpoint(
                 self._fleet_endpoint(self._endpoints[name]["spec"], wl))
         workloads, self._workloads = self._workloads, {}
         result = fleet.run(workloads)
+
+        xfer_by_rid: Dict[int, float] = {}
+        if recorder is not None:
+            # exact per-request energy/carbon from the merged fleet meter
+            # (resident-weighted shares — never re-derived by the recorder)
+            fm0 = result.fleet
+            if fm0.meter is not None:
+                recorder.attach_request_energy(dict(fm0.meter.per_request_j),
+                                               dict(fm0.meter.per_request_g))
+            # per-request transfer time: KV handoffs (disagg) plus
+            # inter-region request/response transit legs
+            for ev in fleet.handoff_events:
+                xfer_by_rid[ev["rid"]] = (xfer_by_rid.get(ev["rid"], 0.0)
+                                          + ev["xfer_s"])
+            for ev in fleet.transit_events:
+                xfer_by_rid[ev["rid"]] = (xfer_by_rid.get(ev["rid"], 0.0)
+                                          + ev["xfer_s"])
 
         reports: Dict[str, EndpointReport] = {}
         fleet_overhead_j = 0.0
@@ -1189,6 +1234,12 @@ class ServingSession:
             ep: EndpointSpec = self._endpoints[name]["spec"]
             mult = td1.overhead(Containerization(ep.container)).energy_overhead
             rep = _endpoint_report(name, ep.decisions(), m, mult)
+            if recorder is not None:
+                # phase decomposition over the FINAL responses (post
+                # transit shift, post disagg stitch), so the table agrees
+                # with the latencies the report quotes
+                rep.phase_breakdown = phase_breakdown(
+                    m.responses, recorder.preempt_by_rid, xfer_by_rid)
             reports[name] = rep
             fleet_overhead_j += rep.j_container_overhead
             fleet_overhead_g += rep.gco2_container_overhead
@@ -1212,8 +1263,12 @@ class ServingSession:
             fleet_rep.n_requests, 1)
         fleet_rep.gco2_per_token = fleet_rep.gco2_billed / max(
             fleet_rep.total_tokens, 1)
+        if recorder is not None:
+            fleet_rep.phase_breakdown = phase_breakdown(
+                fm.responses, recorder.preempt_by_rid, xfer_by_rid)
         return ServingReport(spec=self.spec, endpoints=reports,
-                             fleet=fleet_rep, result=result)
+                             fleet=fleet_rep, result=result,
+                             telemetry=recorder)
 
     # -- one-shot convenience --------------------------------------------------
     def serve(self, workloads: Mapping[str, List[Request]]) -> ServingReport:

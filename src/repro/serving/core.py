@@ -111,6 +111,12 @@ class SchedulerCore:
         # longer steps — a first-order DVFS model).  Empty = never capped,
         # which is byte-identical to the pre-chaos core
         self.power_caps: List[Tuple[float, float, float]] = []
+        # telemetry sink (a TraceRecorder._ReplicaSink) installed by the
+        # fleet between core construction and Replica bring-up; None = no
+        # tracing.  _reset re-binds it to each fresh meter so every billing
+        # event of every meter lifetime is observed.  Pure observer: a
+        # traced run is bit-identical to an untraced one.
+        self.tracer = None
         self._reset([])
 
     def _reset(self, workload: List[Request]) -> None:
@@ -128,6 +134,9 @@ class SchedulerCore:
         self.meter = new_meter(active_power_w=self.active_power_w,
                                idle_power_w=self.idle_power_w,
                                carbon=self.carbon)
+        if self.tracer is not None:
+            self.tracer.reset()
+            self.meter.tracer = self.tracer
 
     # -- arrival queue --------------------------------------------------------
     @property
@@ -320,7 +329,11 @@ class SchedulerCore:
             done_c[req.rid] = c
             done = to_wall(c) if intr else float(done_w[bi])
             done_by_rid[req.rid] = done
-            self.record_response(req, toks, start_s, first_s, done)
+            # the pause time that pushed THIS request late (zero when the
+            # dispatch ran uninterrupted): done == start + c + its gaps
+            self.record_response(req, toks, start_s, first_s, done,
+                                 preempted_s=(done - start_s - c) if intr
+                                 else 0.0)
             n_tokens += n
         if intr:
             self._bill_preempted(start_s, done_c, intr, n_tokens,
@@ -360,6 +373,10 @@ class SchedulerCore:
                 pause_c = consumed + (pre.arrival_s - resume_w)
             pause_c = min(max(pause_c, prefill_s), total)
             pause_w = resume_w + max(pause_c - consumed, 0.0)
+            if self.tracer is not None:
+                self.tracer.instant("preempt_pause", pause_w,
+                                    {"preemptor": pre.rid,
+                                     "paused": [r.rid for r in batch]})
             self.meter.record_preempt(adm.pause_s, t_s=pause_w)
             sub_start = pause_w + adm.pause_s
             # one pause absorbs the whole urgent backlog: every other
@@ -385,6 +402,9 @@ class SchedulerCore:
             intr.append((pause_c, dur))
             resume_w = pause_w + dur
             consumed = pause_c
+            if self.tracer is not None:
+                self.tracer.instant("preempt_resume", resume_w,
+                                    {"preemptor": pre.rid})
         return intr
 
     def _bill_preempted(self, start_s: float, done_c: Dict[int, float],
@@ -490,14 +510,16 @@ class SchedulerCore:
         self.clock = end
 
     def record_response(self, req: Request, tokens, start_s: float,
-                        first_s: float, done_s: float) -> None:
-        self.responses.append(
-            Response(rid=req.rid, tokens=np.asarray(tokens, np.int32),
-                     arrival_s=req.arrival_s, start_s=start_s,
-                     first_token_s=first_s, done_s=done_s,
-                     deadline_s=req.deadline_s, priority=req.priority)
-        )
+                        first_s: float, done_s: float,
+                        preempted_s: float = 0.0) -> None:
+        resp = Response(rid=req.rid, tokens=np.asarray(tokens, np.int32),
+                        arrival_s=req.arrival_s, start_s=start_s,
+                        first_token_s=first_s, done_s=done_s,
+                        deadline_s=req.deadline_s, priority=req.priority)
+        self.responses.append(resp)
         self.total_tokens += len(tokens)
+        if self.tracer is not None:
+            self.tracer.on_response(resp, preempted_s)
 
     # -- the event loop -------------------------------------------------------
     def begin(self) -> None:

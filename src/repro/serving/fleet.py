@@ -422,8 +422,13 @@ class ReplicaFleet:
                  deferral: Optional[DeferralSpec] = None,
                  regions: Optional[RegionTopology] = None,
                  chaos: Optional[ChaosRuntime] = None,
-                 retry: Optional[RetryRuntime] = None):
+                 retry: Optional[RetryRuntime] = None,
+                 telemetry=None):
         self.router = make_router(router)
+        # trace recorder (PR 9): a pure observer — replica sinks are
+        # installed on every core at spawn, fleet-level instants and gauges
+        # are emitted below.  None = untraced (the default fast path).
+        self.telemetry = telemetry
         self.autoscaler = autoscaler
         # "" is the default zone: the fleet-wide grid signal
         self.carbon = carbon if carbon is not None else ConstantSignal()
@@ -524,7 +529,12 @@ class ReplicaFleet:
             # brownout windows are static spec data: install the zone's
             # power-cap schedule once, at provisioning time
             core.power_caps = self.chaos.caps_for(zone)
-        rep = Replica(f"{spec.name}/{prefix}{i}", spec.name, core, created_s,
+        name = f"{spec.name}/{prefix}{i}"
+        if self.telemetry is not None:
+            # must land before Replica(): its __init__ calls core.begin(),
+            # and the provisioning idle billed there has to be observed
+            core.tracer = self.telemetry.sink_for(spec.name, name)
+        rep = Replica(name, spec.name, core, created_s,
                       ready_s, zone=zone, role=role)
         if rep.cold_start:
             self.cold_starts += 1
@@ -677,6 +687,19 @@ class ReplicaFleet:
                 self.transit_events.append({
                     "rid": req.rid, "endpoint": name, "leg": "request",
                     "from": req.origin, "to": rep.zone, "xfer_s": xfer_s})
+                if self.telemetry is not None:
+                    self.telemetry.instant(
+                        "transit", t,
+                        {"rid": req.rid, "leg": "request",
+                         "from": req.origin, "to": rep.zone,
+                         "xfer_s": xfer_s}, sink=rep.core.tracer)
+        if (self.telemetry is not None and req.retries > 0
+                and req.phase != "decode"):
+            self.telemetry.instant(
+                "failover" if (req.origin and rep.zone != req.origin)
+                else "retry_route", req.arrival_s,
+                {"rid": req.rid, "attempt": req.retries, "to": rep.name},
+                sink=rep.core.tracer)
         rep.offered += 1
         rep.core.offer(req)
         self._req_by_rid[req.rid] = (name, req)
@@ -708,6 +731,11 @@ class ReplicaFleet:
                 xfer_s = d.transfer_s(kv)
                 rep.core.meter.record_xfer(xfer_s, d.power_w,
                                            t_s=resp.done_s)
+                if self.telemetry is not None:
+                    self.telemetry.instant(
+                        "kv_handoff", resp.done_s,
+                        {"rid": req.rid, "kv_bytes": kv, "xfer_s": xfer_s},
+                        sink=rep.core.tracer)
                 ready = resp.done_s + xfer_s
                 leg = dataclasses.replace(req, arrival_s=ready,
                                           phase="decode", kv_bytes=kv)
@@ -760,6 +788,10 @@ class ReplicaFleet:
         t = req.arrival_s
         if self._shed_now(req, t):
             self._bump(self._shed, name, req)
+            if self.telemetry is not None:
+                self.telemetry.instant("shed", t, {
+                    "rid": req.rid, "endpoint": name,
+                    "class": req.priority or DEFAULT_PRIORITY})
             return False
         if not self._placeable(name, req, t):
             self._retry_or_drop(name, req, t)
@@ -777,8 +809,16 @@ class ReplicaFleet:
             leg = dataclasses.replace(req, retries=attempt, arrival_s=ready)
             heapq.heappush(self._retry_q, (ready, req.rid, name, leg))
             self._retry_minted[name] = self._retry_minted.get(name, 0) + 1
+            if self.telemetry is not None:
+                self.telemetry.instant("retry", t_fail, {
+                    "rid": req.rid, "endpoint": name,
+                    "attempt": attempt, "ready_s": ready})
         else:
             self._bump(self._drops, name, req)
+            if self.telemetry is not None:
+                self.telemetry.instant("drop", t_fail, {
+                    "rid": req.rid, "endpoint": name,
+                    "attempts": req.retries})
 
     def _release_retries(self, before_s: float) -> int:
         """Re-admit every retry/re-route leg due before ``before_s``."""
@@ -846,6 +886,13 @@ class ReplicaFleet:
         queued = core.pending.drain_all()
         rep.draining = False
         rep.stopped_s = max(core.clock, t_c, rep.ready_s)
+        if self.telemetry is not None:
+            # the crash_loss instant (per-rid joules moved to ``lost``) was
+            # already emitted by the meter hook inside mark_lost above
+            self.telemetry.instant("crash", t_c, {
+                "target": rep.name, "endpoint": rep.endpoint,
+                "lost": len(lost), "lost_j": lost_j,
+                "requeued": len(queued)}, sink=core.tracer)
         for resp in lost:
             ent = self._req_by_rid.get(resp.rid)
             if ent is not None:
@@ -1028,8 +1075,31 @@ class ReplicaFleet:
                 counts[r.endpoint] += 1
         return counts
 
+    def _sample_gauges(self, t_end: float) -> None:
+        """Metrics timelines (PR 9): sample pool/backlog/carbon gauges at
+        every window boundary — the same cadence the autoscaler observes —
+        onto the trace's counter tracks.  Pure read-only observation."""
+        if self.telemetry is None or self.telemetry.metrics is None:
+            return
+        reg = self.telemetry.metrics
+        for name in self.specs:
+            live = [r for r in self.endpoint_replicas(name)
+                    if r.stopped_s is None and not r.draining]
+            reg.sample(f"{name}/pool", t_end, len(live))
+            reg.sample(f"{name}/backlog", t_end,
+                       sum(r.backlog for r in live))
+            for r in live:
+                reg.sample("backlog", t_end, r.backlog, sink=r.core.tracer)
+        for zone in sorted(self.carbon_zones):
+            reg.sample(f"zone/{zone}/gco2_per_kwh", t_end,
+                       self.zone_intensity(zone, t_end))
+        if not self.carbon_zones:
+            reg.sample("grid/gco2_per_kwh", t_end,
+                       self.carbon.intensity(t_end))
+
     def _observe_and_scale(self, t_end: float, window_arrivals: Dict[str, int],
                            window_s: float, more_events: bool) -> None:
+        self._sample_gauges(t_end)
         if self.autoscaler is None:
             return
         # carbon-biased scale-down: compare the default grid's intensity at
@@ -1144,12 +1214,28 @@ class ReplicaFleet:
                     "rid": resp.rid, "endpoint": rep.endpoint,
                     "leg": "response", "from": rep.zone, "to": origin,
                     "xfer_s": xfer_s})
+                if self.telemetry is not None:
+                    self.telemetry.instant(
+                        "transit", resp.done_s,
+                        {"rid": resp.rid, "leg": "response",
+                         "from": rep.zone, "to": origin, "xfer_s": xfer_s},
+                        sink=rep.core.tracer)
             if changed:
                 rep.core.responses[:] = out
 
     def _finalize(self) -> FleetResult:
         if self.regions is not None:
             self._bill_response_transit()
+        if self.telemetry is not None and self.shifter is not None:
+            # deferral holds become async spans on the fleet track: the
+            # [deferral hold] segment between arrival and admission
+            for ev in self.shifter.events:
+                self.telemetry.hold(ev["rid"], ev["arrival_s"],
+                                    ev["release_s"], {
+                    "endpoint": ev["endpoint"],
+                    "held_s": ev["held_s"],
+                    "gco2_per_kwh_at_arrival": ev["intensity_at_arrival"],
+                    "gco2_per_kwh_at_release": ev["intensity_at_release"]})
         # the shared timeline ends when the last provisioned replica goes
         # quiet; every still-provisioned replica pays idle draw up to there
         live_ends = [r.core.clock for r in self.replicas

@@ -51,6 +51,12 @@ def _doc():
         "sim_throughput": {
             "canonical": {"sim_requests_per_wall_s": 15000.0},
         },
+        "telemetry_grid": [
+            {"family": "steady", "interactive_queue_wait_p95_s": 0.015,
+             "observer_pure": True},
+            {"family": "flash_crowd", "interactive_queue_wait_p95_s": 0.040,
+             "observer_pure": True},
+        ],
     }
 
 
@@ -242,6 +248,49 @@ def test_fresh_lost_sim_throughput_only_warns(tmp_path, capsys):
     quick --only runs legitimately skip the simperf bench."""
     doc = _doc()
     del doc["sim_throughput"]
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "::warning" in out and "::error" not in out
+
+
+def test_queue_wait_regression_warns_but_never_fails(tmp_path, capsys):
+    """Interactive-class queue-wait p95 from the telemetry phase rows:
+    growth beyond the threshold annotates the PR (title=queue-wait
+    regression) but must never gate the job."""
+    doc = _doc()
+    doc["telemetry_grid"][0]["interactive_queue_wait_p95_s"] = 0.030  # +100%
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "queue-wait regression" in out and "::error" not in out
+
+
+def test_queue_wait_within_budget_is_ok(tmp_path, capsys):
+    doc = _doc()
+    doc["telemetry_grid"][0]["interactive_queue_wait_p95_s"] = 0.016  # +7%
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    assert "queue-wait regression" not in capsys.readouterr().out
+
+
+def test_queue_wait_best_cell_is_the_comparison_point(tmp_path, capsys):
+    """The metric is the best (minimum) row across families — the weaker
+    flash_crowd cell must not become the comparison point."""
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", _doc())
+    assert _run(base, fresh) == 0
+    assert "baseline=0.015000s fresh=0.015000s" in capsys.readouterr().out
+
+
+def test_fresh_lost_telemetry_grid_only_warns(tmp_path, capsys):
+    """Like sim_throughput, losing the telemetry grid is warn-only: quick
+    --only runs legitimately skip the telemetry bench."""
+    doc = _doc()
+    del doc["telemetry_grid"]
     base = _write(tmp_path, "base.json", _doc())
     fresh = _write(tmp_path, "fresh.json", doc)
     assert _run(base, fresh) == 0

@@ -25,6 +25,7 @@ from repro.serving.api import (AutoscaleSpec, EndpointSpec, ServingSpec,
                                SLOClass, SpecError, sweep, with_override)
 from repro.serving.chaos import ChaosEvent, ChaosSpec, RetrySpec
 from repro.serving.regions import RegionSpec
+from repro.serving.telemetry import TelemetrySpec
 from repro.workload.generators import WorkloadSpec
 
 ARCH = "minitron-4b-smoke"
@@ -71,6 +72,7 @@ def baseline_spec() -> ServingSpec:
             ChaosEvent(kind="outage", t_s=2.0, target="apac",
                        duration_s=1.0)), seed=5),
         retry=RetrySpec(max_retries=1, backoff_s=0.02),
+        telemetry=TelemetrySpec(enabled=True, max_events=100_000),
     ).validate()
 
 
@@ -101,6 +103,8 @@ ALTERNATES = {
                                                power_cap_frac=0.5),),
                             seed=9)),
         "retry": ("retry", RetrySpec(max_retries=5, failover=False)),
+        "telemetry": ("telemetry", TelemetrySpec(enabled=False,
+                                                 max_events=500)),
     },
     EndpointSpec: {
         "name": ("endpoints.chat.name", "chat2"),
@@ -232,6 +236,12 @@ ALTERNATES = {
         "failover": ("retry.failover", False),
         "degrade": ("retry.degrade", False),
     },
+    TelemetrySpec: {
+        "enabled": ("telemetry.enabled", False),
+        "spans": ("telemetry.spans", False),
+        "metrics": ("telemetry.metrics", False),
+        "max_events": ("telemetry.max_events", 1_000),
+    },
 }
 
 # where each spec class lives inside the roundtripped ServingSpec
@@ -249,6 +259,7 @@ _GETTERS = {
     ChaosSpec: lambda s: s.chaos,
     ChaosEvent: lambda s: s.chaos.events[0],
     RetrySpec: lambda s: s.retry,
+    TelemetrySpec: lambda s: s.telemetry,
 }
 
 _PATH_CASES = [(cls, field) for cls, table in ALTERNATES.items()

@@ -1,0 +1,311 @@
+"""Observability subsystem contract tests (PR 9).
+
+Pins the two invariants the telemetry layer is built on, plus the export
+format:
+
+  * **observer purity** — a traced run is bit-identical in joules, grams
+    and latencies to an untraced one, across policy x router, including
+    disaggregated pools and chaos-injected failure scripts (tracing must
+    never steer the simulation);
+  * **span/meter reconciliation** — the joules AND grams the replica sinks
+    attribute to spans decompose the meters' ``active + idle + preempt +
+    xfer + lost`` buckets exactly, and the ``REPRO_SANITIZE=1`` auditing
+    meter re-checks that equality after every billing event;
+  * **Perfetto export** — the emitted Chrome ``trace_event`` JSON is
+    schema-valid: integer pid/tid/ts, globally monotone ts, matched B/E
+    pairs per track, matched async b/e pairs, named tracks.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.engines import GenerationResult
+from repro.energy.sanitize import ConservationError, SanitizedEnergyMeter
+from repro.serving.admission.disagg import DisaggRuntime, DisaggSpec
+from repro.serving.admission.priority import AdmissionControl
+from repro.serving.chaos import (ChaosEvent, ChaosRuntime, ChaosSpec,
+                                 RetryRuntime, RetrySpec)
+from repro.serving.fleet import Autoscaler, EndpointSpec, ReplicaFleet
+from repro.serving.scheduler import (DecodePhasePolicy, DynamicBatchPolicy,
+                                     PrefillPhasePolicy, make_policy)
+from repro.serving.telemetry import (TelemetrySpec, TraceRecorder,
+                                     phase_breakdown, to_perfetto,
+                                     validate_trace, write_trace)
+from repro.workload.generators import bursty, poisson
+
+ROUTERS = ("round_robin", "least_loaded", "greenest")
+POLICIES = ("realtime", "dynamic_batch", "adaptive_batch")
+BUCKETS = ("active", "idle", "preempt", "xfer", "lost")
+
+
+class FakeEngine:
+    """Deterministic timings, no model — telemetry mechanics only."""
+
+    def __init__(self, prefill_s=0.01, step_s=0.005):
+        self.prefill_s = prefill_s
+        self.step_s = step_s
+        self.cfg = type("Cfg", (), {"vocab_size": 1000})()
+
+    def generate(self, tokens, max_new):
+        B = tokens.shape[0]
+        return GenerationResult(
+            tokens=np.ones((B, max_new), np.int32),
+            prefill_s=self.prefill_s,
+            decode_s=self.step_s * (max_new - 1),
+            n_steps=max_new,
+        )
+
+
+def _mixed_crowd(n=120):
+    chat = poisson(n // 2, 8, 4, 1000, rate_per_s=300.0, seed=7,
+                   priority="interactive", slo_ms=100.0)
+    bulk = bursty(n // 2, 8, 6, 1000, rate_per_s=60.0, burst_n=20,
+                  burst_every_s=0.5, burst_rate_per_s=800.0, seed=8,
+                  rid0=10_000, priority="batch")
+    return {"chat": chat, "bulk": bulk}
+
+
+def _grid_fleet(router, policy, telemetry=None):
+    adm = AdmissionControl(preempt=True, pause_s=0.001, resume_s=0.001)
+    fleet = ReplicaFleet(router=router,
+                         autoscaler=Autoscaler(window_s=0.25,
+                                               cold_start_s=0.05),
+                         telemetry=telemetry)
+    for name in ("chat", "bulk"):
+        fleet.add_endpoint(EndpointSpec(
+            name=name,
+            engine=FakeEngine(),
+            policy_factory=lambda policy=policy: make_policy(
+                policy, max_batch=8, timeout_ms=10.0),
+            min_replicas=1, max_replicas=3, initial_replicas=2,
+            admission=adm,
+        ))
+    return fleet
+
+
+def _disagg_fleet(telemetry=None):
+    rt = DisaggRuntime.from_spec(
+        DisaggSpec(enabled=True, prefill_replicas=2, decode_replicas=2,
+                   link_gbps=10.0, link_latency_ms=0.2, link_power_w=15.0,
+                   kv_bytes_per_token=50_000.0), cfg=None,
+        prefill_policy_factory=lambda: PrefillPhasePolicy(8, 5.0),
+        decode_policy_factory=lambda: DecodePhasePolicy(8, 5.0))
+    fleet = ReplicaFleet(router="round_robin", telemetry=telemetry)
+    fleet.add_endpoint(EndpointSpec(
+        name="llm", engine=FakeEngine(),
+        policy_factory=lambda: DynamicBatchPolicy(8, 5.0),
+        disagg=rt,
+    ))
+    return fleet
+
+
+def _chaos_fleet(telemetry=None):
+    fleet = ReplicaFleet(
+        router="least_loaded",
+        autoscaler=Autoscaler(window_s=0.25, cold_start_s=0.05),
+        chaos=ChaosRuntime.from_spec(ChaosSpec(
+            events=(ChaosEvent(kind="crash", t_s=1.0),
+                    ChaosEvent(kind="crash", t_s=2.0)), seed=11)),
+        retry=RetryRuntime.from_spec(RetrySpec(max_retries=3,
+                                               backoff_s=0.02)),
+        telemetry=telemetry)
+    fleet.add_endpoint(EndpointSpec(
+        name="chat", engine=FakeEngine(),
+        policy_factory=lambda: make_policy("dynamic_batch", max_batch=4,
+                                           timeout_ms=10.0),
+        min_replicas=2, max_replicas=4, initial_replicas=4,
+    ))
+    return fleet
+
+
+def _fingerprint(res):
+    m = res.fleet.meter
+    return (repr(m.total_j), repr(m.total_g),
+            repr(sorted((r.rid, r.first_token_s, r.done_s)
+                        for r in res.fleet.responses)))
+
+
+def _assert_reconciled(rec, meters):
+    """Span-attributed J and g decompose the meters' buckets exactly."""
+    bj, bg = rec.bucket_totals()
+    for k in BUCKETS:
+        want_j = sum(getattr(m, f"{k}_j") for m in meters)
+        want_g = sum(getattr(m, f"{k}_g") for m in meters)
+        assert bj.get(k, 0.0) == pytest.approx(want_j, rel=1e-9, abs=1e-9)
+        assert bg.get(k, 0.0) == pytest.approx(want_g, rel=1e-9, abs=1e-9)
+
+
+# -- spec validation -----------------------------------------------------------
+
+
+def test_telemetry_spec_problems():
+    assert not TelemetrySpec().problems()
+    assert not TelemetrySpec(enabled=True).problems()
+    assert TelemetrySpec(max_events=0).problems()
+    assert TelemetrySpec(enabled=True, spans=False, metrics=False).problems()
+    # disabled telemetry may leave both families off (nothing records)
+    assert not TelemetrySpec(spans=False, metrics=False).problems()
+
+
+def test_telemetry_spec_rides_serving_spec():
+    from repro.serving.api import ServingSpec, SpecError
+    from repro.serving.api import EndpointSpec as ApiEndpoint
+    ep = ApiEndpoint(name="m", arch="minitron-4b-smoke")
+    spec = ServingSpec(endpoints=(ep,),
+                       telemetry=TelemetrySpec(enabled=True, max_events=9))
+    spec.validate()
+    back = ServingSpec.from_json(spec.to_json())
+    assert back == spec and back.telemetry.max_events == 9
+    with pytest.raises(SpecError, match="telemetry.max_events"):
+        ServingSpec(endpoints=(ep,),
+                    telemetry=TelemetrySpec(max_events=-1)).validate()
+
+
+# -- observer purity -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("router", ROUTERS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_traced_run_is_bit_identical(policy, router):
+    rec = TraceRecorder()
+    traced = _grid_fleet(router, policy, telemetry=rec).run(_mixed_crowd())
+    plain = _grid_fleet(router, policy).run(_mixed_crowd())
+    assert _fingerprint(traced) == _fingerprint(plain)
+    assert rec.events and rec.sinks
+    _assert_reconciled(rec, [traced.fleet.meter])
+
+
+def test_traced_disagg_is_bit_identical_and_reconciles():
+    rec = TraceRecorder()
+    wl = {"llm": poisson(60, 8, 6, 1000, rate_per_s=200.0, seed=3)}
+    traced = _disagg_fleet(telemetry=rec).run(wl)
+    plain = _disagg_fleet().run(wl)
+    assert _fingerprint(traced) == _fingerprint(plain)
+    assert traced.fleet.meter.xfer_j > 0
+    _assert_reconciled(rec, [traced.fleet.meter])
+    assert any(e[0] == "inst" and e[3] == "kv_handoff" for e in rec.events)
+
+
+def test_traced_chaos_is_bit_identical_and_reconciles():
+    wl = {"chat": poisson(300, 8, 6, 1000, rate_per_s=80.0, seed=5)}
+    rec = TraceRecorder()
+    traced = _chaos_fleet(telemetry=rec).run(wl)
+    plain = _chaos_fleet().run(wl)
+    assert _fingerprint(traced) == _fingerprint(plain)
+    assert traced.fleet.meter.lost_j > 0      # a crash really hit work
+    _assert_reconciled(rec, [traced.fleet.meter])
+    kinds = {e[3] for e in rec.events if e[0] == "inst"}
+    assert {"crash", "crash_loss", "retry"} <= kinds
+
+
+def test_sanitizer_checks_span_reconciliation(monkeypatch):
+    """Under REPRO_SANITIZE=1 the auditing meter re-checks span/meter
+    bucket equality after every event — and a tampered sink fails loudly."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    rec = TraceRecorder()
+    res = _grid_fleet("least_loaded", "dynamic_batch",
+                      telemetry=rec).run(_mixed_crowd(80))
+    assert len(res.fleet.responses) == 80
+    _assert_reconciled(rec, [res.fleet.meter])
+
+    sink = rec.sink_for("chat", "chat/tampered")
+    meter = SanitizedEnergyMeter(active_power_w=100.0, idle_power_w=20.0)
+    meter.tracer = sink
+    meter.record_active(0.5, rids=[1], tokens=4, t_s=0.0)
+    sink.bucket_j["active"] += 1.0            # tamper with the span ledger
+    with pytest.raises(ConservationError, match="span-attributed"):
+        meter.record_idle(0.1, t_s=0.5)
+
+
+def test_sanitized_traced_run_matches_plain_traced_run(monkeypatch):
+    def run(env):
+        if env:
+            monkeypatch.setenv("REPRO_SANITIZE", "1")
+        else:
+            monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+        rec = TraceRecorder()
+        res = _grid_fleet("round_robin", "adaptive_batch",
+                          telemetry=rec).run(_mixed_crowd(80))
+        return _fingerprint(res)
+    assert run(True) == run(False)
+
+
+# -- the export ----------------------------------------------------------------
+
+
+def _traced_chaos_recorder():
+    wl = {"chat": poisson(300, 8, 6, 1000, rate_per_s=80.0, seed=5)}
+    rec = TraceRecorder()
+    res = _chaos_fleet(telemetry=rec).run(wl)
+    m = res.fleet.meter
+    rec.attach_request_energy(dict(m.per_request_j), dict(m.per_request_g))
+    return rec, res
+
+
+def test_perfetto_export_is_schema_valid():
+    rec, _ = _traced_chaos_recorder()
+    doc = to_perfetto(rec)
+    assert validate_trace(doc) == []
+    assert doc["otherData"]["clock"] == "virtual"
+    # per-replica named tracks, fleet track, request async spans
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    assert "router" in names and any(n.startswith("chat/") for n in names)
+    phs = {e.get("ph") for e in doc["traceEvents"]}
+    assert {"B", "E", "b", "e", "i", "C", "M"} <= phs
+    ts = [e["ts"] for e in doc["traceEvents"] if e.get("ph") != "M"]
+    assert ts == sorted(ts) and all(isinstance(t, int) for t in ts)
+
+
+def test_validate_trace_catches_breakage():
+    rec, _ = _traced_chaos_recorder()
+    doc = to_perfetto(rec)
+    ev = [e for e in doc["traceEvents"] if e.get("ph") == "B"]
+    assert ev
+    ev[0]["ph"] = "E"                        # unbalance one track's stack
+    assert validate_trace(doc)
+    assert validate_trace({"traceEvents": []})
+    assert validate_trace({})
+
+
+def test_write_trace_roundtrips_json(tmp_path):
+    rec, _ = _traced_chaos_recorder()
+    path = tmp_path / "trace.json"
+    write_trace(str(path), rec)
+    doc = json.loads(path.read_text())
+    assert validate_trace(doc) == []
+
+
+def test_max_events_cap_counts_drops():
+    rec = TraceRecorder(max_events=50)
+    _grid_fleet("round_robin", "dynamic_batch",
+                telemetry=rec).run(_mixed_crowd(80))
+    assert len(rec.events) == 50 and rec.dropped > 0
+    doc = to_perfetto(rec)
+    assert doc["otherData"]["dropped_events"] == rec.dropped
+    assert validate_trace(doc) == []
+
+
+# -- the phase breakdown -------------------------------------------------------
+
+
+def test_phase_breakdown_decomposes_latency():
+    rec = TraceRecorder()
+    res = _grid_fleet("least_loaded", "dynamic_batch",
+                      telemetry=rec).run(_mixed_crowd())
+    pb = phase_breakdown(res.fleet.responses, rec.preempt_by_rid, {})
+    assert set(pb) == {"interactive", "batch"}
+    for cls, phases in pb.items():
+        assert set(phases) == {"queue_wait", "prefill", "xfer", "decode",
+                               "preempted"}
+        for row in phases.values():
+            assert row["n"] > 0 and row["p50_s"] <= row["p95_s"]
+    # the phases sum back to the mean latency per class
+    for cls, phases in pb.items():
+        rs = [r for r in res.fleet.responses
+              if (r.priority or "standard") == cls]
+        mean_lat = sum(r.done_s - r.arrival_s for r in rs) / len(rs)
+        mean_sum = sum(p["mean_s"] for p in phases.values())
+        assert mean_sum == pytest.approx(mean_lat, rel=1e-9)
