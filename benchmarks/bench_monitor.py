@@ -1,0 +1,303 @@
+"""Monitor grid: burn-rate detection scored against the chaos ground truth.
+
+The chaos grid (``bench_chaos``) proves the *tactics* — failover +
+degradation keep availability up at lower gCO2.  This grid proves the
+*operator can see it happen*: the same scripted failure day
+(``bench_chaos.EVENTS`` — a crash, an 8-second region outage, two more
+crashes, a brownout power cap) is replayed behind the green-SRE monitor
+(:mod:`repro.serving.monitor`) with a declared budget set:
+
+  * ``crashes`` — replica-death allowance (health-check signal; the
+    crash/outage detector);
+  * ``loss``    — lost-joule allowance (magnitude corroboration: how much
+    billed energy the failures destroyed);
+  * ``power``   — rated-watts compliance (a brownout bills active seconds
+    at exactly ``cap_frac x rated``, so capped seconds are an exact,
+    zero-noise signature);
+  * ``slo``     — interactive TTFT compliance (the golden signal).
+
+Because the chaos script is ground truth, detection quality is scored
+exactly, per incident class:
+
+  * **recall**    — every scripted event must be covered by a page alert
+    inside ``[t, t + duration + grace]`` (acceptance: recall == 1.0);
+  * **precision** — every page incident must overlap some scripted event
+    window (no spurious pages);
+  * **time-to-detect** — first page alert in the event's window minus the
+    event's injection instant;
+  * **false pages** — the *same* spec minus the chaos script must produce
+    zero page incidents (acceptance: 0).
+
+The fleet is pinned to two replicas (no autoscale headroom hiding the
+events) and the endpoint *declares* its interactive SLO class, which
+feeds the monitor's targets without touching scheduling.  One cell's
+monitor output is rendered to the stdlib-only HTML ops dashboard
+(``BENCH_dashboard.html``; CI uploads it as an artifact).
+
+Scale knob (env): ``MONITOR_N`` (default 3000 requests/cell; arrival rate
+scales with N so the ~20-virtual-second script shape is preserved at CI
+scale).  ``run(jobs=N)`` fans cells out through ``benchmarks.pool``.
+
+``run()`` returns machine-readable rows; ``benchmarks/run.py`` folds them
+into ``BENCH_serving.json`` under ``monitor_grid``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+
+from benchmarks import bench_chaos
+from benchmarks.common import emit
+from benchmarks.pool import run_cells
+from repro.configs import get_arch
+from repro.energy.hw import HOST_CPU_POWER_W
+from repro.models import init_params
+from repro.serving.api import (
+    AutoscaleSpec,
+    ServingSession,
+    ServingSpec,
+    SLOClass,
+    with_override,
+)
+from repro.serving.monitor import BudgetSpec, MonitorSpec, write_dashboard
+from repro.serving.stepcache import ReplayEngine, StepTimeCache
+from repro.workload.generators import WorkloadSpec
+
+ARCH = bench_chaos.ARCH
+PROMPT_LEN = bench_chaos.PROMPT_LEN
+MAX_NEW = bench_chaos.MAX_NEW
+EVENTS = bench_chaos.EVENTS
+N = int(os.environ.get("MONITOR_N", 3000))
+SPAN_S = 20.0
+RATE = N / SPAN_S
+GRACE_S = 2.0            # detection window past an event's active span
+DASHBOARD = os.environ.get("MONITOR_DASHBOARD", "BENCH_dashboard.html")
+ROUTERS = ("least_loaded", "follow_sun")
+
+# the declared promises; thresholds tuned so one scripted event pages
+# within ~2 windows while a healthy day never leaves burn 0 (the crashes
+# and power kinds are structurally zero without failures)
+BUDGETS = (
+    BudgetSpec(name="crashes", kind="crashes", budget=1.0, horizon_s=60.0,
+               fast_window_s=0.5, slow_window_s=1.0,
+               page_burn=50.0, warn_burn=10.0),
+    BudgetSpec(name="loss", kind="loss", budget=1.0, horizon_s=20.0,
+               fast_window_s=0.5, slow_window_s=1.0,
+               page_burn=5.0, warn_burn=1.0),
+    BudgetSpec(name="power", kind="power", budget=HOST_CPU_POWER_W,
+               objective=0.95, fast_window_s=0.5, slow_window_s=1.0,
+               page_burn=8.0, warn_burn=2.0),
+    BudgetSpec(name="slo-interactive", kind="slo", slo_class="interactive",
+               objective=0.95, fast_window_s=0.5, slow_window_s=2.0,
+               page_burn=10.0, warn_burn=2.0),
+)
+
+
+def spec_for(tactic: str, router: str) -> ServingSpec:
+    """The chaos-grid spec, pinned and monitored.
+
+    Two fixed replicas (autoscale headroom would absorb the events the
+    monitor is scored on) and a *declared* interactive SLO class — the
+    declaration feeds ``slo_targets`` to the monitor without changing
+    scheduling, since the workload already stamps the class name."""
+    spec = bench_chaos.spec_for(tactic, router)
+    ep = dataclasses.replace(
+        spec.endpoints[0],
+        autoscale=AutoscaleSpec(min_replicas=2, max_replicas=2,
+                                replicas_hint=2, window_s=0.5,
+                                cold_start_s=0.1),
+        slo_classes={"interactive": SLOClass(slo_ms=150.0,
+                                             priority="interactive")})
+    spec = dataclasses.replace(spec, endpoints=(ep,))
+    spec = with_override(spec, "telemetry.enabled", True)
+    return with_override(spec, "monitor", MonitorSpec(
+        enabled=True, window_s=0.25, budgets=BUDGETS))
+
+
+def workload(vocab: int):
+    """The chaos grid's traffic shape at this grid's own scale knob."""
+    n_chat, n_std = int(N * 0.4), int(N * 0.3)
+    n_bulk = N - n_chat - n_std
+    chat = WorkloadSpec(kind="poisson", n=n_chat, rate_per_s=RATE * 0.4,
+                        prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                        seed=71, slo_ms=150.0, priority="interactive",
+                        origins=("east", "west"))
+    std = WorkloadSpec(kind="poisson", n=n_std, rate_per_s=RATE * 0.3,
+                       prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                       seed=72, rid0=1_000_000, origins=("west", "east"))
+    bulk = WorkloadSpec(kind="bursty", n=n_bulk, rate_per_s=RATE * 0.2,
+                        prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                        seed=73, rid0=2_000_000, priority="batch",
+                        burst_n=max(n_bulk // 6, 1), burst_every_s=5.0,
+                        burst_rate_per_s=RATE * 3.0,
+                        origins=("east", "west"))
+    return (chat.build(vocab) + std.build(vocab) + bulk.build(vocab))
+
+
+def _window_for(ev) -> tuple:
+    """Ground-truth detection window for one scripted event."""
+    return ev.t_s, ev.t_s + (ev.duration_s or 0.0) + GRACE_S
+
+
+def score_detections(alerts, incidents):
+    """Match page alerts/incidents against the scripted ground truth.
+
+    Returns (per-event rows, precision).  An event is *detected* when a
+    page alert fires inside its window; a page incident is a *true
+    positive* when it overlaps any event window."""
+    pages = sorted(a["t"] for a in alerts if a["severity"] == "page")
+    rows = []
+    for ev in EVENTS:
+        lo, hi = _window_for(ev)
+        hit = next((t for t in pages if lo <= t <= hi), None)
+        rows.append({
+            "class": ev.kind, "t_s": ev.t_s,
+            "detected": hit is not None,
+            "ttd_s": None if hit is None else round(hit - ev.t_s, 6),
+        })
+    page_incidents = [i for i in incidents if i["severity"] == "page"]
+    true_pos = sum(
+        1 for inc in page_incidents
+        if any(inc["start"] <= hi and inc["end"] >= lo
+               for lo, hi in map(_window_for, EVENTS)))
+    precision = (true_pos / len(page_incidents)) if page_incidents else 1.0
+    return rows, precision
+
+
+class _MonitorView:
+    """Pickle-safe stand-in for a finalized MonitorRuntime (dashboard)."""
+
+    def __init__(self, windows, alerts, incidents, remaining):
+        self.windows = windows
+        self.alerts = alerts
+        self.incidents = incidents
+        self._remaining = remaining
+
+    def budget_remaining(self):
+        return self._remaining
+
+
+def _run_cell(payload):
+    """One monitored (tactic, router) cell, self-contained and picklable."""
+    spec_json, cache_payload, assignment = payload
+    spec = ServingSpec.from_json(spec_json)
+    session = ServingSession()
+    session.deploy(spec, engines={
+        ep.name: ReplayEngine(get_arch(ep.arch)) for ep in spec.endpoints})
+    for ep in spec.endpoints:
+        session.warm(ep.name, StepTimeCache.from_payload(cache_payload))
+    session.submit("llm", workload(get_arch(ARCH).vocab_size))
+    t0 = time.perf_counter()
+    report = session.run()
+    sim_s = time.perf_counter() - t0
+    mon = report.monitor
+    pages = [a for a in report.alerts if a["severity"] == "page"]
+    row = dict(assignment)
+    row.update({
+        "kind": "cell",
+        "n_requests": report.endpoints["llm"].n_requests,
+        "n_windows": len(mon.windows),
+        "alerts_page": len(pages),
+        "alerts_warn": len(report.alerts) - len(pages),
+        "incidents": len(report.incidents),
+        "page_incidents": sum(1 for i in report.incidents
+                              if i["severity"] == "page"),
+        "late_events": mon.signals.late_events,
+        "budget_remaining": {k: round(v["remaining_frac"], 6)
+                             for k, v in report.budget_remaining.items()},
+        "sim_host_s": sim_s,
+    })
+    if assignment["tactic"] == "healthy":
+        row["false_pages"] = row["page_incidents"]
+    else:
+        events, precision = score_detections(report.alerts, report.incidents)
+        row["events"] = events
+        row["recall"] = (sum(e["detected"] for e in events) / len(events))
+        row["precision"] = precision
+        row["ttd_by_class"] = {
+            cls: round(max(e["ttd_s"] for e in events
+                           if e["class"] == cls and e["detected"]), 6)
+            for cls in sorted({e["class"] for e in events})
+            if all(e["detected"] for e in events if e["class"] == cls)}
+    view = (mon.windows, report.alerts, report.incidents,
+            report.budget_remaining)
+    return row, view
+
+
+def run(jobs: int = 1):
+    cfg = get_arch(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    session = ServingSession()
+    session.deploy(bench_chaos.spec_for("healthy", "least_loaded").validate(),
+                   params={"m": params})
+    t0 = time.perf_counter()
+    session.calibrate("llm", batch_sizes=range(1, 9),
+                      prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+    cal_s = time.perf_counter() - t0
+    cache = session._warm_cache("llm")
+
+    cells = []
+    for router in ROUTERS:
+        for tactic in ("failover_degrade", "healthy"):
+            spec = spec_for(tactic, router).validate()
+            cells.append((spec.to_json(), cache.to_payload(),
+                          {"tactic": tactic, "router": router}))
+    results = run_cells(_run_cell, cells, jobs)
+    rows = [row for row, _ in results]
+
+    for r in rows:
+        if r["tactic"] == "healthy":
+            derived = (f"false_pages={r['false_pages']};"
+                       f"warns={r['alerts_warn']}")
+        else:
+            ttd = ";".join(f"ttd_{c}={v:.2f}s"
+                           for c, v in sorted(r["ttd_by_class"].items()))
+            derived = (f"recall={r['recall']:.3f};"
+                       f"precision={r['precision']:.3f};{ttd}")
+        emit(f"monitor_{r['tactic']}_{r['router']}",
+             r["sim_host_s"] * 1e6,
+             f"{derived};pages={r['alerts_page']};"
+             f"incidents={r['incidents']};windows={r['n_windows']};"
+             f"n={r['n_requests']}")
+
+    # headline: perfect detection — every scripted event paged (recall
+    # 1.0), every page real (precision 1.0), healthy days silent
+    chaos_rows = [r for r in rows if r["tactic"] != "healthy"]
+    healthy_rows = [r for r in rows if r["tactic"] == "healthy"]
+    recall_ok = all(r["recall"] == 1.0 for r in chaos_rows)
+    precision_ok = all(r["precision"] == 1.0 for r in chaos_rows)
+    quiet_ok = all(r["false_pages"] == 0 for r in healthy_rows)
+    worst_ttd = max((v for r in chaos_rows
+                     for v in r["ttd_by_class"].values()), default=0.0)
+    rows.append({
+        "kind": "headline",
+        "acceptance": recall_ok and precision_ok and quiet_ok,
+        "recall_1": recall_ok,
+        "precision_1": precision_ok,
+        "healthy_quiet": quiet_ok,
+        "worst_ttd_s": worst_ttd,
+        "grace_s": GRACE_S,
+        "budgets": [b.name for b in BUDGETS],
+    })
+    emit("monitor_headline", worst_ttd * 1e6,
+         f"acceptance={recall_ok and precision_ok and quiet_ok};"
+         f"recall_1={recall_ok};precision_1={precision_ok};"
+         f"healthy_quiet={quiet_ok};worst_ttd_s={worst_ttd:.2f};"
+         f"cal_s={cal_s:.2f};jobs={jobs}")
+
+    # ops dashboard from the headline chaos cell (stdlib-only HTML)
+    if DASHBOARD:
+        for (row, view) in results:
+            if (row["tactic"], row["router"]) == ("failover_degrade",
+                                                  "least_loaded"):
+                write_dashboard(
+                    DASHBOARD, _MonitorView(*view),
+                    title="green serving ops — scripted failure day",
+                    meta={"tactic": row["tactic"], "router": row["router"],
+                          "n": str(row["n_requests"])})
+                break
+    return rows

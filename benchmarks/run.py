@@ -17,6 +17,9 @@ run (the CI bench job uploads it as an artifact).
                          rate x SLO sweep (honors --jobs)
   bench_telemetry      - observability grid: one traced cell per scenario
                          family (phase breakdowns, overhead, purity receipt)
+  bench_monitor        - green-SRE grid: burn-rate alerting scored against
+                         the chaos script (recall/precision/time-to-detect)
+                         + the HTML ops dashboard (honors --jobs)
   bench_formats        - Table 1, TD2 model-format row
   bench_codecs         - Table 1, TD4 communication-protocol row
   bench_adds           - Table 1 executed as GreenReports (all qualities)
@@ -63,6 +66,8 @@ def write_serving_json(path: str, results: dict) -> None:
         doc["sim_throughput"] = results["bench_simperf"]
     if "bench_telemetry" in results:
         doc["telemetry_grid"] = results["bench_telemetry"]
+    if "bench_monitor" in results:
+        doc["monitor_grid"] = results["bench_monitor"]
     if "bench_batching" in results:
         doc["batching"] = {
             name: m.summary() for name, m in results["bench_batching"].items()
@@ -84,6 +89,7 @@ def main(argv=None) -> None:
         bench_fleet,
         bench_formats,
         bench_kernels,
+        bench_monitor,
         bench_roofline,
         bench_serving_infra,
         bench_simperf,
@@ -93,7 +99,7 @@ def main(argv=None) -> None:
     modules = [bench_codecs, bench_formats, bench_kernels,
                bench_serving_infra, bench_batching, bench_fleet,
                bench_decisions, bench_carbon, bench_disagg, bench_chaos,
-               bench_simperf, bench_telemetry,
+               bench_simperf, bench_telemetry, bench_monitor,
                bench_adds, bench_roofline]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
@@ -127,7 +133,8 @@ def main(argv=None) -> None:
             traceback.print_exc()
     if results.keys() & {"bench_fleet", "bench_batching", "bench_decisions",
                          "bench_carbon", "bench_disagg", "bench_chaos",
-                         "bench_simperf", "bench_telemetry"}:
+                         "bench_simperf", "bench_telemetry",
+                         "bench_monitor"}:
         write_serving_json(ns.serving_json, results)
     if failed:
         print(f"# FAILED: {[m for m, _ in failed]}", file=sys.stderr)

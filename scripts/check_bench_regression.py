@@ -20,7 +20,12 @@ Compares a freshly generated grid against the checked-in
     phase-breakdown rows) — the admission-queue share of latency the span
     decomposition newly makes visible.  Always warn-only: the phase
     decomposition is young and its budget overlaps the TTFT contract
-    above, so it annotates drift without ever going red.
+    above, so it annotates drift without ever going red;
+  * the **monitor incident recall** (monitor grid, PR 10's burn-rate
+    detection scored against the chaos ground truth) — warn-only when the
+    worst chaos cell's recall falls more than one point (0.01 absolute)
+    below baseline, and warn-only on a missing grid (quick ``--only``
+    runs skip the monitor bench).
 
 A relative regression beyond ``--threshold`` emits a GitHub Actions
 ``::warning::`` annotation — loud on the PR, but not red (bench hosts are
@@ -187,6 +192,44 @@ def check_queue_wait(base: float | None, fresh: float | None,
     return 0
 
 
+def monitor_incident_recall(doc: dict) -> float | None:
+    """Worst (minimum) scripted-incident recall among the monitor grid's
+    chaos cells (None for pre-monitor baselines; healthy cells carry no
+    recall by contract and fall out of the filter)."""
+    rows = doc.get("monitor_grid") or []
+    try:
+        cells = [r.get("recall") for r in rows if r.get("kind") == "cell"]
+    except (AttributeError, TypeError):
+        return None
+    cells = [c for c in cells if isinstance(c, (int, float))]
+    return min(cells) if cells else None
+
+
+def check_monitor_recall(base: float | None, fresh: float | None,
+                         baseline_path: str) -> int:
+    """Warn (never fail) when the fresh incident recall fell more than one
+    point (0.01, absolute — recall is a fraction scored against an exact
+    ground truth) below baseline.  Always returns 0, and a missing grid
+    only warns: the monitor bench is skipped by quick ``--only`` runs and
+    its acceptance gate (recall == 1.0) already lives in the bench's own
+    headline row."""
+    if base is None or fresh is None:
+        if base is not None or fresh is not None:
+            print(f"::warning file={baseline_path}::no comparable "
+                  f"monitor-recall rows (baseline={base}, fresh={fresh})")
+        return 0
+    diff = fresh - base
+    msg = (f"monitor incident recall: baseline={base:.4f} "
+           f"fresh={fresh:.4f} ({diff:+.4f})")
+    if diff < -0.01:
+        print(f"::warning file={baseline_path},title=monitor recall "
+              f"regression::{msg} — the burn-rate alerts now miss "
+              "scripted incidents they used to catch")
+    else:
+        print(f"# ok: {msg}")
+    return 0
+
+
 def check_metric(label: str, base: float | None, fresh: float | None,
                  threshold: float, baseline_path: str,
                  fresh_path: str) -> int:
@@ -267,6 +310,9 @@ def main(argv=None) -> int:
     status |= check_queue_wait(interactive_queue_wait_p95(base_doc),
                                interactive_queue_wait_p95(fresh_doc),
                                ns.threshold, ns.baseline)
+    status |= check_monitor_recall(monitor_incident_recall(base_doc),
+                                   monitor_incident_recall(fresh_doc),
+                                   ns.baseline)
     return status
 
 

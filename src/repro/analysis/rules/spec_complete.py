@@ -45,6 +45,8 @@ _SPEC_MODULES = {
     "serving/regions/spec.py": ("RegionSpec",),
     "serving/chaos/spec.py": ("ChaosSpec", "ChaosEvent", "RetrySpec"),
     "serving/telemetry/spec.py": ("TelemetrySpec",),
+    "serving/monitor/spec.py": ("MonitorSpec",),
+    "serving/monitor/burnrate.py": ("BudgetSpec",),
 }
 
 _SPEC_CLASSES = {c for classes in _SPEC_MODULES.values() for c in classes}

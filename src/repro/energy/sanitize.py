@@ -31,6 +31,7 @@ suite under it.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import Dict, Iterable, List, Optional
@@ -68,6 +69,38 @@ def new_meter(**kwargs) -> EnergyMeter:
 
 def _close(a: float, b: float) -> bool:
     return abs(a - b) <= _ABS + _REL * max(abs(a), abs(b))
+
+
+@contextlib.contextmanager
+def observation_guard(recorder, label: str = "monitor tick"):
+    """R6 runtime proof: a pure observer may *read* the telemetry stream
+    but never write it.
+
+    The green-SRE monitor (``repro.serving.monitor``) wraps every fleet
+    tick in this guard when ``REPRO_SANITIZE=1``: the recorder's stream
+    counters (events, capped drops, request records, deferral holds,
+    sinks) and the span-attributed bucket ledgers are snapshotted before
+    the observation and re-compared after it.  Any drift means the monitor
+    perturbed the very stream it scores — the R6 violation — and raises
+    :class:`ConservationError` with both states named.
+    """
+    before = (len(recorder.events), recorder.dropped,
+              len(recorder.requests), len(recorder.holds),
+              len(recorder.sinks))
+    before_buckets = recorder.bucket_totals()
+    yield
+    after = (len(recorder.events), recorder.dropped,
+             len(recorder.requests), len(recorder.holds),
+             len(recorder.sinks))
+    if after != before:
+        raise ConservationError(
+            f"R6 observer purity violated at {label}: recorder counters "
+            f"moved {before} -> {after} (events, dropped, requests, holds, "
+            f"sinks) — a monitor must never write the telemetry stream")
+    if recorder.bucket_totals() != before_buckets:
+        raise ConservationError(
+            f"R6 observer purity violated at {label}: span-attributed "
+            f"bucket ledgers changed during a read-only observation")
 
 
 @dataclasses.dataclass

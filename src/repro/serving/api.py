@@ -114,6 +114,7 @@ from repro.serving.scheduler import (
     make_policy,
 )
 from repro.serving.stepcache import StepTimeCache, calibrate, shape_bucket
+from repro.serving.monitor import BudgetSpec, MonitorRuntime, MonitorSpec
 from repro.serving.telemetry import (
     TelemetrySpec,
     TraceRecorder,
@@ -447,6 +448,11 @@ class ServingSpec:
     # bit-identity tests sweep exactly this switch); disabled (the
     # default) costs one attribute check per billing event
     telemetry: TelemetrySpec = TelemetrySpec()
+    # green-SRE monitoring (PR 10): windowed signals, budget burn-rate
+    # alerting and incident detection over the telemetry stream.  Another
+    # pure observer (invariant R6) — it *consumes* the trace, so enabling
+    # it requires telemetry.enabled
+    monitor: MonitorSpec = MonitorSpec()
 
     def __post_init__(self):
         if not isinstance(self.endpoints, tuple):
@@ -498,6 +504,29 @@ class ServingSpec:
         _check_sub(self.chaos, "chaos")
         _check_sub(self.retry, "retry")
         _check_sub(self.telemetry, "telemetry")
+        _check_sub(self.monitor, "monitor")
+        _check(not self.monitor.enabled or self.telemetry.enabled,
+               "monitor.enabled",
+               "the monitor consumes the telemetry stream; "
+               "set telemetry.enabled=True too")
+        ep_names = {e.name for e in self.endpoints}
+        all_classes = {c for e in self.endpoints for c in e.slo_classes}
+        for i, b in enumerate(self.monitor.budgets):
+            if b.endpoint:
+                _check(b.endpoint in ep_names,
+                       f"monitor.budgets[{i}].endpoint",
+                       f"unknown endpoint {b.endpoint!r}; "
+                       f"known: {sorted(ep_names)}")
+            if b.slo_class:
+                scope = (set(self.endpoint(b.endpoint).slo_classes)
+                         if b.endpoint else all_classes)
+                # workloads may carry priority classes the endpoints never
+                # declare (e.g. WorkloadSpec.priority); only enforce
+                # membership when classes are declared at all
+                _check(not scope or b.slo_class in scope,
+                       f"monitor.budgets[{i}].slo_class",
+                       f"unknown SLO class {b.slo_class!r}; "
+                       f"known: {sorted(scope)}")
         places = set(self.regions) | set(self.carbon_zones)
         for i, ev in enumerate(self.chaos.events):
             if ev.kind == "outage" or (ev.kind == "brownout" and ev.target):
@@ -585,6 +614,12 @@ class ServingSpec:
         if top.get("telemetry") is not None:
             top["telemetry"] = _construct(TelemetrySpec, top["telemetry"],
                                           "telemetry")
+        if top.get("monitor") is not None:
+            mon = dict(top["monitor"])
+            mon["budgets"] = tuple(
+                _construct(BudgetSpec, b, f"monitor.budgets[{i}]")
+                for i, b in enumerate(mon.get("budgets") or ()))
+            top["monitor"] = _construct(MonitorSpec, mon, "monitor")
         return _construct(cls, top, "spec")
 
     @classmethod
@@ -788,12 +823,23 @@ class ServingReport:
     # repro.serving.telemetry.write_trace for a Perfetto-loadable JSON);
     # None for untraced runs.  Not serialized.
     telemetry: Optional[TraceRecorder] = None
+    # the finalized monitor runtime when spec.monitor.enabled (feed it to
+    # repro.serving.monitor.write_dashboard for the ops page); None for
+    # unmonitored runs.  Not serialized — its operator-facing outputs are:
+    monitor: Optional[MonitorRuntime] = None
+    alerts: List[dict] = dataclasses.field(default_factory=list)
+    incidents: List[dict] = dataclasses.field(default_factory=list)
+    budget_remaining: Dict[str, dict] = dataclasses.field(
+        default_factory=dict)
 
     def to_dict(self) -> dict:
         return {
             "spec": self.spec.to_dict(),
             "endpoints": {n: r.to_dict() for n, r in self.endpoints.items()},
             "fleet": self.fleet.to_dict(),
+            "alerts": list(self.alerts),
+            "incidents": list(self.incidents),
+            "budget_remaining": dict(self.budget_remaining),
         }
 
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -1186,6 +1232,14 @@ class ServingSession:
         recorder = (TraceRecorder(spans=ts.spans, metrics=ts.metrics,
                                   max_events=ts.max_events)
                     if ts.enabled else None)
+        monitor = None
+        if self.spec.monitor.enabled and recorder is not None:
+            slo_targets = {
+                (ep.name, cname): (sc.slo_ms or 0.0, sc.deadline_s or 0.0)
+                for ep in self.spec.endpoints
+                for cname, sc in ep.slo_classes.items()}
+            monitor = MonitorRuntime(self.spec.monitor, recorder,
+                                     slo_targets)
         fleet = ReplicaFleet(
             router=self.spec.router,
             autoscaler=self._autoscaler(),
@@ -1203,6 +1257,7 @@ class ServingSession:
             retry=(RetryRuntime.from_spec(self.spec.retry)
                    if injected else None),
             telemetry=recorder,
+            monitor=monitor,
         )
         for name, wl in self._workloads.items():
             fleet.add_endpoint(
@@ -1266,9 +1321,22 @@ class ServingSession:
         if recorder is not None:
             fleet_rep.phase_breakdown = phase_breakdown(
                 fm.responses, recorder.preempt_by_rid, xfer_by_rid)
+        alerts: List[dict] = []
+        incidents: List[dict] = []
+        budget_remaining: Dict[str, dict] = {}
+        if monitor is not None:
+            # drain the stream tail (segments billed after the last fleet
+            # boundary) and close any open incident; under REPRO_SANITIZE=1
+            # this also re-proves R6 (read-only tick + alert determinism)
+            monitor.finalize()
+            alerts = list(monitor.alerts)
+            incidents = list(monitor.incidents)
+            budget_remaining = monitor.budget_remaining()
         return ServingReport(spec=self.spec, endpoints=reports,
                              fleet=fleet_rep, result=result,
-                             telemetry=recorder)
+                             telemetry=recorder, monitor=monitor,
+                             alerts=alerts, incidents=incidents,
+                             budget_remaining=budget_remaining)
 
     # -- one-shot convenience --------------------------------------------------
     def serve(self, workloads: Mapping[str, List[Request]]) -> ServingReport:

@@ -423,12 +423,17 @@ class ReplicaFleet:
                  regions: Optional[RegionTopology] = None,
                  chaos: Optional[ChaosRuntime] = None,
                  retry: Optional[RetryRuntime] = None,
-                 telemetry=None):
+                 telemetry=None, monitor=None):
         self.router = make_router(router)
         # trace recorder (PR 9): a pure observer — replica sinks are
         # installed on every core at spawn, fleet-level instants and gauges
         # are emitted below.  None = untraced (the default fast path).
         self.telemetry = telemetry
+        # green-SRE monitor (PR 10): a read-only consumer of the recorder,
+        # ticked at every window boundary right after the gauges sample (so
+        # it scores exactly what an operator could see at that instant).
+        # None = unmonitored; requires a recorder to consume.
+        self.monitor = monitor
         self.autoscaler = autoscaler
         # "" is the default zone: the fleet-wide grid signal
         self.carbon = carbon if carbon is not None else ConstantSignal()
@@ -1100,6 +1105,11 @@ class ReplicaFleet:
     def _observe_and_scale(self, t_end: float, window_arrivals: Dict[str, int],
                            window_s: float, more_events: bool) -> None:
         self._sample_gauges(t_end)
+        if self.monitor is not None:
+            # pure observation: the monitor consumes the telemetry stream
+            # up to this boundary and seals/scores its elapsed windows
+            # (under REPRO_SANITIZE=1 the tick is proven read-only — R6)
+            self.monitor.observe(t_end)
         if self.autoscaler is None:
             return
         # carbon-biased scale-down: compare the default grid's intensity at

@@ -1,0 +1,46 @@
+"""Green-SRE monitoring on the virtual clock (PR 10).
+
+PR 9 made the simulator observable; this package makes it *operable*: a
+pure-observer streaming monitor that consumes the telemetry stream at
+fleet window boundaries and turns it into what an on-call operator runs
+on —
+
+  * :mod:`~repro.serving.monitor.signals` — windowed golden signals
+    (latency p50/p95 per SLO class, traffic, drops/sheds, saturation) and
+    green signals (W, J/token, gCO2/token, lost joules, per-zone carbon
+    intensity);
+  * :mod:`~repro.serving.monitor.burnrate` — declarative
+    :class:`BudgetSpec` s (SLO compliance, joule / gram / lost-joule
+    allowances over a horizon) scored by multi-window SRE burn-rate rules
+    with page/warn severities;
+  * :mod:`~repro.serving.monitor.incidents` — alert episodes merged into
+    incident records, scored for precision / recall / time-to-detect
+    against the chaos script's ground truth by
+    ``benchmarks/bench_monitor.py``;
+  * :mod:`~repro.serving.monitor.dashboard` — a self-contained HTML ops
+    dashboard (stdlib-only, CI artifact).
+
+Everything rides :class:`~repro.serving.monitor.spec.MonitorSpec` on
+``ServingSpec.monitor`` (JSON-round-trippable, sweepable, R3-registered)
+and is provably observer-pure: monitored runs are bit-identical to
+unmonitored ones in joules, grams and latencies — invariant R6, enforced
+at every tick by the ``REPRO_SANITIZE=1`` sanitizer.
+"""
+
+from repro.serving.monitor.burnrate import BudgetSpec, BurnEngine
+from repro.serving.monitor.dashboard import render_dashboard, write_dashboard
+from repro.serving.monitor.incidents import IncidentDetector
+from repro.serving.monitor.runtime import MonitorRuntime
+from repro.serving.monitor.signals import SignalAggregator
+from repro.serving.monitor.spec import MonitorSpec
+
+__all__ = [
+    "BudgetSpec",
+    "BurnEngine",
+    "IncidentDetector",
+    "MonitorRuntime",
+    "MonitorSpec",
+    "SignalAggregator",
+    "render_dashboard",
+    "write_dashboard",
+]

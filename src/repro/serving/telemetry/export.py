@@ -54,19 +54,36 @@ def to_perfetto(rec: TraceRecorder) -> dict:
     out: List[dict] = []
 
     # -- track metadata -------------------------------------------------------
+    # Sort indices pin the UI layout regardless of pid/tid allocation order:
+    # the fleet process first, then endpoints alphabetically; within a
+    # process the router/anchor thread first, then replicas alphabetically.
     meta: List[dict] = [
         {"ph": "M", "pid": FLEET_PID, "tid": 0, "name": "process_name",
          "args": {"name": "fleet"}},
+        {"ph": "M", "pid": FLEET_PID, "tid": 0, "name": "process_sort_index",
+         "args": {"sort_index": 0}},
         {"ph": "M", "pid": FLEET_PID, "tid": 0, "name": "thread_name",
          "args": {"name": "router"}},
+        {"ph": "M", "pid": FLEET_PID, "tid": 0, "name": "thread_sort_index",
+         "args": {"sort_index": 0}},
     ]
-    for endpoint, pid in sorted(rec._pids.items(), key=lambda kv: kv[1]):
+    for rank, (endpoint, pid) in enumerate(sorted(rec._pids.items()), 1):
         meta.append({"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
                      "args": {"name": endpoint}})
-    for (endpoint, replica), tid in sorted(rec._tids.items(),
-                                           key=lambda kv: kv[1]):
-        meta.append({"ph": "M", "pid": rec._pids[endpoint], "tid": tid,
-                     "name": "thread_name", "args": {"name": replica}})
+        meta.append({"ph": "M", "pid": pid, "tid": 0,
+                     "name": "process_sort_index",
+                     "args": {"sort_index": rank}})
+    threads_by_pid: Dict[int, List[tuple]] = {}
+    for (endpoint, replica), tid in rec._tids.items():
+        threads_by_pid.setdefault(rec._pids[endpoint], []).append(
+            (replica, tid))
+    for pid in sorted(threads_by_pid):
+        for rank, (replica, tid) in enumerate(sorted(threads_by_pid[pid]), 1):
+            meta.append({"ph": "M", "pid": pid, "tid": tid,
+                         "name": "thread_name", "args": {"name": replica}})
+            meta.append({"ph": "M", "pid": pid, "tid": tid,
+                         "name": "thread_sort_index",
+                         "args": {"sort_index": rank}})
 
     # -- replica energy spans: stack-valid B/E per (pid, tid) -----------------
     spans_by_track: Dict[tuple, List[tuple]] = {}
@@ -177,17 +194,62 @@ def validate_trace(doc: dict) -> List[str]:
 
     Demands: monotone ``ts`` across the stream, int ``pid``/``tid`` on every
     event, ``B``/``E`` stack discipline per (pid, tid) with matching names,
-    ``b``/``e`` async pairing per (cat, id), and ``thread_name`` metadata
-    for every track that carries duration spans.
+    ``b``/``e`` async pairing per (cat, id), ``thread_name`` metadata for
+    every track that carries duration spans, and deterministic layout
+    metadata: every named process carries an integer ``process_sort_index``
+    (unique per pid), every named thread an integer ``thread_sort_index``
+    (unique within its pid).
     """
     problems: List[str] = []
     events = doc.get("traceEvents")
     if not isinstance(events, list) or not events:
         return ["traceEvents missing or empty"]
     named_tracks = set()
-    for ev in events:
-        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+    named_pids = set()
+    proc_sort: Dict[int, int] = {}
+    thread_sort: Dict[tuple, int] = {}
+    for i, ev in enumerate(events):
+        if ev.get("ph") != "M":
+            continue
+        name = ev.get("name")
+        if name == "thread_name":
             named_tracks.add((ev.get("pid"), ev.get("tid")))
+        elif name == "process_name":
+            named_pids.add(ev.get("pid"))
+        elif name in ("process_sort_index", "thread_sort_index"):
+            idx = (ev.get("args") or {}).get("sort_index")
+            if not isinstance(idx, int):
+                problems.append(
+                    f"event {i}: {name} without integer sort_index")
+                continue
+            if name == "process_sort_index":
+                prev = proc_sort.setdefault(ev.get("pid"), idx)
+                if prev != idx:
+                    problems.append(
+                        f"event {i}: conflicting process_sort_index for "
+                        f"pid {ev.get('pid')} ({prev} vs {idx})")
+            else:
+                key = (ev.get("pid"), ev.get("tid"))
+                prev = thread_sort.setdefault(key, idx)
+                if prev != idx:
+                    problems.append(
+                        f"event {i}: conflicting thread_sort_index for "
+                        f"{key} ({prev} vs {idx})")
+    for pid in sorted(named_pids - set(proc_sort), key=repr):
+        problems.append(f"process {pid} has process_name but no "
+                        "process_sort_index (layout is non-deterministic)")
+    for track in sorted(named_tracks - set(thread_sort), key=repr):
+        problems.append(f"thread {track} has thread_name but no "
+                        "thread_sort_index (layout is non-deterministic)")
+    by_pid: Dict[int, List[int]] = {}
+    for (pid, _tid), idx in thread_sort.items():
+        by_pid.setdefault(pid, []).append(idx)
+    for pid, idxs in sorted(by_pid.items(), key=lambda kv: repr(kv[0])):
+        if len(idxs) != len(set(idxs)):
+            problems.append(
+                f"duplicate thread_sort_index values within pid {pid}")
+    if len(set(proc_sort.values())) != len(proc_sort):
+        problems.append("duplicate process_sort_index values across pids")
     prev_ts = None
     dur_stacks: Dict[tuple, List[str]] = {}
     async_stacks: Dict[tuple, List[str]] = {}

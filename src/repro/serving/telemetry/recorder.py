@@ -36,6 +36,11 @@ from typing import Dict, List, Optional, Tuple
 # endpoints get pid 1..N, their replicas tid 1..M within the endpoint
 FLEET_PID = 0
 
+# shared empty-args payload for instants recorded without arguments —
+# treated as read-only by every consumer, so the hot record path never
+# allocates a fresh dict per event
+_NO_ARGS: dict = {}
+
 
 class _ReplicaSink:
     """Meter observer bound to one replica's trace track.
@@ -47,7 +52,7 @@ class _ReplicaSink:
     """
 
     __slots__ = ("rec", "endpoint", "replica", "pid", "tid",
-                 "bucket_j", "bucket_g")
+                 "bucket_j", "bucket_g", "_events", "_max", "_spans")
 
     def __init__(self, rec: "TraceRecorder", endpoint: str, replica: str,
                  pid: int, tid: int):
@@ -58,6 +63,13 @@ class _ReplicaSink:
         self.tid = tid
         self.bucket_j: Dict[str, float] = {}
         self.bucket_g: Dict[str, float] = {}
+        # hot-path caches: one billing event per meter segment flows through
+        # on_energy, so the recorder's stream list, cap and span switch are
+        # bound once here instead of re-read through two attribute hops per
+        # event (they are immutable for the recorder's lifetime)
+        self._events = rec.events
+        self._max = rec.max_events
+        self._spans = rec.spans
 
     def reset(self) -> None:
         """A fresh meter was attached: start its bucket ledger from zero."""
@@ -66,13 +78,20 @@ class _ReplicaSink:
 
     def on_energy(self, kind: str, t_s: Optional[float], dur_s: float,
                   j: float, g: float, rids=(), tokens: int = 0) -> None:
-        self.bucket_j[kind] = self.bucket_j.get(kind, 0.0) + j
-        self.bucket_g[kind] = self.bucket_g.get(kind, 0.0) + g
-        rec = self.rec
-        if rec.spans:
-            rec._push(("span", self.pid, self.tid, kind,
-                       0.0 if t_s is None else t_s, dur_s, j, g,
-                       len(rids), tokens))
+        bj = self.bucket_j
+        bj[kind] = bj.get(kind, 0.0) + j
+        bg = self.bucket_g
+        bg[kind] = bg.get(kind, 0.0) + g
+        if self._spans:
+            events = self._events
+            if len(events) < self._max:
+                # the tuple is only built when it will actually be stored:
+                # past the cap (or with spans off) no payload is allocated
+                events.append(("span", self.pid, self.tid, kind,
+                               0.0 if t_s is None else t_s, dur_s, j, g,
+                               len(rids), tokens))
+            else:
+                self.rec.dropped += 1
 
     def on_response(self, resp, preempted_s: float = 0.0) -> None:
         self.rec.on_response(self, resp, preempted_s)
@@ -189,7 +208,8 @@ class TraceRecorder:
         if not self.spans:
             return
         pid, tid = (sink.pid, sink.tid) if sink is not None else (FLEET_PID, 0)
-        self._push(("inst", pid, tid, name, t_s, args or {}))
+        self._push(("inst", pid, tid, name, t_s,
+                    _NO_ARGS if args is None else args))
 
     def on_response(self, sink: _ReplicaSink, resp,
                     preempted_s: float = 0.0) -> None:
@@ -228,3 +248,8 @@ class TraceRecorder:
     def tracks(self) -> Dict[Tuple[str, str], Tuple[int, int]]:
         return {key: (self._pids[key[0]], tid)
                 for key, tid in self._tids.items()}
+
+    def endpoints_by_pid(self) -> Dict[int, str]:
+        """Reverse of :meth:`pid_for` — how stream consumers (the monitor,
+        the exporter) map a track back to its endpoint name."""
+        return {pid: name for name, pid in self._pids.items()}

@@ -57,6 +57,13 @@ def _doc():
             {"family": "flash_crowd", "interactive_queue_wait_p95_s": 0.040,
              "observer_pure": True},
         ],
+        "monitor_grid": [
+            {"kind": "cell", "tactic": "failover_degrade",
+             "router": "least_loaded", "recall": 1.0, "precision": 1.0},
+            {"kind": "cell", "tactic": "healthy", "router": "least_loaded",
+             "false_pages": 0},
+            {"kind": "headline", "acceptance": True},
+        ],
     }
 
 
@@ -291,6 +298,48 @@ def test_fresh_lost_telemetry_grid_only_warns(tmp_path, capsys):
     --only runs legitimately skip the telemetry bench."""
     doc = _doc()
     del doc["telemetry_grid"]
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "::warning" in out and "::error" not in out
+
+
+def test_monitor_recall_drop_warns_but_never_fails(tmp_path, capsys):
+    """Monitor incident recall: more than one point below baseline
+    annotates the PR (title=monitor recall regression) but must never
+    gate the job."""
+    doc = _doc()
+    doc["monitor_grid"][0]["recall"] = 0.8
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "monitor recall regression" in out and "::error" not in out
+
+
+def test_monitor_recall_within_one_point_is_ok(tmp_path, capsys):
+    doc = _doc()
+    doc["monitor_grid"][0]["recall"] = 0.995
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", doc)
+    assert _run(base, fresh) == 0
+    assert "monitor recall regression" not in capsys.readouterr().out
+
+
+def test_monitor_recall_ignores_healthy_and_headline_rows(tmp_path, capsys):
+    """Healthy cells (no recall) and headline rows never contribute."""
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", _doc())
+    assert _run(base, fresh) == 0
+    assert "baseline=1.0000 fresh=1.0000" in capsys.readouterr().out
+
+
+def test_fresh_lost_monitor_grid_only_warns(tmp_path, capsys):
+    """Like the other observability grids, losing monitor_grid is
+    warn-only: quick --only runs legitimately skip the monitor bench."""
+    doc = _doc()
+    del doc["monitor_grid"]
     base = _write(tmp_path, "base.json", _doc())
     fresh = _write(tmp_path, "fresh.json", doc)
     assert _run(base, fresh) == 0

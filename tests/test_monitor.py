@@ -1,0 +1,394 @@
+"""Green-SRE monitor contract tests (PR 10).
+
+Pins the contracts the monitoring layer is built on:
+
+  * **spec hygiene** — BudgetSpec/MonitorSpec validation with field paths,
+    and the ServingSpec cross-checks (monitor needs telemetry; budget
+    endpoint scopes must exist);
+  * **burn-rate arithmetic** — each budget kind's burn on synthetic
+    windows (slo ratio, energy rates, crash allowance, rated-power
+    compliance), the fast+slow multi-window gate, and budget remaining;
+  * **incident mechanics** — episode merging across quiet gaps, severity
+    escalation, energy attribution;
+  * **observer purity (R6)** — a monitored run is bit-identical in
+    joules, grams and latencies to an unmonitored one, including under a
+    chaos script, and the ``observation_guard`` raises if the stream is
+    written mid-observation;
+  * **alert determinism (R6)** — finalize's batch replay reproduces the
+    incremental alert stream exactly, and fails loudly when tampered;
+  * **detection** — a scripted crash pages the crashes budget while the
+    identical healthy fleet stays silent;
+  * **scoring + dashboard** — ``bench_monitor.score_detections`` units
+    and a render smoke test of the stdlib HTML dashboard.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engines import GenerationResult
+from repro.energy.sanitize import ConservationError, observation_guard
+from repro.serving.chaos import (ChaosEvent, ChaosRuntime, ChaosSpec,
+                                 RetryRuntime, RetrySpec)
+from repro.serving.fleet import Autoscaler, EndpointSpec, ReplicaFleet
+from repro.serving.monitor import (BudgetSpec, BurnEngine, IncidentDetector,
+                                   MonitorRuntime, MonitorSpec,
+                                   render_dashboard, write_dashboard)
+from repro.serving.scheduler import make_policy
+from repro.serving.telemetry import TraceRecorder
+from repro.workload.generators import bursty, poisson
+
+
+class FakeEngine:
+    """Deterministic timings, no model — monitor mechanics only."""
+
+    def __init__(self, prefill_s=0.01, step_s=0.005):
+        self.prefill_s = prefill_s
+        self.step_s = step_s
+        self.cfg = type("Cfg", (), {"vocab_size": 1000})()
+
+    def generate(self, tokens, max_new):
+        B = tokens.shape[0]
+        return GenerationResult(
+            tokens=np.ones((B, max_new), np.int32),
+            prefill_s=self.prefill_s,
+            decode_s=self.step_s * (max_new - 1),
+            n_steps=max_new,
+        )
+
+
+def _mixed_crowd(n=120):
+    chat = poisson(n // 2, 8, 4, 1000, rate_per_s=300.0, seed=7,
+                   priority="interactive", slo_ms=100.0)
+    bulk = bursty(n // 2, 8, 6, 1000, rate_per_s=60.0, burst_n=20,
+                  burst_every_s=0.5, burst_rate_per_s=800.0, seed=8,
+                  rid0=10_000, priority="batch")
+    return {"chat": chat, "bulk": bulk}
+
+
+SLO_TARGETS = {("chat", "interactive"): (100.0, 0.0),
+               ("bulk", "batch"): (0.0, 5.0)}
+
+BUDGETS = (
+    BudgetSpec(name="crashes", kind="crashes", budget=1.0, horizon_s=60.0,
+               fast_window_s=0.5, slow_window_s=1.0,
+               page_burn=50.0, warn_burn=10.0),
+    BudgetSpec(name="loss", kind="loss", budget=0.5, horizon_s=10.0,
+               fast_window_s=0.5, slow_window_s=1.0,
+               page_burn=5.0, warn_burn=1.0),
+    BudgetSpec(name="slo-int", kind="slo", slo_class="interactive",
+               objective=0.9, fast_window_s=0.5, slow_window_s=1.0,
+               page_burn=8.0, warn_burn=2.0),
+)
+
+
+def _fleet(telemetry=None, monitor=None, chaos=False):
+    kwargs = {}
+    if chaos:
+        kwargs["chaos"] = ChaosRuntime.from_spec(ChaosSpec(
+            events=(ChaosEvent(kind="crash", t_s=0.15),
+                    ChaosEvent(kind="crash", t_s=0.5)), seed=11))
+        kwargs["retry"] = RetryRuntime.from_spec(
+            RetrySpec(max_retries=3, backoff_s=0.02))
+    fleet = ReplicaFleet(router="least_loaded",
+                         autoscaler=Autoscaler(window_s=0.25,
+                                               cold_start_s=0.05),
+                         telemetry=telemetry, monitor=monitor, **kwargs)
+    for name in ("chat", "bulk"):
+        fleet.add_endpoint(EndpointSpec(
+            name=name, engine=FakeEngine(),
+            policy_factory=lambda: make_policy("dynamic_batch", max_batch=8,
+                                               timeout_ms=10.0),
+            min_replicas=2, max_replicas=3, initial_replicas=2,
+        ))
+    return fleet
+
+
+def _monitored_run(chaos=False, budgets=BUDGETS, window_s=0.1):
+    rec = TraceRecorder()
+    mon = MonitorRuntime(MonitorSpec(enabled=True, window_s=window_s,
+                                     budgets=budgets,
+                                     incident_gap_s=0.3),
+                         rec, SLO_TARGETS)
+    res = _fleet(telemetry=rec, monitor=mon, chaos=chaos).run(_mixed_crowd())
+    mon.finalize()
+    return res, mon
+
+
+# -- spec hygiene -------------------------------------------------------------
+
+def test_budget_spec_problems():
+    fields = lambda b: {f for f, _ in b.problems()}  # noqa: E731
+    assert "name" in fields(BudgetSpec(name=""))
+    assert "kind" in fields(BudgetSpec(name="x", kind="vibes"))
+    # ratio kinds demand a real objective; energy kinds ignore it
+    assert "objective" in fields(BudgetSpec(name="x", kind="power",
+                                            budget=65.0, objective=1.0))
+    assert "objective" not in fields(BudgetSpec(name="x", kind="joules",
+                                                budget=1.0, objective=1.0))
+    # every non-slo kind needs a positive budget (power: rated watts)
+    for kind in ("joules", "grams", "loss", "crashes", "power"):
+        b = BudgetSpec(name="x", kind=kind, budget=0.0, objective=0.5)
+        assert "budget" in fields(b), kind
+    assert "slow_window_s" in fields(BudgetSpec(
+        name="x", fast_window_s=2.0, slow_window_s=1.0))
+    assert "slow_window_s" in fields(BudgetSpec(
+        name="x", slow_window_s=90.0, horizon_s=60.0))
+    assert "page_burn" in fields(BudgetSpec(name="x", page_burn=1.0,
+                                            warn_burn=2.0))
+    assert not BudgetSpec(name="ok", kind="power", budget=65.0,
+                          objective=0.95).problems()
+
+
+def test_monitor_spec_problems():
+    dup = MonitorSpec(budgets=(BudgetSpec(name="a"), BudgetSpec(name="a")))
+    assert any("duplicate" in msg for _, msg in dup.problems())
+    fine_grained = MonitorSpec(window_s=0.5, budgets=(
+        BudgetSpec(name="a", fast_window_s=0.25),))
+    assert any("finer" in msg for _, msg in fine_grained.problems())
+    assert MonitorSpec(window_s=0.0).problems()
+    assert not MonitorSpec(budgets=BUDGETS).problems()
+
+
+def test_serving_spec_cross_checks():
+    from repro.serving.api import ServingSpec, SpecError
+    from repro.serving.api import EndpointSpec as ApiEndpointSpec
+    ep = ApiEndpointSpec(name="llm", arch="minitron-4b-smoke", model="m")
+    base = ServingSpec(endpoints=(ep,))
+    # monitor consumes the telemetry stream
+    with pytest.raises(SpecError, match="telemetry"):
+        from repro.serving.api import with_override
+        with_override(base, "monitor",
+                      MonitorSpec(enabled=True)).validate()
+    # budget endpoint scopes must name a declared endpoint
+    from repro.serving.api import with_override
+    spec = with_override(base, "telemetry.enabled", True)
+    bad = with_override(spec, "monitor", MonitorSpec(
+        enabled=True, budgets=(BudgetSpec(name="x", endpoint="ghost"),)))
+    with pytest.raises(SpecError, match="ghost"):
+        bad.validate()
+    # an slo_class the endpoints never declare is allowed (workload
+    # priorities are legitimate classes), so this validates cleanly
+    ok = with_override(spec, "monitor", MonitorSpec(
+        enabled=True, budgets=(BudgetSpec(name="x", kind="slo",
+                                          slo_class="interactive"),)))
+    ok.validate()
+
+
+# -- burn-rate arithmetic on synthetic windows --------------------------------
+
+def _win(idx, window_s=0.25, bad=0, served=0, crashes=0, lost_j=0.0,
+         j=0.0, power_hist=None, active_s=0.0):
+    t0 = idx * window_s
+    return {"t0": t0, "t1": t0 + window_s, "served": served,
+            "good": served - bad, "bad": bad, "classes": {}, "endpoints": {},
+            "j": j, "g": 0.0, "tokens": 0, "lost_j": lost_j, "lost_g": 0.0,
+            "buckets_j": {"active": j}, "active_s": active_s,
+            "power_w_hist": power_hist or {}, "crashes": crashes,
+            "drops": 0, "sheds": 0, "retries": 0, "gauges": {},
+            "late_events": 0}
+
+
+def test_crashes_kind_pages_on_one_crash():
+    spec = BudgetSpec(name="c", kind="crashes", budget=1.0, horizon_s=60.0,
+                      fast_window_s=0.5, slow_window_s=1.0,
+                      page_burn=50.0, warn_burn=10.0)
+    eng = BurnEngine([spec], 0.25)
+    for i in range(3):
+        assert eng.on_window(_win(i)) == []
+    alerts = eng.on_window(_win(3, crashes=1))
+    # fast: 1 crash / 0.5 s vs 1/60 sustainable = burn 120; slow: 1 / 1 s
+    assert alerts and alerts[0]["severity"] == "page"
+    assert alerts[0]["burn_fast"] == pytest.approx(120.0)
+    assert alerts[0]["burn_slow"] == pytest.approx(60.0)
+
+
+def test_power_kind_reads_capped_seconds_exactly():
+    spec = BudgetSpec(name="p", kind="power", budget=65.0, objective=0.95,
+                      fast_window_s=0.5, slow_window_s=0.5,
+                      page_burn=8.0, warn_burn=2.0)
+    eng = BurnEngine([spec], 0.25)
+    # healthy: every active second billed at the rated wattage -> burn 0
+    w = _win(0, power_hist={65.0: 0.4}, active_s=0.4)
+    assert eng.on_window(w) == []
+    assert w["burn"]["p"] == (0.0, 0.0)
+    # brownout: capped seconds enter the fast window (half capped ->
+    # ratio 0.5 -> burn 10), then saturate it (ratio 1.0 -> burn 20)
+    alerts = eng.on_window(_win(1, power_hist={39.0: 0.4}, active_s=0.4))
+    assert alerts and alerts[0]["severity"] == "page"
+    assert alerts[0]["burn_fast"] == pytest.approx(10.0)
+    alerts = eng.on_window(_win(2, power_hist={39.0: 0.4}, active_s=0.4))
+    assert alerts[0]["burn_fast"] == pytest.approx(20.0)
+
+
+def test_slo_kind_multi_window_gate_kills_flapping():
+    spec = BudgetSpec(name="s", kind="slo", objective=0.9,
+                      fast_window_s=0.25, slow_window_s=1.0,
+                      page_burn=5.0, warn_burn=5.0)
+    eng = BurnEngine([spec], 0.25)
+    # a single bad window spikes the fast burn to 10 but the slow burn
+    # (averaged over 4 windows of mostly-good traffic) stays below 5
+    for i in range(3):
+        assert eng.on_window(_win(i, served=30)) == []
+    w = _win(3, served=30, bad=30)
+    assert eng.on_window(w) == []
+    assert w["burn"]["s"][0] == pytest.approx(10.0)
+    assert w["burn"]["s"][1] < 5.0
+    # sustained errors clear both windows -> page
+    alerts = []
+    for i in range(4, 8):
+        alerts += eng.on_window(_win(i, served=30, bad=30))
+    assert alerts and alerts[-1]["severity"] == "page"
+
+
+def test_loss_kind_and_budget_remaining():
+    spec = BudgetSpec(name="l", kind="loss", budget=1.0, horizon_s=10.0,
+                      fast_window_s=0.5, slow_window_s=0.5,
+                      page_burn=5.0, warn_burn=1.0)
+    eng = BurnEngine([spec], 0.25)
+    eng.on_window(_win(0, lost_j=0.3))
+    eng.on_window(_win(1, lost_j=0.3))
+    rem = eng.budget_remaining()["l"]
+    assert rem["spent"] == pytest.approx(0.6)
+    assert rem["remaining"] == pytest.approx(0.4)
+    assert rem["remaining_frac"] == pytest.approx(0.4)
+    # ratio kinds earn allowance with traffic served
+    s = BudgetSpec(name="s", kind="slo", objective=0.9,
+                   fast_window_s=0.25, slow_window_s=0.25)
+    e2 = BurnEngine([s], 0.25)
+    e2.on_window(_win(0, served=100, bad=5))
+    rem = e2.budget_remaining()["s"]
+    assert rem["budget"] == pytest.approx(10.0)   # (1-0.9) * 100
+    assert rem["remaining"] == pytest.approx(5.0)
+
+
+# -- incident mechanics -------------------------------------------------------
+
+def _alert(t, budget="b", severity="warn", endpoint=""):
+    return {"t": t, "budget": budget, "kind": "slo", "severity": severity,
+            "endpoint": endpoint, "burn_fast": 9.9, "burn_slow": 9.9}
+
+
+def test_incident_merge_gap_and_escalation():
+    det = IncidentDetector(gap_s=0.5)
+    det.on_window(_win(0), [_alert(0.25, severity="warn")])
+    det.on_window(_win(1), [])                    # 0.25 s quiet < gap
+    det.on_window(_win(2), [_alert(0.75, budget="c", severity="page")])
+    for i in range(3, 7):
+        det.on_window(_win(i), [])                # > gap: episode closes
+    det.on_window(_win(7, lost_j=0.2), [_alert(2.0)])
+    incidents = det.finalize()
+    assert len(incidents) == 2
+    first, second = incidents
+    assert first["severity"] == "page"            # escalated warn -> page
+    assert first["budgets"] == ["b", "c"]
+    assert first["start"] == pytest.approx(0.0)
+    assert first["end"] == pytest.approx(0.75)
+    assert second["lost_j"] == pytest.approx(0.2)
+    assert second["duration_s"] == pytest.approx(0.25)
+
+
+# -- observer purity + determinism (R6) ---------------------------------------
+
+def _fingerprint(res):
+    m = res.fleet.meter
+    lat = tuple((r.rid, r.done_s, r.first_token_s)
+                for ep in res.endpoints.values() for r in ep.responses)
+    return (m.total_j, m.total_g, m.active_j, m.lost_j, sorted(lat))
+
+
+@pytest.mark.parametrize("chaos", [False, True])
+def test_monitored_run_is_bit_identical(chaos):
+    bare = _fleet(chaos=chaos).run(_mixed_crowd())
+    res, mon = _monitored_run(chaos=chaos)
+    assert _fingerprint(res) == _fingerprint(bare)
+    assert mon.windows, "monitor sealed no windows"
+    # window totals reconcile with the meter (same stream, same joules)
+    total_j = sum(w["j"] for w in mon.windows)
+    assert total_j == pytest.approx(res.fleet.meter.total_j
+                                    - res.fleet.meter.lost_j)
+
+
+def test_observation_guard_raises_on_stream_write():
+    rec = TraceRecorder()
+    rec.instant("drop", 0.0)
+    with observation_guard(rec, "test tick"):
+        pass                                      # clean read: no raise
+    with pytest.raises(ConservationError, match="R6"):
+        with observation_guard(rec, "test tick"):
+            rec.instant("drop", 1.0)
+
+
+def test_finalize_replays_alert_stream(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    res, mon = _monitored_run(chaos=True)
+    assert mon.alerts, "chaos run should alert"
+    # the finalize that ran inside _monitored_run already re-proved the
+    # stream; tamper with history and the replay must fail loudly
+    mon._finalized = False
+    mon.alerts.append(_alert(99.0))
+    with pytest.raises(ConservationError, match="determinism"):
+        mon.finalize()
+
+
+# -- detection ----------------------------------------------------------------
+
+def test_chaos_pages_healthy_stays_quiet():
+    res, mon = _monitored_run(chaos=True)
+    pages = [a for a in mon.alerts if a["severity"] == "page"]
+    assert pages, "scripted crashes must page"
+    assert any(a["budget"] == "crashes" for a in pages)
+    assert mon.incidents and mon.incidents[0]["severity"] == "page"
+    crash_t = 0.15
+    first_page = min(a["t"] for a in pages)
+    assert first_page >= crash_t
+    assert first_page - crash_t <= 1.0, "detection took too long"
+
+    _, quiet = _monitored_run(chaos=False)
+    assert quiet.alerts == []
+    assert quiet.incidents == []
+    remaining = quiet.budget_remaining()
+    assert remaining["crashes"]["spent"] == 0
+    assert remaining["loss"]["spent"] == 0
+
+
+# -- bench scoring units ------------------------------------------------------
+
+def test_score_detections_units():
+    from benchmarks.bench_monitor import EVENTS, GRACE_S, score_detections
+    alerts = [{"t": ev.t_s + 0.25, "severity": "page"} for ev in EVENTS]
+    incidents = [{"start": ev.t_s, "end": ev.t_s + 0.5, "severity": "page"}
+                 for ev in EVENTS]
+    rows, precision = score_detections(alerts, incidents)
+    assert all(r["detected"] for r in rows)
+    assert all(r["ttd_s"] == pytest.approx(0.25) for r in rows)
+    assert precision == 1.0
+    assert {r["class"] for r in rows} == {"crash", "outage", "brownout"}
+    # a page far outside every event window costs precision
+    spurious = incidents + [{"start": 99.0, "end": 99.5, "severity": "page"}]
+    _, precision = score_detections(alerts, spurious)
+    assert precision == pytest.approx(len(incidents)
+                                      / (len(incidents) + 1))
+    # an undetected event is a recall miss, not an error
+    rows, _ = score_detections([], [])
+    assert not any(r["detected"] for r in rows)
+    assert all(r["ttd_s"] is None for r in rows)
+    last = max(ev.t_s + (ev.duration_s or 0.0) for ev in EVENTS)
+    assert GRACE_S > 0 and last > 0
+
+
+# -- dashboard ----------------------------------------------------------------
+
+def test_dashboard_render_smoke(tmp_path):
+    res, mon = _monitored_run(chaos=True)
+    html_text = render_dashboard(mon, title="test ops",
+                                 meta={"cell": "unit"})
+    assert "<svg" in html_text
+    assert "test ops" in html_text
+    assert "crashes" in html_text            # budget table row
+    assert "incident" in html_text.lower()
+    out = tmp_path / "dash.html"
+    write_dashboard(str(out), mon, title="file smoke")
+    assert out.read_text().startswith("<!DOCTYPE html>")
+    # an unmonitored-quiet dashboard renders too (no incidents banner)
+    _, quiet = _monitored_run(chaos=False)
+    assert "no incidents detected" in render_dashboard(quiet)

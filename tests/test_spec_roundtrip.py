@@ -24,6 +24,7 @@ from repro.serving.admission.priority import PrioritySpec
 from repro.serving.api import (AutoscaleSpec, EndpointSpec, ServingSpec,
                                SLOClass, SpecError, sweep, with_override)
 from repro.serving.chaos import ChaosEvent, ChaosSpec, RetrySpec
+from repro.serving.monitor import BudgetSpec, MonitorSpec
 from repro.serving.regions import RegionSpec
 from repro.serving.telemetry import TelemetrySpec
 from repro.workload.generators import WorkloadSpec
@@ -73,6 +74,15 @@ def baseline_spec() -> ServingSpec:
                        duration_s=1.0)), seed=5),
         retry=RetrySpec(max_retries=1, backoff_s=0.02),
         telemetry=TelemetrySpec(enabled=True, max_events=100_000),
+        # enabled stays False in the baseline so the telemetry alternates
+        # (which switch telemetry off) keep validating: monitor.enabled
+        # requires telemetry.enabled
+        monitor=MonitorSpec(enabled=False, window_s=0.2, budgets=(
+            BudgetSpec(name="slo-int", kind="slo", slo_class="interactive",
+                       objective=0.95, budget=5.0, horizon_s=60.0,
+                       fast_window_s=0.5, slow_window_s=2.0,
+                       page_burn=10.0, warn_burn=2.0),),
+            incident_gap_s=0.75),
     ).validate()
 
 
@@ -105,6 +115,10 @@ ALTERNATES = {
         "retry": ("retry", RetrySpec(max_retries=5, failover=False)),
         "telemetry": ("telemetry", TelemetrySpec(enabled=False,
                                                  max_events=500)),
+        "monitor": ("monitor",
+                    MonitorSpec(enabled=True, window_s=0.4, budgets=(
+                        BudgetSpec(name="joules", kind="joules",
+                                   budget=100.0),))),
     },
     EndpointSpec: {
         "name": ("endpoints.chat.name", "chat2"),
@@ -242,6 +256,28 @@ ALTERNATES = {
         "metrics": ("telemetry.metrics", False),
         "max_events": ("telemetry.max_events", 1_000),
     },
+    MonitorSpec: {
+        "enabled": ("monitor.enabled", True),
+        "window_s": ("monitor.window_s", 0.5),
+        "budgets": ("monitor.budgets",
+                    (BudgetSpec(name="grams", kind="grams", budget=2.0),)),
+        "incident_gap_s": ("monitor.incident_gap_s", 3.0),
+    },
+    # BudgetSpec lives inside the monitor.budgets tuple, so its fields
+    # sweep as whole-tuple replacements (see the special-case test below)
+    BudgetSpec: {
+        "name": (None, "alt"),
+        "kind": (None, "joules"),
+        "endpoint": (None, "chat"),
+        "slo_class": (None, "batch"),
+        "objective": (None, 0.9),
+        "budget": (None, 7.5),
+        "horizon_s": (None, 120.0),
+        "fast_window_s": (None, 1.0),
+        "slow_window_s": (None, 4.0),
+        "page_burn": (None, 14.0),
+        "warn_burn": (None, 3.0),
+    },
 }
 
 # where each spec class lives inside the roundtripped ServingSpec
@@ -260,6 +296,8 @@ _GETTERS = {
     ChaosEvent: lambda s: s.chaos.events[0],
     RetrySpec: lambda s: s.retry,
     TelemetrySpec: lambda s: s.telemetry,
+    MonitorSpec: lambda s: s.monitor,
+    BudgetSpec: lambda s: s.monitor.budgets[0],
 }
 
 _PATH_CASES = [(cls, field) for cls, table in ALTERNATES.items()
@@ -338,6 +376,24 @@ def test_chaos_event_fields_roundtrip_through_tuple(field):
     overridden = with_override(spec, "chaos.events", (event,)).validate()
     back = ServingSpec.from_json(overridden.to_json())
     assert getattr(back.chaos.events[0], field) == alt
+    assert back == overridden
+    assert back.to_json() == overridden.to_json()
+
+
+@pytest.mark.parametrize("field", sorted(ALTERNATES[BudgetSpec]))
+def test_budget_fields_roundtrip_through_tuple(field):
+    """Budgets live in a tuple, so they sweep as whole tuples.  The base
+    budget is an slo budget with a positive energy allowance, so every
+    single-field alternate below keeps it a valid budget."""
+    spec = baseline_spec()
+    _, alt = ALTERNATES[BudgetSpec][field]
+    base = spec.monitor.budgets[0]
+    assert getattr(base, field) != alt
+    budget = dataclasses.replace(base, **{field: alt})
+    overridden = with_override(spec, "monitor.budgets",
+                               (budget,)).validate()
+    back = ServingSpec.from_json(overridden.to_json())
+    assert getattr(back.monitor.budgets[0], field) == alt
     assert back == overridden
     assert back.to_json() == overridden.to_json()
 

@@ -259,6 +259,60 @@ def test_perfetto_export_is_schema_valid():
     assert ts == sorted(ts) and all(isinstance(t, int) for t in ts)
 
 
+def test_perfetto_sort_indices_pin_track_layout():
+    """Every named track carries a deterministic sort index: the fleet
+    process is 0, endpoints rank alphabetically, replicas rank
+    alphabetically within their endpoint."""
+    rec, _ = _traced_chaos_recorder()
+    meta = [e for e in to_perfetto(rec)["traceEvents"] if e.get("ph") == "M"]
+    pnames = {e["pid"]: e["args"]["name"] for e in meta
+              if e["name"] == "process_name"}
+    psort = {e["pid"]: e["args"]["sort_index"] for e in meta
+             if e["name"] == "process_sort_index"}
+    assert set(psort) == set(pnames)
+    assert psort[0] == 0                      # the fleet pins the top
+    ranked = sorted((i for p, i in psort.items() if p != 0))
+    by_rank = [pnames[p] for p, i in sorted(psort.items(),
+                                            key=lambda kv: kv[1]) if p != 0]
+    assert ranked == list(range(1, len(ranked) + 1))
+    assert by_rank == sorted(by_rank)         # endpoints alphabetical
+    tnames = {(e["pid"], e["tid"]): e["args"]["name"] for e in meta
+              if e["name"] == "thread_name"}
+    tsort = {(e["pid"], e["tid"]): e["args"]["sort_index"] for e in meta
+             if e["name"] == "thread_sort_index"}
+    assert set(tsort) == set(tnames)
+    by_pid = {}
+    for (pid, tid), idx in tsort.items():
+        by_pid.setdefault(pid, []).append((idx, tnames[(pid, tid)]))
+    for pid, rows in by_pid.items():
+        rows.sort()
+        idxs = [i for i, _ in rows]
+        assert len(set(idxs)) == len(idxs)    # unique within the process
+        if pid != 0:
+            assert [n for _, n in rows] == sorted(n for _, n in rows)
+
+
+def test_validate_trace_demands_sort_indices():
+    rec, _ = _traced_chaos_recorder()
+    doc = to_perfetto(rec)
+    doc["traceEvents"] = [e for e in doc["traceEvents"]
+                          if not (e.get("ph") == "M"
+                                  and e.get("name") == "thread_sort_index")]
+    assert any("thread_sort_index" in p for p in validate_trace(doc))
+    doc = to_perfetto(rec)
+    doc["traceEvents"] = [e for e in doc["traceEvents"]
+                          if not (e.get("ph") == "M"
+                                  and e.get("name") == "process_sort_index")]
+    assert any("process_sort_index" in p for p in validate_trace(doc))
+    doc = to_perfetto(rec)
+    for e in doc["traceEvents"]:              # collide two thread ranks
+        if e.get("ph") == "M" and e.get("name") == "thread_sort_index" \
+                and e["pid"] != 0:
+            e["args"]["sort_index"] = 7
+    assert any("duplicate thread_sort_index" in p
+               for p in validate_trace(doc))
+
+
 def test_validate_trace_catches_breakage():
     rec, _ = _traced_chaos_recorder()
     doc = to_perfetto(rec)
@@ -309,3 +363,33 @@ def test_phase_breakdown_decomposes_latency():
         mean_lat = sum(r.done_s - r.arrival_s for r in rs) / len(rs)
         mean_sum = sum(p["mean_s"] for p in phases.values())
         assert mean_sum == pytest.approx(mean_lat, rel=1e-9)
+
+
+# -- pooled sweeps -------------------------------------------------------------
+
+
+def _traced_cell(n):
+    """Pool worker: one traced cell -> (phase table, capped-drop count).
+
+    Module-level so the forkserver pool can pickle it by reference; the
+    tight ``max_events`` cap forces drops so the drop accounting itself is
+    part of the serial-vs-pooled equality.
+    """
+    rec = TraceRecorder(max_events=40)
+    res = _grid_fleet("least_loaded", "dynamic_batch",
+                      telemetry=rec).run(_mixed_crowd(n))
+    pb = phase_breakdown(res.fleet.responses, rec.preempt_by_rid, {})
+    return pb, rec.dropped
+
+
+def test_pooled_traced_cells_match_serial():
+    """Traced cells through ``benchmarks.pool.run_cells --jobs 2`` report
+    bit-identical phase-breakdown tables and capped-drop counts to the
+    serial (``jobs=1``) path, in the same cell order."""
+    from benchmarks.pool import run_cells
+    cells = [60, 80]
+    serial = run_cells(_traced_cell, cells, jobs=1)
+    pooled = run_cells(_traced_cell, cells, jobs=2)
+    assert pooled == serial
+    assert all(dropped > 0 for _, dropped in serial)
+    assert [set(pb) for pb, _ in serial] == [{"interactive", "batch"}] * 2
